@@ -1,0 +1,25 @@
+"""Benchmark harness: one function per paper table/figure + kernel
+microbench.  Prints ``name,value,note`` CSV (tee'd to bench_output.txt)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks.microbench import kernel_microbench
+    from benchmarks.paper_figs import ALL_FIGS
+
+    t0 = time.time()
+    rows = []
+    for fig in ALL_FIGS:
+        rows.extend(fig())
+    rows.extend(kernel_microbench())
+    print("name,value,note")
+    for name, value, note in rows:
+        print(f"{name},{value},{note}")
+    print(f"# {len(rows)} rows in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Reproduce the paper's evaluation (Figs 2/9/11/12/13/14, Table IV) with
+the calibrated simulator and print the headline comparison.
+
+    PYTHONPATH=src python examples/paper_figures.py
+"""
+from repro.sim.simulator import harmonic_mean, speedup_table
+from repro.sim.topology import ALL_SYSTEMS
+from repro.sim.workloads import WORKLOADS
+
+
+def main():
+    dags = {k: f() for k, f in WORKLOADS.items()}
+    hm = {}
+    for mode in ("dp", "mp"):
+        tab = speedup_table(dags, ALL_SYSTEMS, mode)
+        print(f"\n=== {mode} speedups over DC-DLA ===")
+        names = [s.name for s in ALL_SYSTEMS]
+        print(f"{'workload':12s} " + " ".join(f"{n:>10s}" for n in names))
+        for w in dags:
+            print(f"{w:12s} " + " ".join(f"{tab[w][n]:10.2f}"
+                                         for n in names))
+        for n in names:
+            hm[(mode, n)] = harmonic_mean([tab[w][n] for w in dags])
+        print("hmean        " + " ".join(f"{hm[(mode, n)]:10.2f}"
+                                         for n in names))
+    overall = harmonic_mean([hm[("dp", "MC-DLA(B)")],
+                             hm[("mp", "MC-DLA(B)")]])
+    print(f"\nMC-DLA(B) overall speedup: {overall:.2f}x   "
+          f"(paper: 2.8x; dp {hm[('dp', 'MC-DLA(B)')]:.2f} vs paper 3.5, "
+          f"mp {hm[('mp', 'MC-DLA(B)')]:.2f} vs paper 2.1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving over pooled KV caches (deliverable b, serving scenario).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+from repro.launch import serve as launch_serve
+
+
+def main():
+    sys.argv = ["serve", "--arch", "h2o-danube-1.8b", "--smoke",
+                "--batch", "4", "--requests", "8", "--new-tokens", "12",
+                "--max-len", "96"]
+    launch_serve.main()
+
+
+if __name__ == "__main__":
+    main()

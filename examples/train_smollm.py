@@ -1,0 +1,28 @@
+"""End-to-end driver (deliverable b): train the FULL smollm-135m (135M
+params) for a few hundred steps on synthetic data.
+
+    PYTHONPATH=src python examples/train_smollm.py --steps 300
+
+This is the same launcher production uses (launch/train.py); on a TPU pod
+drop --cpu-batch to run the assigned train_4k shape against the 16x16 mesh.
+"""
+import argparse
+
+from repro.launch import train as launch_train
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+    sys.argv = ["train", "--arch", "smollm-135m", "--steps", str(args.steps),
+                "--batch", str(args.batch), "--seq", str(args.seq),
+                "--lr", "3e-3", "--policy", "mcdla"]
+    launch_train.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    MemoryPlan,
+    MeshPlan,
+    ModelConfig,
+    MULTI_POD,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    SINGLE_POD,
+    TrainConfig,
+)
+from repro.configs.registry import ARCHS, get_arch, list_archs, cells_for
+
+__all__ = [
+    "MemoryPlan", "MeshPlan", "ModelConfig", "MULTI_POD", "RunConfig",
+    "ShapeConfig", "SHAPES", "SHAPES_BY_NAME", "SINGLE_POD", "TrainConfig",
+    "ARCHS", "get_arch", "list_archs", "cells_for",
+]

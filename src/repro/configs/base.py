@@ -1,0 +1,306 @@
+"""Configuration dataclasses for the repro framework.
+
+Every architecture in ``repro.configs`` is described by a ``ModelConfig``;
+runtime behaviour (parallelism, the paper's memory technique, training and
+serving) is described by the companion dataclasses below.  Configs are plain
+frozen dataclasses so they can be hashed, printed, and diffed in logs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPlan:
+    """First-class configuration of the paper's technique (MC-DLA).
+
+    policy:
+      - "none":   oracle DC-DLA(O) — keep everything resident (infinite-memory
+                  baseline of the paper, only valid for small models).
+      - "host":   DC-DLA — virtualize against host memory (PCIe path).  Uses
+                  ``memory_kind='pinned_host'`` when the backend supports it.
+      - "mcdla":  paper-faithful MC-DLA — stash every layer's input feature map
+                  (the residual stream) to the pooled memory tier after its
+                  last forward use; recompute cheap intermediates (footnote 4).
+      - "auto":   beyond-paper — cost-model driven: stash only what is needed
+                  to fit the per-device HBM budget, prefer recompute when the
+                  recompute time is below the fetch time.
+    placement: "bw_aware" stripes a stash across *both* mesh axes (paper
+      Fig. 10 BW_AWARE, maximum link utilization); "local" stripes across the
+      model axis only (LOCAL: one neighbour, half the links).
+    compress: optional stash compression — the memory-node's "optional
+      encryption/compression ASIC" of §III-A ("fp8" halves stash bytes).
+    """
+
+    policy: str = "mcdla"            # none | host | mcdla | auto
+    placement: str = "bw_aware"      # bw_aware | local
+    compress: str = "none"           # none | fp8
+    recompute_cheap: bool = True     # paper footnote 4
+    seq_parallel: bool = True        # sequence-parallel residual stream
+    stash_aux: bool = True           # pool big float aux (enc states) too
+    hbm_budget_gb: float = 16.0      # TPU v5e HBM per chip
+    pool_params: bool = True         # FSDP-style weight pooling (ZeRO-3)
+    opt_state_bits: int = 32         # 32 | 8  (8-bit Adam moments, beyond-paper)
+
+    def validate(self) -> None:
+        assert self.policy in ("none", "host", "mcdla", "auto"), self.policy
+        assert self.placement in ("bw_aware", "local"), self.placement
+        assert self.compress in ("none", "fp8"), self.compress
+        assert self.opt_state_bits in (32, 8), self.opt_state_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.  Dims are the *full* published config; use
+    ``reduced()`` for CPU smoke twins."""
+
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 → d_model // num_heads
+
+    # --- attention ---
+    attention: str = "full"          # full | swa | none
+    window: int = 4096               # sliding-window size when attention == "swa"
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE half-dim sections
+    use_qkv_bias: bool = False
+    logit_softcap: float = 0.0
+    parallel_block: bool = False     # cohere-style parallel attn+FFN
+
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1               # every k-th layer is MoE (1 → all layers)
+    shared_experts: int = 0
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    ssm_conv_width: int = 4
+    ssm_groups: int = 1
+
+    # --- hybrid (zamba2): one *shared* attention block every k SSM blocks ---
+    hybrid_attn_every: int = 0
+
+    # --- encoder/decoder (whisper) ---
+    encoder_layers: int = 0
+    is_encoder_decoder: bool = False
+    max_target_positions: int = 448
+
+    # --- frontends (stubs per assignment: precomputed embeddings) ---
+    frontend: str = "none"           # none | audio_stub | vision_stub
+    frontend_tokens: int = 256       # patches / frames provided by the stub
+
+    # --- misc ---
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu"                # silu | gelu
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    vocab_pad_to: int = 256
+    sub_quadratic: bool = False      # eligible for long_500k decode
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, self.vocab_pad_to)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.attention == "none" and self.ssm_state > 0
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.hybrid_attn_every > 0
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Total parameters (analytic), used for 6·N·D roofline terms."""
+        V, D, F, L = self.padded_vocab, self.d_model, self.d_ff, self.num_layers
+        H, KV, hd = self.num_heads, self.num_kv_heads, self.resolved_head_dim
+        n = V * D                                   # embedding
+        if not self.tie_embeddings:
+            n += V * D
+        attn = D * H * hd + 2 * D * KV * hd + H * hd * D
+        ffn_dense = 3 * D * F if self.act in ("silu",) else 2 * D * F
+        if self.is_ssm or self.is_hybrid:
+            di, N = self.d_inner, self.ssm_state
+            G = self.ssm_groups
+            ssm = (D * (2 * di + 2 * G * N + self.ssm_heads)   # in_proj
+                   + self.ssm_conv_width * (di + 2 * G * N)    # conv
+                   + di * D + di                               # out_proj + norm
+                   + 2 * self.ssm_heads)                       # A, D
+            if self.is_hybrid:
+                shared = attn + ffn_dense + 2 * D
+                n += L * ssm + shared
+            else:
+                n += L * ssm
+            return n
+        per_layer = attn + 2 * D
+        if self.is_moe:
+            n_moe = L // self.moe_every
+            n_dense = L - n_moe
+            moe_ffn = self.num_experts * 3 * D * F + D * self.num_experts
+            moe_ffn += self.shared_experts * 3 * D * F
+            n += n_moe * (per_layer + moe_ffn) + n_dense * (per_layer + ffn_dense)
+        else:
+            total_layers = L + self.encoder_layers
+            n += total_layers * (per_layer + ffn_dense)
+            if self.is_encoder_decoder:   # cross-attention in decoder layers
+                n += L * attn
+        return n
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE uses top_k of num_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        V, D, F, L = self.padded_vocab, self.d_model, self.d_ff, self.num_layers
+        H, KV, hd = self.num_heads, self.num_kv_heads, self.resolved_head_dim
+        n = V * D * (1 if self.tie_embeddings else 2)
+        attn = D * H * hd + 2 * D * KV * hd + H * hd * D
+        ffn_dense = 3 * D * F
+        n_moe = L // self.moe_every
+        n_dense = L - n_moe
+        active_ffn = (self.top_k + self.shared_experts) * 3 * D * F
+        n += n_moe * (attn + 2 * D + active_ffn) + n_dense * (attn + 2 * D + ffn_dense)
+        return n
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family twin for CPU smoke tests."""
+        small = dict(
+            num_layers=min(self.num_layers, 2),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            head_dim=32,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=512,
+            vocab_pad_to=64,
+            num_experts=min(self.num_experts, 4),
+            top_k=min(self.top_k, 2),
+            shared_experts=min(self.shared_experts, 1),
+            encoder_layers=min(self.encoder_layers, 2),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=32 if self.ssm_state else 64,
+            ssm_chunk=16,
+            hybrid_attn_every=2 if self.hybrid_attn_every else 0,
+            window=min(self.window, 64),
+            frontend_tokens=min(self.frontend_tokens, 8),
+            mrope_sections=(8, 4, 4) if self.mrope_sections else (),
+            name=self.name + "-smoke",
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (assignment: 4 per architecture)."""
+
+    name: str                        # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    mode: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.mode == "decode"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+    seed: int = 0
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    grad_compress: str = "none"      # none | int8  (error-feedback all-reduce)
+    remat: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Logical mesh description; physical mesh is built in launch/mesh.py."""
+
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axes
+
+    def axis_size(self, name: str) -> int:
+        if name not in self.axes:
+            return 1
+        return self.shape[self.axes.index(name)]
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.axes)
+
+
+SINGLE_POD = MeshPlan((16, 16), ("data", "model"))
+MULTI_POD = MeshPlan((2, 16, 16), ("pod", "data", "model"))
+HOST_TEST = MeshPlan((2, 2), ("data", "model"))     # for CPU multi-device tests
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshPlan = SINGLE_POD
+    memory: MemoryPlan = MemoryPlan()
+    train: TrainConfig = TrainConfig()

@@ -1,0 +1,26 @@
+"""The paper's primary contribution: transparent memory-capacity expansion
+over the device-side interconnect (MC-DLA), realised in JAX.
+
+* pool      — the pooled-HBM tier + BW_AWARE/LOCAL placement (Fig. 10)
+* offload   — stash/fetch memory-overlaying as custom_vjp autodiff surgery
+* dag       — layer DAG + reuse-distance schedule (§II-B)
+* policy    — KEEP/POOL/RECOMPUTE cost-model planner (footnote 4 + auto)
+* vdnn      — policy-driven layer wrapper used by all model code
+* compress  — fp8 stash / int8 error-feedback grads (the memory-node 'ASIC')
+"""
+from repro.core.compress import (fp8_compress, fp8_decompress,
+                                 int8_ef_quantize, int8_dequantize)
+from repro.core.dag import LayerDAG, LayerNode, build_dag, model_flops
+from repro.core.offload import maybe_offload, offload_layer, stash, fetch
+from repro.core.policy import plan_memory, fetch_bandwidth, summarize
+from repro.core.pool import PoolAxes, PoolAccountant, pool_spec, pool_report
+from repro.core.vdnn import VdnnContext, stash_fraction, split_layers
+
+__all__ = [
+    "fp8_compress", "fp8_decompress", "int8_ef_quantize", "int8_dequantize",
+    "LayerDAG", "LayerNode", "build_dag", "model_flops",
+    "maybe_offload", "offload_layer", "stash", "fetch",
+    "plan_memory", "fetch_bandwidth", "summarize",
+    "PoolAxes", "PoolAccountant", "pool_spec", "pool_report",
+    "VdnnContext", "stash_fraction", "split_layers",
+]

@@ -1,0 +1,63 @@
+"""Stash compression — the memory-node's "optional compression ASIC" (§III-A).
+
+The paper's memory-node architecture (Fig. 6) reserves a slot for an ASIC
+"that handles encryption or compression".  On TPU the analogue is a fused
+quantize-and-pack executed *before* the stash collective, halving (fp8) the
+bytes that cross the ICI and that occupy the pool.  The Pallas kernel twin
+lives in ``kernels/offload_pack.py``; this module is the pure-jnp
+implementation used as the default path and as the kernel oracle.
+
+Also provides int8 error-feedback quantization for compressed gradient
+all-reduce (beyond-paper distributed-optimization trick; cf. the paper's
+§V-B citation of the Compressing-DMA-Engine work [56] as a traffic
+reduction technique).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+FP8_MAX = 448.0                 # float8_e4m3fn dynamic range
+INT8_MAX = 127.0
+
+
+# ---------------------------------------------------------------------------
+# fp8 stash compression (per-tensor scale; kernels/offload_pack fuses this)
+def fp8_compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x -> (fp8 payload, fp32 scale).  Halves stash bytes vs bf16."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(absmax / FP8_MAX, 1e-12)
+    q = (x.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+    return q, scale
+
+
+def fp8_decompress(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression
+def int8_ef_quantize(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize gradient+carried error to int8 with a per-tensor scale.
+
+    Returns (int8 payload, scale, new_error).  The residual (quantization
+    error) is fed back into the next step — guarantees convergence of the
+    compressed all-reduce (error-feedback SGD).
+    """
+    corrected = g.astype(jnp.float32) + err
+    absmax = jnp.max(jnp.abs(corrected))
+    scale = jnp.maximum(absmax / INT8_MAX, 1e-30)
+    q = jnp.clip(jnp.round(corrected / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    new_err = corrected - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_ratio(kind: str) -> float:
+    """Bytes multiplier vs bf16 (used by the cost model and the simulator)."""
+    return {"none": 1.0, "fp8": 0.5, "int8": 0.5}[kind]

@@ -1,0 +1,131 @@
+"""KEEP / POOL / RECOMPUTE planner — the cost model behind `policy="auto"`.
+
+The paper stashes *every* layer's feature maps (to maximally stress the
+interconnect, §IV) and recomputes only cheap layers (footnote 4).  That is
+the faithful `policy="mcdla"` mode.  `policy="auto"` is the beyond-paper
+mode: a per-layer cost model decides, under the per-device HBM budget,
+
+  KEEP      — leave the saved tensor resident (zero traffic) while the
+              budget allows;
+  POOL      — stash to the pooled tier; predicted stall is
+              max(0, stash_time + fetch_time - overlap_window);
+  RECOMPUTE — if re-running the layer forward is cheaper than the fetch
+              (footnote 4 generalized by the cost model).
+
+Decisions are taken largest-reuse-distance-first: the tensor that stays idle
+longest is the best candidate to evict, and its transfer has the widest
+overlap window — the same intuition the paper's memory-overlaying scheduler
+uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro import hw
+from repro.configs.base import MemoryPlan, MeshPlan
+from repro.core.compress import compress_ratio
+from repro.core.dag import LayerDAG
+from repro.core.pool import PoolAxes
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    layer: int
+    action: str                  # keep | pool | recompute
+    saved_bytes: float           # global bytes affected
+    est_stall_s: float           # predicted unhidden transfer time
+
+
+@dataclasses.dataclass
+class MemoryPlanReport:
+    decisions: List[Decision]
+    resident_bytes_per_dev: float
+    pooled_bytes_per_dev: float
+    budget_bytes: float
+
+    @property
+    def fits(self) -> bool:
+        return (self.resident_bytes_per_dev + self.pooled_bytes_per_dev
+                <= self.budget_bytes)
+
+    def count(self, action: str) -> int:
+        return sum(1 for d in self.decisions if d.action == action)
+
+    def total_stall(self) -> float:
+        return sum(d.est_stall_s for d in self.decisions)
+
+
+def fetch_bandwidth(plan: MeshPlan, memory: MemoryPlan,
+                    chip: hw.Chip = hw.TPU_V5E) -> float:
+    """Per-device stash/fetch bandwidth of the pooled tier.
+
+    bw_aware engages the ICI links of every mesh dimension the pool spans
+    (paper Fig. 10: all N links, left+right nodes); local engages one
+    dimension's links.  A 2D torus gives 2 links per dimension per chip.
+    """
+    dims = len(PoolAxes(plan).axes_for(memory.placement))
+    links = min(2 * dims, chip.num_links)
+    return links * chip.link_bw
+
+
+def plan_memory(dag: LayerDAG, plan: MeshPlan, memory: MemoryPlan,
+                chip: hw.Chip = hw.TPU_V5E,
+                model_state_bytes: float = 0.0) -> MemoryPlanReport:
+    """Run the planner over a layer DAG.
+
+    model_state_bytes: global bytes of params+optimizer state (FSDP-sharded
+    over the pool, so they cost /pool_size per device).
+    """
+    n_dev = plan.num_devices
+    pool_n = PoolAxes(plan).pool_size(memory.placement)
+    budget = memory.hbm_budget_gb * 1e9
+    bw = fetch_bandwidth(plan, memory, chip)
+    ratio = compress_ratio(memory.compress)
+    eff_flops = n_dev * chip.peak_flops
+
+    # state (params + moments) is pooled via FSDP
+    state_per_dev = model_state_bytes / (pool_n if memory.pool_params else 1)
+    resident = state_per_dev
+    pooled = 0.0
+    decisions: List[Decision] = []
+
+    sched = dag.schedule()
+    # largest reuse distance first — best eviction victims
+    order = sorted(range(len(sched)), key=lambda j: -sched[j][2])
+    stash_all = memory.policy in ("mcdla", "host")
+
+    # Pass 1: keep everything resident, then evict until it fits (auto), or
+    # stash everything (mcdla — the paper's stress-test policy).
+    per_dev_saved = [b / n_dev for (_, b, _) in sched]
+    resident += sum(per_dev_saved)
+
+    for j in order:
+        i, bytes_g, window_flops = sched[j]
+        if not stash_all and resident <= budget:
+            decisions.append(Decision(i, "keep", bytes_g, 0.0))
+            continue
+        layer = dag.layers[i]
+        xfer = 2.0 * (bytes_g * ratio) / (bw * n_dev)     # stash + fetch
+        recomp = layer.flops_fwd / eff_flops
+        window = window_flops / eff_flops
+        if memory.recompute_cheap and recomp < xfer:
+            decisions.append(Decision(i, "recompute", bytes_g, 0.0))
+            resident -= per_dev_saved[j]
+        else:
+            stall = max(0.0, xfer - window)
+            decisions.append(Decision(i, "pool", bytes_g, stall))
+            resident -= per_dev_saved[j]
+            pooled += bytes_g * ratio / pool_n
+
+    decisions.sort(key=lambda d: d.layer)
+    return MemoryPlanReport(decisions, resident, pooled, budget)
+
+
+def summarize(report: MemoryPlanReport) -> str:
+    return (f"keep={report.count('keep')} pool={report.count('pool')} "
+            f"recompute={report.count('recompute')} "
+            f"resident={report.resident_bytes_per_dev/1e9:.2f}GB "
+            f"pooled={report.pooled_bytes_per_dev/1e9:.2f}GB "
+            f"budget={report.budget_bytes/1e9:.0f}GB fits={report.fits} "
+            f"stall={report.total_stall()*1e3:.2f}ms")

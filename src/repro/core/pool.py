@@ -1,0 +1,175 @@
+"""The pooled-memory tier (the paper's memory-nodes, §III-A) on a TPU mesh.
+
+Hardware adaptation (DESIGN.md §2): a TPU pod has no DDR4 boards hanging off
+the ICI — the TPU-native realization of "a pool of capacity-optimized memory
+on the device-side interconnect" is the *aggregate HBM of the mesh*: a tensor
+that is stashed to the pool is re-sharded so that each chip keeps only
+1/pool_size of it, and is fetched back (all-gathered over ICI) right before
+its backward use.  Capacity expands exactly like the paper's memory-nodes
+(256 chips pool 4 TB of HBM) and the fetch traffic travels over the same
+class of links (ICI ~ NVLINK).
+
+Placement policies (paper Fig. 10):
+
+* ``bw_aware`` — the stash is striped over **all** mesh axes: the sharded
+  dim spans ('pod','data','model'), so the fetch collective moves traffic
+  over *both* torus dimensions' links simultaneously (the analogue of
+  splitting an allocation round-robin across the left *and* right
+  memory-node: all N links active, 2x fetch bandwidth).
+* ``local`` — the stash is sharded over the 'model' axis only; the fetch
+  all-gathers over a single mesh dimension (one neighbour's links).
+
+Capacity accounting mirrors the paper's boot-time memory map (Fig. 10):
+``PoolAccountant`` tracks bytes-per-device for device_local vs pooled
+allocations against the HBM budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MemoryPlan, MeshPlan
+from repro.parallel.sharding import ShardingPlanner
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolAxes:
+    """Which mesh axes form the pool for each placement policy."""
+
+    plan: MeshPlan
+
+    @property
+    def bw_aware(self) -> Tuple[str, ...]:
+        # stripe across every device-side axis (paper: left+right nodes).
+        return tuple(a for a in self.plan.axes)
+
+    @property
+    def local(self) -> Tuple[str, ...]:
+        # a single mesh dimension (paper: one neighbour memory-node).
+        return ("model",) if "model" in self.plan.axes else self.plan.axes[-1:]
+
+    def axes_for(self, placement: str) -> Tuple[str, ...]:
+        return self.bw_aware if placement == "bw_aware" else self.local
+
+    def pool_size(self, placement: str) -> int:
+        return math.prod(self.plan.axis_size(a) for a in self.axes_for(placement))
+
+
+def pool_spec(shape: Sequence[int], planner: ShardingPlanner,
+              placement: str = "bw_aware",
+              batch_dim: Optional[int] = None,
+              name: str = "stash") -> P:
+    """PartitionSpec for a stashed tensor.
+
+    Only XLA-*efficient* reshards from the compute layout (batch dim on the
+    data axes) are emitted — moving the 'data' axis off the batch dim makes
+    current SPMD fall back to full rematerialization, which would replicate
+    the activation on every chip (fatal at 32k seq).  The efficient set:
+
+    * ``local``    — batch keeps its data-parallel axes; the largest
+      divisible non-batch dim is sharded over 'model'.  Stash is a pure
+      local slice + neighbour permute; fetch is one all-gather over the
+      model-dim ICI ring.
+    * ``bw_aware`` — additionally *extends the batch dim hierarchically*
+      over the model axis when divisible (P(('pod','data','model'),...)).
+      The stash collective is then a cheap collective-permute of half a
+      shard per hop and every chip of the pool holds a distinct block.
+      When batch is not divisible it falls back to the ``local`` layout.
+
+    Hardware-adaptation note (DESIGN.md §2): on a 2D torus with DP pinned to
+    one axis, fetch traffic can only ride the model-dim links; the paper's
+    LOCAL-vs-BW_AWARE 2x-link contrast (Fig. 10) does not transfer 1:1 — the
+    data-dim links are instead kept busy by the concurrent FSDP gradient
+    collectives, which is the same "use all N links" end state MC-DLA(B)
+    argues for.  The Fig. 10 effect itself is reproduced in ``sim/``.
+    Per-device capacity expansion is identical (the full pool) either way.
+    """
+    plan = planner.plan
+    model_axes = ("model",) if "model" in plan.axes else plan.axes[-1:]
+    model_size = math.prod(plan.axis_size(a) for a in model_axes)
+    batch_axes = planner.axes.batch
+    batch_size = math.prod(plan.axis_size(a) for a in batch_axes)
+
+    assignment: list = [None] * len(shape)
+    if batch_dim is not None and batch_dim < len(shape):
+        assignment[batch_dim] = batch_axes
+
+    if placement == "bw_aware" and batch_dim is not None and \
+            batch_dim < len(shape) and \
+            shape[batch_dim] % (batch_size * model_size) == 0:
+        # hierarchical batch stripe: every chip holds a distinct block
+        assignment[batch_dim] = tuple(batch_axes) + tuple(model_axes)
+        return planner.spec(shape, assignment, name=name)
+
+    # local layout (also the bw_aware fallback): the FIRST divisible
+    # non-batch dim (the sequence dim of a (B,S,D) residual) over the model
+    # axis — this matches the sequence-parallel residual layout, so the
+    # stash constraint composes with it instead of fighting it (sharding a
+    # different dim makes GSPMD emit a cross-dim reshard per layer).
+    order = [i for i in range(len(shape)) if i != batch_dim]
+    order.sort(key=lambda i: (i != 1, -shape[i]))      # prefer dim 1, then size
+    for i in order:
+        if shape[i] > 0 and shape[i] % model_size == 0:
+            assignment[i] = model_axes
+            break
+    return planner.spec(shape, assignment, name=name)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PoolAccountant:
+    """Boot-time memory map: device_local vs pooled bytes per chip.
+
+    Used by core.policy to decide KEEP vs POOL vs RECOMPUTE and by the
+    dry-run report to explain ``memory_analysis()`` numbers.
+    """
+
+    plan: MeshPlan
+    memory: MemoryPlan
+    local_bytes: float = 0.0          # resident per-device bytes
+    pooled_bytes: float = 0.0         # per-device share of pooled tensors
+
+    @property
+    def pool_devices(self) -> int:
+        return PoolAxes(self.plan).pool_size(self.memory.placement)
+
+    @property
+    def budget(self) -> float:
+        return self.memory.hbm_budget_gb * 1e9
+
+    def alloc_local(self, nbytes: float) -> None:
+        self.local_bytes += nbytes
+
+    def alloc_pooled(self, nbytes: float) -> None:
+        # a pooled tensor of `nbytes` costs nbytes/pool_size per chip
+        self.pooled_bytes += nbytes / max(self.pool_devices, 1)
+
+    @property
+    def per_device(self) -> float:
+        return self.local_bytes + self.pooled_bytes
+
+    @property
+    def fits(self) -> bool:
+        return self.per_device <= self.budget
+
+    @property
+    def headroom(self) -> float:
+        return self.budget - self.per_device
+
+    def system_capacity(self) -> float:
+        """Total pooled capacity exposed to one device (paper's 'tens of
+        TBs'): its own HBM plus its share of every other chip's."""
+        return self.budget * self.pool_devices
+
+
+def pool_report(plan: MeshPlan, memory: MemoryPlan) -> str:
+    axes = PoolAxes(plan)
+    n = axes.pool_size(memory.placement)
+    cap = memory.hbm_budget_gb * n / 1e3
+    return (f"pool[{memory.placement}] axes={axes.axes_for(memory.placement)} "
+            f"devices={n} capacity={cap:.1f}TB")

@@ -1,0 +1,1 @@
+"""Host-side data pipeline."""

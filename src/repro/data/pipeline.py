@@ -1,0 +1,155 @@
+"""Data pipeline: deterministic synthetic streams + file-backed tokens,
+checkpointable state, host-side prefetch.
+
+The CPU role the paper worries about (§V-A: "getting the training datasets
+ready to be fed into the accelerators") lives here: batches are produced on
+host threads and double-buffered ahead of the device step, so the input
+pipeline overlaps the accelerator compute — and, under MC-DLA, the host
+PCIe link carries *only* this input traffic because memory virtualization
+traffic moved to the device-side pool.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import frontends
+
+
+class SyntheticLM:
+    """Deterministic, stateless-by-step synthetic LM stream.
+
+    Batch t is a pure function of (seed, t): resuming at step t after a
+    restart reproduces the identical stream with no replay buffer.
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                 dtype=jnp.bfloat16):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.seed, self.dtype = seed, dtype
+        self.step = 0
+
+    # -- checkpointable state -------------------------------------------
+    def get_state(self) -> Dict[str, int]:
+        return {"step": self.step, "seed": self.seed}
+
+    def set_state(self, state: Dict[str, int]) -> None:
+        self.step = int(state["step"])
+        self.seed = int(state["seed"])
+
+    # --------------------------------------------------------------
+    def batch_at(self, t: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, t]))
+        B, S, V = self.batch, self.seq, cfg.vocab_size
+        # markov-ish stream so the loss is learnable (not pure noise)
+        base = rng.integers(0, V, size=(B, 1), dtype=np.int32)
+        drift = rng.integers(0, 17, size=(B, S), dtype=np.int32)
+        toks = (base + np.cumsum(drift, axis=1)) % V
+        tokens = toks.astype(np.int32)
+        labels = np.roll(tokens, -1, axis=1)
+        labels[:, -1] = -1                       # no target for last pos
+        if cfg.mrope_sections:
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32),
+                                  (3, B, S)).copy()
+        else:
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S)).copy()
+        d: Dict[str, np.ndarray] = {"tokens": tokens, "labels": labels,
+                                    "positions": pos}
+        if cfg.frontend == "audio_stub":
+            d["frames"] = rng.standard_normal(
+                (B, cfg.frontend_tokens, frontends.AUDIO_FRAME_DIM),
+                dtype=np.float32)
+        if cfg.frontend == "vision_stub":
+            d["patches"] = rng.standard_normal(
+                (B, cfg.frontend_tokens, frontends.VISION_PATCH_DIM),
+                dtype=np.float32)
+            d["labels"][:, :cfg.frontend_tokens] = -1   # no CE on patches
+        return d
+
+    def __iter__(self) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
+        while True:
+            t = self.step
+            self.step += 1
+            yield t, self.batch_at(t)
+
+
+class MemmapTokens:
+    """File-backed token stream (binary int32 file), windowed batches."""
+
+    def __init__(self, path: str, cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0):
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+        self.cfg, self.batch, self.seq, self.seed = cfg, batch, seq, seed
+        self.step = 0
+        self.n_windows = max(1, (len(self.tokens) - 1) // seq)
+
+    def get_state(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def set_state(self, state):
+        self.step = int(state["step"])
+        self.seed = int(state["seed"])
+
+    def batch_at(self, t: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, t]))
+        idx = rng.integers(0, self.n_windows, size=(self.batch,))
+        S = self.seq
+        toks = np.stack([self.tokens[i * S:(i + 1) * S] for i in idx])
+        labels = np.stack([self.tokens[i * S + 1:(i + 1) * S + 1] for i in idx])
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32),
+                              (self.batch, S)).copy()
+        return {"tokens": toks.astype(np.int32),
+                "labels": labels.astype(np.int32), "positions": pos}
+
+    def __iter__(self):
+        while True:
+            t = self.step
+            self.step += 1
+            yield t, self.batch_at(t)
+
+
+class Prefetcher:
+    """Host-thread double buffering around any (step, batch) iterator."""
+
+    def __init__(self, source, depth: int = 2, shardings=None):
+        self.source = source
+        self.shardings = shardings
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._work, daemon=True)
+        self.thread.start()
+
+    def _work(self):
+        for item in self.source:
+            if self._stop.is_set():
+                break
+            t, batch = item
+            if self.shardings is not None:
+                batch = {k: jax.device_put(v, self.shardings.get(k))
+                         for k, v in batch.items()}
+            while not self._stop.is_set():
+                try:
+                    self.q.put((t, batch), timeout=0.25)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self):
+        while not self._stop.is_set():
+            yield self.q.get()
+
+    def get_state(self):
+        return self.source.get_state()
+
+    def set_state(self, s):
+        return self.source.set_state(s)
+
+    def close(self):
+        self._stop.set()

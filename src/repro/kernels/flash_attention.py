@@ -1,0 +1,135 @@
+"""Flash attention (forward) — Pallas TPU kernel with causal/SWA masking.
+
+Online-softmax attention with (bq x bk) score tiles living in VMEM; the
+running max / denominator / output accumulator persist in VMEM scratch
+across the kv-block grid dimension.  GQA is handled in the index_map (query
+head h reads kv head h // group) — no k/v repeat is materialized.
+
+Block skipping: with causal masking, kv blocks strictly above the diagonal
+(and, for sliding-window, strictly below the window band) contribute
+nothing; their compute is guarded out with ``pl.when`` so the FLOPs match
+the exact causal/banded count, not the dense rectangle.
+
+The backward pass recomputes through the XLA blockwise twin
+(models/attention.blockwise_attention) via ``ops.flash_attention`` 's
+custom_vjp — forward takes the kernel, backward the XLA path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int, n_kv: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = qi * bq
+    k0 = ki * bk
+    # static-ish skip decision must be dynamic (q0/k0 are traced via ids):
+    # guard the whole block with pl.when on the band intersection test.
+    block_live = jnp.asarray(True)
+    if causal:
+        block_live = (k0 <= q0 + bq - 1)            # not above diagonal
+        if window > 0:
+            block_live &= (k0 + bk - 1 >= q0 - window + 1)
+
+    @pl.when(block_live)
+    def _():
+        q = q_ref[0, 0]                              # (bq, d)
+        k = k_ref[0, 0]                              # (bk, d)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= q_pos >= k_pos
+            if window > 0:
+                mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ki == n_kv - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, d); k/v: (B, Hkv, T, d) -> (B, H, S, d)."""
+    B, H, S, d = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    group = H // Hkv
+    bq = min(bq, S)
+    bk = min(bk, T)
+    pad_q = (-S) % bq
+    pad_k = (-T) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq, Tk = q.shape[2], k.shape[2]
+    n_kv = Tk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, n_kv=n_kv, kv_len=T),
+        grid=(B * H, Sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // group,
+                                             ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // group,
+                                             ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pad_q:
+        out = out[:, :, :S]
+    return out

@@ -1,0 +1,82 @@
+"""Output-stationary GEMM — the paper's accelerator dataflow on the MXU.
+
+The paper's device-node (§IV, Table II) is a PE-array accelerator using an
+*output-stationary* dataflow ("output feature maps are stationed locally
+on-chip").  The MXU analogue: each grid cell owns one (bm x bn) output tile
+that stays resident in a VMEM f32 scratch accumulator while the K dimension
+streams through in (bm x bk) / (bk x bn) blocks — HBM traffic is
+O(MK + KN + MN) with the output written exactly once, and the tile shapes
+are multiples of the 128x128 systolic array.
+
+Block-size selection (``pick_blocks``) maximizes the K-streaming block
+under the VMEM budget — the kernel-level twin of the §Perf tiling
+hypothesis loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+VMEM_BUDGET = 12 * 1024 * 1024       # conservative per-core working set
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    """Grid (M/bm, N/bn, K/bk); K is the innermost (sequential) dim."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def pick_blocks(M: int, K: int, N: int, itemsize: int = 2
+                ) -> Tuple[int, int, int]:
+    """Largest hardware-aligned blocks fitting the VMEM working set:
+    bm*bk + bk*bn (operands, double-buffered by pallas) + bm*bn (acc+out)."""
+    def fit(bm, bn, bk):
+        return 2 * (bm * bk + bk * bn) * itemsize + bm * bn * (4 + itemsize)
+
+    bm = 256 if M % 256 == 0 else min(128, M)
+    bn = 256 if N % 256 == 0 else min(128, N)
+    bk = min(128, K)
+    while bk * 2 <= K and K % (bk * 2) == 0 and \
+            fit(bm, bn, bk * 2) <= VMEM_BUDGET:
+        bk *= 2
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def gemm_os(x: jax.Array, w: jax.Array, *, bm: int = 0, bn: int = 0,
+            bk: int = 0, interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N) with f32 accumulation."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    if not (bm and bn and bk):
+        bm, bn, bk = pick_blocks(M, K, N, x.dtype.itemsize)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, K, N, bm, bn, bk)
+    n_k = K // bk
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,75 @@
+"""Fused fp8 quantize+pack for the stash path — the memory-node's
+"compression ASIC" (paper §III-A, Fig. 6) realised as a Pallas kernel.
+
+Quantizes a (rows, cols) activation to float8_e4m3fn with a per-row-block
+absmax scale in a single VMEM pass, halving the bytes that cross the ICI
+into the pool.  Blockwise scales (vs core.compress's per-tensor scale)
+bound the quantization error per block — a strictly better trade at zero
+extra traffic (one f32 per block).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FP8_MAX = 448.0
+
+
+def _pack_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax / FP8_MAX, 1e-12)
+    q_ref[...] = (x / scale).astype(q_ref.dtype)
+    s_ref[0, 0] = scale
+
+
+def _unpack_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32)
+                  * s_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fp8_pack(x: jax.Array, *, block_rows: int = 128,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (R, C) -> (q: fp8 (R, C), scales: f32 (R//block_rows,))."""
+    R, C = x.shape
+    assert R % block_rows == 0, (R, block_rows)
+    nb = R // block_rows
+    q, s = pl.pallas_call(
+        _pack_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.float8_e4m3fn),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "dtype",
+                                             "interpret"))
+def fp8_unpack(q: jax.Array, scales: jax.Array, *, block_rows: int = 128,
+               dtype=jnp.bfloat16, interpret: bool = False) -> jax.Array:
+    R, C = q.shape
+    nb = R // block_rows
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), dtype),
+        interpret=interpret,
+    )(q, scales[:, None])

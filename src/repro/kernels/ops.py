@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op auto-selects interpret mode off-TPU (the kernels are written for
+TPU BlockSpec/VMEM semantics; interpret=True executes the same kernel body
+on CPU for correctness).  ``flash_attention`` adds the custom_vjp pairing:
+Pallas forward + XLA-blockwise backward recompute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (flash_attention as fa, gemm_os as gos,
+                           offload_pack as op, ssd_scan as ss)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gemm(x: jax.Array, w: jax.Array, **kw) -> jax.Array:
+    return gos.gemm_os(x, w, interpret=_interpret(), **kw)
+
+
+def ssd(x, a, B, C, *, chunk: int = 128) -> jax.Array:
+    return ss.ssd_scan(x, a, B, C, chunk=chunk, interpret=_interpret())
+
+
+def fp8_pack(x, *, block_rows: int = 128):
+    return op.fp8_pack(x, block_rows=block_rows, interpret=_interpret())
+
+
+def fp8_unpack(q, scales, *, block_rows: int = 128, dtype=jnp.bfloat16):
+    return op.fp8_unpack(q, scales, block_rows=block_rows, dtype=dtype,
+                         interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B, H, S, d); k/v: (B, Hkv, T, d).  Pallas forward; backward
+    recomputes through the XLA blockwise twin (exact same math)."""
+    return fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                  interpret=_interpret())
+
+
+def _fa_ref(q, k, v, causal, window):
+    # XLA blockwise twin, in (B, S, H, d) layout
+    from repro.models.attention import blockwise_attention
+    o = blockwise_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                            v.swapaxes(1, 2), causal=causal, window=window)
+    return o.swapaxes(1, 2)
+
+
+def _fa_fwd(q, k, v, causal, window):
+    return flash_attention(q, k, v, causal, window), (q, k, v)
+
+
+def _fa_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _fa_ref(q, k, v, causal, window),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

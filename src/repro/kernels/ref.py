@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+def gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N), f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (B, H, S, d); k/v: (B, Hkv, T, d); GQA via head repeat.
+
+    Dense softmax reference (materializes S x T — small tests only).
+    """
+    B, H, S, d = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    if H != Hkv:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+def ssd_ref(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Single-(batch,head) SSD recurrence oracle.
+
+    x: (S, P) inputs (already dt-scaled), a: (S,) log-decay per step,
+    B: (S, N), C: (S, N).  Returns (y: (S, P), final state (P, N)).
+    """
+    S, P = x.shape
+    N = B.shape[1]
+
+    def step(state, t):
+        xt, at, Bt, Ct = t
+        state = state * jnp.exp(at) + jnp.outer(xt, Bt)
+        return state, state @ Ct
+
+    xs = (x.astype(jnp.float32), a.astype(jnp.float32),
+          B.astype(jnp.float32), C.astype(jnp.float32))
+    final, y = jax.lax.scan(step, jnp.zeros((P, N), jnp.float32), xs)
+    return y.astype(x.dtype), final
+
+
+# ---------------------------------------------------------------------------
+def fp8_pack_ref(x: jax.Array, block_rows: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise fp8 quantize: x (R, C) -> (q fp8 (R, C), scales (R/br,))."""
+    R, C = x.shape
+    nb = R // block_rows
+    xb = x.reshape(nb, block_rows, C).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xb), axis=(1, 2))
+    scale = jnp.maximum(absmax / 448.0, 1e-12)
+    q = (xb / scale[:, None, None]).astype(jnp.float8_e4m3fn)
+    return q.reshape(R, C), scale
+
+
+def fp8_unpack_ref(q: jax.Array, scale: jax.Array, block_rows: int,
+                   dtype=jnp.bfloat16) -> jax.Array:
+    R, C = q.shape
+    nb = R // block_rows
+    xb = q.reshape(nb, block_rows, C).astype(jnp.float32)
+    return (xb * scale[:, None, None]).reshape(R, C).astype(dtype)

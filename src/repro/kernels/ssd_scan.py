@@ -1,0 +1,98 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+One grid cell = one (batch*head, chunk).  The (P x N) inter-chunk SSM state
+lives in a VMEM f32 scratch that persists across the chunk grid dimension
+(TPU grids execute sequentially with the last axis innermost, so for a
+fixed bh the chunks arrive in order; the state resets at chunk 0).
+
+Within a chunk everything is MXU matmuls:
+    scores  = (C L) B^T          (c x c masked decay matmul)
+    y_intra = scores @ X
+    y_inter = (C * in_decay) @ state
+    state   = decay_total * state + (B * to_end)^T @ X
+which is precisely the "quadratic intra + linear inter" structure of the
+SSD duality — the TPU-native re-think of the paper-era GPU scan kernels.
+
+Inputs are pre-projected per-(batch,head) tensors (the surrounding
+mamba_block does the projections); ``a`` is the per-step log-decay dt*A and
+x is already dt-scaled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, *, c: int):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _():
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    x = x_ref[0]                                    # (c, P)
+    a = a_ref[0].astype(jnp.float32)                # (c, 1)
+    B = b_ref[0]                                    # (c, N)
+    C = c_ref[0]                                    # (c, N)
+
+    cum = jnp.cumsum(a, axis=0)                     # (c, 1) inclusive
+    seg = cum - cum.T                               # (c, c) cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    L = jnp.exp(jnp.where(ii >= jj, seg, NEG_INF))  # masked decay
+
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * L     # (c, c)
+    y = jax.lax.dot_general(
+        scores.astype(x.dtype), x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (c, P) intra
+
+    in_decay = jnp.exp(cum)                         # (c, 1)
+    y += jax.lax.dot_general(
+        (C.astype(jnp.float32) * in_decay), st_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (c, P) inter: C @ S^T
+
+    to_end = jnp.exp(cum[-1] - cum)                 # (c, 1)
+    upd = jax.lax.dot_general(
+        (B.astype(jnp.float32) * to_end), x.astype(jnp.float32),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (N, P)
+    st_ref[...] = st_ref[...] * jnp.exp(cum[-1]) + upd.T  # (P, N)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array, *,
+             chunk: int = 128, interpret: bool = False) -> jax.Array:
+    """x: (BH, S, P) dt-scaled inputs; a: (BH, S) log decay;
+    B/C: (BH, S, N).  Returns y: (BH, S, P)."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    n = S // c
+    a2 = a[..., None]
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, c=c),
+        grid=(BH, n),
+        in_specs=[
+            pl.BlockSpec((1, c, P), lambda bh, ni: (bh, ni, 0)),
+            pl.BlockSpec((1, c, 1), lambda bh, ni: (bh, ni, 0)),
+            pl.BlockSpec((1, c, N), lambda bh, ni: (bh, ni, 0)),
+            pl.BlockSpec((1, c, N), lambda bh, ni: (bh, ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, P), lambda bh, ni: (bh, ni, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a2, B, C)

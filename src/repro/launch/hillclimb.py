@@ -1,0 +1,81 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# §Perf hillclimbing driver: run one (arch x shape) cell under a list of
+# named variants (sharding/placement/compression/accum changes), print the
+# roofline terms per variant, and append the hypothesis log to a JSON.
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb --arch llama4-maverick-400b \
+#       --shape train_4k --variants baseline,local,fp8,bits8 --out reports/hc.json
+
+import argparse            # noqa: E402
+import json                # noqa: E402
+from typing import Dict    # noqa: E402
+
+from repro.launch.dryrun import lower_cell                 # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.launch.roofline import analyze_cell             # noqa: E402
+
+# named variants: kwargs overrides for lower_cell
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},                                  # paper-faithful mcdla
+    "local": {"placement": "local"},
+    "fp8": {"compress": "fp8"},
+    "bits8": {"opt_bits": 8},
+    "accum2": {"accum": 2},
+    "accum4": {"accum": 4},
+    "no-sp": {"seq_parallel": False},
+    "auto": {"policy": "auto"},
+    "oracle": {"policy": "none"},
+    "local+fp8": {"placement": "local", "compress": "fp8"},
+    "local+fp8+bits8": {"placement": "local", "compress": "fp8",
+                        "opt_bits": 8},
+    "local+bits8": {"placement": "local", "opt_bits": 8},
+    "local+bits8+accum4": {"placement": "local", "opt_bits": 8, "accum": 4},
+    "no-aux-stash": {"stash_aux": False},
+    "bits8+accum2": {"opt_bits": 8, "accum": 2},
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline,local")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    rows = []
+    for name in args.variants.split(","):
+        kw = VARIANTS[name]
+        try:
+            r = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                           probes=not args.no_probes, mesh=mesh, **kw)
+            a = analyze_cell(r)
+            rows.append({"variant": name, **a,
+                         "temp_gb": r["temp_bytes_per_dev"] / 1e9,
+                         "arg_gb": r["arg_bytes_per_dev"] / 1e9,
+                         "collectives": r["collectives"]})
+            print(f"[{name:>18s}] compute={a['compute_s']:.3f}s "
+                  f"memory={a['memory_s']:.3f}s coll={a['collective_s']:.3f}s "
+                  f"dom={a['dominant']:10s} frac={a['roofline_fraction']:.2%} "
+                  f"args={r['arg_bytes_per_dev']/1e9:.1f}GB "
+                  f"temp={r['temp_bytes_per_dev']/1e9:.1f}GB")
+        except Exception as e:  # noqa: BLE001
+            rows.append({"variant": name, "error": str(e)})
+            print(f"[{name:>18s}] FAILED: {e}")
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        existing.append({"arch": args.arch, "shape": args.shape,
+                         "rows": rows})
+        with open(args.out, "w") as f:
+            json.dump(existing, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any jax
+initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshPlan, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def plan_for(*, multi_pod: bool = False) -> MeshPlan:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_host_mesh(n: int = 0):
+    """Small mesh over whatever local devices exist (CPU tests/examples)."""
+    devs = jax.devices()
+    n = n or len(devs)
+    if n == 1:
+        return None
+    d = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((d, n // d), ("data", "model"))

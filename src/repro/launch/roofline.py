@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch x shape x mesh) cell:
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+All three inputs are per-device numbers from launch/dryrun.py (cost_analysis
++ the parsed collective schedule, loop-corrected by the unrolled probes), so
+the division by `chips` is already folded in.  The dominant term is the
+bottleneck; the roofline fraction scores how close the cell is to the
+machine:
+
+  ideal_s    = MODEL_FLOPS / (chips x peak)     (6*N*D useful compute)
+  bound_s    = max(compute, memory, collective)
+  fraction   = ideal_s / bound_s
+
+Known measurement bias (recorded per EXPERIMENTS.md §Dry-run): the CPU
+backend legalizes bf16 dots to f32, so HLO_bytes over-counts what a TPU
+would move by up to ~2x on matmul traffic — memory terms are upper bounds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from repro import hw
+from repro.configs import SHAPES_BY_NAME, get_arch
+from repro.core.dag import model_flops
+
+CHIP = hw.TPU_V5E
+
+
+def analyze_cell(r: Dict) -> Optional[Dict]:
+    if not r.get("ok"):
+        return None
+    cfg = get_arch(r["arch"])
+    shape = SHAPES_BY_NAME[r["shape"]]
+    chips = 512 if r["mesh"] == "2x16x16" else 256
+
+    compute_s = (r["flops_per_dev"] or 0.0) / CHIP.peak_flops
+    memory_s = (r["bytes_accessed_per_dev"] or 0.0) / CHIP.hbm_bw
+    coll_s = (r["collective_wire_bytes_per_dev"] or 0.0) / CHIP.link_bw
+
+    mf = model_flops(cfg, shape)
+    ideal_s = mf / (chips * CHIP.peak_flops)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    hlo_flops_global = (r["flops_per_dev"] or 0.0) * chips
+    return {
+        **{k: r.get(k) for k in ("arch", "shape", "mesh", "policy",
+                                 "placement", "compress", "opt_bits",
+                                 "accum")},
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "ideal_s": ideal_s,
+        "useful_ratio": (mf / hlo_flops_global) if hlo_flops_global else 0.0,
+        "roofline_fraction": (ideal_s / bound) if bound else 0.0,
+        "fits_hbm": ((r.get("arg_bytes_per_dev") or 0)
+                     + (r.get("temp_bytes_per_dev") or 0)) <= CHIP.hbm_bytes,
+        "arg_gb": (r.get("arg_bytes_per_dev") or 0) / 1e9,
+        "temp_gb": (r.get("temp_bytes_per_dev") or 0) / 1e9,
+        "advice": _advice(dominant, r, shape),
+    }
+
+
+def _advice(dominant: str, r: Dict, shape) -> str:
+    if dominant == "collective":
+        return ("shrink wire bytes: local placement / fp8 stash compression "
+                "/ fewer FSDP regathers (larger per-layer weight shards)")
+    if dominant == "memory":
+        return ("raise arithmetic intensity: larger per-device batch via "
+                "lower grad-accum, fuse norms/rope (Pallas), keep bf16 "
+                "end-to-end (CPU f32-dot bias inflates this term)")
+    return ("compute-bound: reduce recompute (policy=auto keeps layers "
+            "resident when HBM allows), cast scores bf16, bigger MXU tiles")
+
+
+def analyze_file(path: str) -> List[Dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    out = []
+    for r in rows:
+        a = analyze_cell(r)
+        if a is not None:
+            out.append(a)
+        elif r.get("skip"):
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "skip": r["skip"]})
+        else:
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r.get("mesh"), "error": r.get("error")})
+    return out
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| 6ND/HLO | roofline frac | fits | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for a in rows:
+        if "skip" in a:
+            lines.append(f"| {a['arch']} | {a['shape']} | — | — | — | — | — "
+                         f"| — | — | SKIP: {a['skip'][:40]} |")
+            continue
+        if "error" in a:
+            lines.append(f"| {a['arch']} | {a['shape']} | — | — | — | — | — "
+                         f"| — | — | ERROR: {str(a['error'])[:40]} |")
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.3f} "
+            f"| {a['memory_s']:.3f} | {a['collective_s']:.3f} "
+            f"| **{a['dominant']}** | {a['useful_ratio']:.2f} "
+            f"| {a['roofline_fraction']:.2%} "
+            f"| {'y' if a['fits_hbm'] else 'NO'} "
+            f"| {a['advice'][:48]} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("reports", nargs="+")
+    ap.add_argument("--md", default="")
+    args = ap.parse_args()
+    rows = []
+    for path in args.reports:
+        rows.extend(analyze_file(path))
+    md = to_markdown(rows)
+    print(md)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

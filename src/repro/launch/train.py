@@ -1,0 +1,93 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real TPU hardware this launches the full config against the production
+mesh; on the CPU container use ``--smoke`` for the reduced same-family twin
+(this is how examples/train_smollm.py trains a ~100M model end-to-end).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+
+from repro.configs import (MemoryPlan, RunConfig, SHAPES_BY_NAME,
+                           TrainConfig, get_arch)
+from repro.configs.base import MeshPlan, ShapeConfig
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.launch.mesh import make_host_mesh, make_production_mesh, plan_for
+from repro.models.model import build_model
+from repro.train.fault import FaultHandler
+from repro.train.loop import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + small batch on local devices")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--policy", default="mcdla")
+    ap.add_argument("--placement", default="bw_aware")
+    ap.add_argument("--compress", default="none")
+    ap.add_argument("--opt-bits", type=int, default=32)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+        mesh = make_host_mesh()
+        n = len(jax.devices())
+        plan = MeshPlan((2, n // 2), ("data", "model")) if mesh is not None \
+            else MeshPlan((1,), ("data",))
+        batch = args.batch or max(4, n)
+        seq = args.seq or 128
+    else:
+        n = len(jax.devices())
+        need = 512 if args.multi_pod else 256
+        if n >= need:
+            mesh = make_production_mesh(multi_pod=args.multi_pod)
+            plan = plan_for(multi_pod=args.multi_pod)
+        else:
+            # full-size model on whatever devices exist (CPU end-to-end
+            # driver: examples/train_smollm.py)
+            mesh = make_host_mesh()
+            plan = MeshPlan((2, n // 2), ("data", "model")) if mesh is not \
+                None else MeshPlan((1,), ("data",))
+        sh = SHAPES_BY_NAME[args.shape]
+        batch = args.batch or sh.global_batch
+        seq = args.seq or sh.seq_len
+
+    shape = ShapeConfig("train", seq, batch, "train")
+    tc = TrainConfig(total_steps=args.steps, warmup_steps=args.steps // 10,
+                     learning_rate=args.lr, grad_accum=args.accum,
+                     checkpoint_dir=args.ckpt_dir,
+                     checkpoint_every=max(25, args.steps // 4),
+                     log_every=args.log_every)
+    memory = MemoryPlan(policy=args.policy, placement=args.placement,
+                        compress=args.compress, opt_state_bits=args.opt_bits)
+    run = RunConfig(model=cfg, shape=shape, mesh=plan, memory=memory,
+                    train=tc)
+    model = build_model(run, mesh=mesh)
+    data = Prefetcher(SyntheticLM(cfg, batch=batch, seq=seq, seed=tc.seed))
+    handler = FaultHandler()
+    try:
+        state, metrics = train(model, tc, iter(data), fault_handler=handler)
+        print({k: float(v) for k, v in metrics.items()})
+    finally:
+        data.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# model facade re-exported lazily to keep submodule imports light
+def __getattr__(name):
+    if name in ("Model", "build_model"):
+        from repro.models import model as _m
+        return getattr(_m, name)
+    raise AttributeError(name)

@@ -1,0 +1,72 @@
+"""Modality frontends — STUBS per the assignment.
+
+The [audio]/[vlm] cells specify the transformer BACKBONE only; the conv /
+patchification frontends are stubs: ``input_specs()`` provides *precomputed*
+frame / patch embeddings and these modules only project + merge them into
+the token stream.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+# raw embedding widths delivered by the (stubbed) frontends
+AUDIO_FRAME_DIM = 128          # log-mel x conv-stub output per frame
+VISION_PATCH_DIM = 1176        # 14x14x3x2 qwen2-vl patch (2-frame merge)
+
+
+def frontend_dim(cfg: ModelConfig) -> int:
+    return {"audio_stub": AUDIO_FRAME_DIM,
+            "vision_stub": VISION_PATCH_DIM}.get(cfg.frontend, 0)
+
+
+def frontend_init(key, cfg: ModelConfig, dtype) -> dict:
+    d_in = frontend_dim(cfg)
+    if not d_in:
+        return {}
+    ks = jax.random.split(key, 2)
+    return {
+        "proj": dense_init(ks[0], d_in, cfg.d_model, dtype),
+        # learned positions for the encoder/patch stream
+        "pos": (jax.random.normal(ks[1], (cfg.frontend_tokens, cfg.d_model),
+                                  jnp.float32) * 0.02).astype(dtype),
+    }
+
+
+def frontend_specs(cfg: ModelConfig, planner) -> dict:
+    d_in = frontend_dim(cfg)
+    if not d_in:
+        return {}
+    fs, tp = planner.axes.fsdp, planner.axes.tensor
+    return {
+        "proj": planner.spec((d_in, cfg.d_model), [None, fs], "fe_proj"),
+        "pos": planner.spec((cfg.frontend_tokens, cfg.d_model), [None, fs],
+                            "fe_pos"),
+    }
+
+
+def embed_frames(params: dict, cfg: ModelConfig, frames: jax.Array
+                 ) -> jax.Array:
+    """frames: (B, T, frontend_dim) precomputed embeddings -> (B, T, D)."""
+    x = jnp.einsum("btf,fd->btd", frames.astype(params["proj"].dtype),
+                   params["proj"])
+    return x + params["pos"][None, :x.shape[1], :]
+
+
+def merge_patches(params: dict, cfg: ModelConfig, tok_emb: jax.Array,
+                  patches: jax.Array) -> jax.Array:
+    """VLM early fusion: the first ``frontend_tokens`` positions of the
+    sequence carry image patches; the rest are text embeddings.
+
+    tok_emb: (B, S, D); patches: (B, P, patch_dim) with P <= S.
+    """
+    pe = jnp.einsum("bpf,fd->bpd", patches.astype(params["proj"].dtype),
+                    params["proj"])
+    pe = pe + params["pos"][None, :pe.shape[1], :]
+    P_ = pe.shape[1]
+    return jnp.concatenate([pe, tok_emb[:, P_:, :]], axis=1)

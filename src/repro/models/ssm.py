@@ -1,0 +1,245 @@
+"""Mamba2 / SSD (state-space duality) blocks — mamba2-370m and the zamba2
+hybrid backbone.
+
+The chunked SSD algorithm (Dao & Gu, 2024) splits the sequence into chunks
+of length ``c``: a quadratic *intra-chunk* term (a (c x c) masked matmul —
+MXU friendly) plus a linear *inter-chunk* state recurrence carried by
+``lax.scan``.  ``ssd_chunked`` here is the pure-jnp implementation used by
+the models and as the oracle for the Pallas kernel twin
+(``kernels/ssd_scan.py``); ``ssd_recurrent`` is the step-by-step recurrence
+used for decode and as the ground-truth in tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ModelContext, dense_init, rmsnorm
+
+Cache = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x:  (b, S, H, P)   per-head inputs
+    dt: (b, S, H)      positive step sizes (softplus'd)
+    A:  (H,)           negative per-head decay
+    B:  (b, S, G, N)   input projections (G groups broadcast over H)
+    C:  (b, S, G, N)   output projections
+    init_state: (b, H, P, N) or None
+    Returns (y: (b, S, H, P), final_state: (b, H, P, N)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert H % G == 0
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    n_chunks = S // c
+    rep = H // G
+
+    # decay log a_t = dt_t * A  (negative);  shapes -> (b, n, c, H)
+    a = dt * A[None, None, :]
+    xc = x.reshape(b, n_chunks, c, H, P)
+    ac = a.reshape(b, n_chunks, c, H)
+    dtc = dt.reshape(b, n_chunks, c, H)
+    Bc = jnp.repeat(B.reshape(b, n_chunks, c, G, N), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(b, n_chunks, c, G, N), rep, axis=3)
+
+    cum = jnp.cumsum(ac, axis=2)                       # (b,n,c,H) inclusive
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,n,ci,cj,H)
+    idx = jnp.arange(c)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    # mask BEFORE the exp: exp of the (positive, unbounded) anti-causal
+    # entries overflows and 0*inf poisons the backward pass otherwise
+    L = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+
+    # intra-chunk: y_intra[i] = sum_j L[i,j] (C_i . B_j) dt_j x_j
+    scores = jnp.einsum("bnihd,bnjhd->bnijh", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    scores = scores * L
+    xdt = xc * dtc[..., None]
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", scores.astype(x.dtype), xdt)
+
+    # chunk-final partial states: S_n = sum_t exp(cum[-1]-cum[t]) B_t (dt_t x_t)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # (b,n,c,H)
+    states = jnp.einsum("bnchd,bnchp->bnhpd",
+                        (Bc * decay_to_end[..., None]).astype(x.dtype), xdt)
+
+    # inter-chunk recurrence over n: S <- exp(sum a) S + states_n
+    # (carried in fp32 for stability regardless of the compute dtype)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (b,n,H)
+
+    def step(carry, xs):
+        st_in = carry                                   # (b,H,P,N) fp32
+        s_n, d_n = xs                                   # (b,H,P,N), (b,H)
+        out = st_in                                     # state BEFORE chunk n
+        new = st_in * d_n[:, :, None, None] + s_n.astype(jnp.float32)
+        return new, out
+
+    s0 = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1).astype(x.dtype)  # (b,n,H,P,N)
+    final = final.astype(x.dtype)
+
+    # inter-chunk output: y_inter[t] = exp(cum[t]) C_t . S_prev
+    in_decay = jnp.exp(cum)                            # (b,n,c,H)
+    y_inter = jnp.einsum("bnchd,bnhpd->bnchp",
+                         (Cc * in_decay[..., None]).astype(x.dtype),
+                         prev_states)
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y, final
+
+
+def ssd_recurrent(x, dt, A, B, C, init_state=None):
+    """Ground-truth stepwise recurrence (tests + decode).
+
+    Same shapes as ssd_chunked; O(S) sequential — only for small S or S=1.
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bf = jnp.repeat(B, rep, axis=2)
+    Cf = jnp.repeat(C, rep, axis=2)
+    s0 = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, t):
+        xt, dtt, Bt, Ct = t
+        decay = jnp.exp(dtt * A[None, :])              # (b,H)
+        upd = jnp.einsum("bhn,bhp->bhpn", Bt, xt * dtt[..., None])
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          Bf.swapaxes(0, 1).astype(jnp.float32),
+          Cf.swapaxes(0, 1).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), final.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    D, di = cfg.d_model, cfg.d_inner
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    W = cfg.ssm_conv_width
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (W, conv_dim), jnp.float32)
+                   * (W ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, D, dtype),
+    }
+
+
+def mamba_specs(cfg: ModelConfig, planner) -> dict:
+    D, di = cfg.d_model, cfg.d_inner
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    W = cfg.ssm_conv_width
+    conv_dim = di + 2 * G * N
+    fs, tp = planner.axes.fsdp, planner.axes.tensor
+    s = planner.spec
+    return {
+        "in_proj": s((D, 2 * di + 2 * G * N + H), [fs, tp], "ssm_in"),
+        "conv_w": s((W, conv_dim), [None, tp], "conv_w"),
+        "conv_b": s((conv_dim,), [tp], "conv_b"),
+        "A_log": s((H,), [None], "A_log"),
+        "D": s((H,), [None], "ssm_D"),
+        "dt_bias": s((H,), [None], "dt_bias"),
+        "norm_scale": s((di,), [None], "ssm_norm"),
+        "out_proj": s((di, D), [tp, fs], "ssm_out"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (b,S,C); w: (W,C).  Returns (y, new
+    state (b,W-1,C)) for incremental decode."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(W))
+    return y + b[None, None, :], new_state
+
+
+def mamba_block(params: dict, ctx: ModelContext, x: jax.Array,
+                cache: Optional[Cache] = None
+                ) -> Tuple[jax.Array, Optional[Cache]]:
+    """x: (B,S,D) -> (B,S,D).  cache: {"conv": (B,W-1,conv_dim),
+    "ssm": (B,H,P,N)} for decode."""
+    cfg = ctx.cfg
+    di, H, N, G = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    P = cfg.ssm_head_dim
+    Bsz, S, D = x.shape
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xbc = ctx.act(xbc, "batch", None, "tensor")
+    conv_state = cache.get("conv") if cache else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, B_, C_ = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(Bsz, S, H, P)
+    B_ = B_.reshape(Bsz, S, G, N)
+    C_ = C_.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    ssm_state = cache.get("ssm") if cache else None
+    if S == 1 and cache is not None:
+        y, new_state = ssd_recurrent(xs, dt, A, B_, C_, init_state=ssm_state)
+    else:
+        pad = (-S) % cfg.ssm_chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, new_state = ssd_chunked(xs, dt, A, B_, C_, cfg.ssm_chunk,
+                                   init_state=ssm_state)
+        if pad:
+            y = y[:, :S]
+    y = y + xs[:, :S] * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, S, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out_proj"])
+    out = out.astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": new_state}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Cache:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+    }

@@ -1,0 +1,504 @@
+"""Layer stacks for all 10 assigned architectures.
+
+One scan-over-layers code path serves every family.  Each architecture is
+described by its *group*: the repeating unit the scan iterates over.
+
+  dense LM            group = ("dense",)                x L
+  mixtral             group = ("moe",)                  x L
+  llama4 (moe_every=2) group = ("dense","moe")          x L/2
+  mamba2              group = ("ssm",)                  x L
+  zamba2              group = ("ssm",)*6 + ("shared",)  x L/6   (shared-weight
+                      attention block: params unstacked, one copy reused)
+  whisper             encoder stack + decoder stack (self + cross attention)
+
+Training wraps every sub-layer in the vDNN offload unit (core.offload): the
+layer input is the stash unit, intermediates are recomputed — paper §III-B +
+footnote 4.  Serving runs the raw sub-layers against (possibly pooled) KV /
+SSM caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import frontends, moe as moe_mod, ssm as ssm_mod
+from repro.models.attention import (attn_init, attn_specs, attention_block,
+                                    cross_attention_block, encode_cross_kv,
+                                    init_kv_cache)
+from repro.models.layers import (ModelContext, activation_fn, apply_norm,
+                                 dense_init, embed_init, norm_init,
+                                 sinusoidal_pos)
+
+Params = Dict[str, Any]
+
+# Full-unroll switch for the dry-run FLOPs probes: XLA's cost_analysis
+# counts while-loop bodies ONCE (not x trip count), so the roofline probes
+# lower small unrolled stacks and extrapolate (launch/dryrun.py).
+SCAN_UNROLL = False
+
+
+def _unroll():
+    return True if SCAN_UNROLL else 1
+
+
+# ---------------------------------------------------------------------------
+def arch_group(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int]:
+    """(group kinds, n_groups)."""
+    if cfg.is_hybrid:
+        k = cfg.hybrid_attn_every
+        assert cfg.num_layers % k == 0
+        return ("ssm",) * k + ("shared",), cfg.num_layers // k
+    if cfg.is_ssm:
+        return ("ssm",), cfg.num_layers
+    if cfg.is_moe:
+        if cfg.moe_every > 1:
+            assert cfg.num_layers % cfg.moe_every == 0
+            return ("dense",) * (cfg.moe_every - 1) + ("moe",), \
+                cfg.num_layers // cfg.moe_every
+        return ("moe",), cfg.num_layers
+    return ("dense",), cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# MLP
+def mlp_init(key, cfg: ModelConfig, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    gated = cfg.act == "silu"
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], D, F, dtype),
+         "w2": dense_init(ks[1], F, D, dtype)}
+    if gated:
+        p["w3"] = dense_init(ks[2], D, F, dtype)
+    return p
+
+
+def mlp_specs(cfg: ModelConfig, planner) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    fs, tp = planner.axes.fsdp, planner.axes.tensor
+    s = {"w1": planner.spec((D, F), [fs, tp], "w1"),
+         "w2": planner.spec((F, D), [tp, fs], "w2")}
+    if cfg.act == "silu":
+        s["w3"] = planner.spec((D, F), [fs, tp], "w3")
+    return s
+
+
+def mlp_block(params: dict, ctx: ModelContext, x: jax.Array) -> jax.Array:
+    act = activation_fn(ctx.cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, params["w1"])
+    h = ctx.act(h, "batch", None, "tensor")
+    h = act(h)
+    if "w3" in params:
+        h = h * jnp.einsum("bsd,df->bsf", x, params["w3"])
+    return jnp.einsum("bsf,fd->bsd", h, params["w2"])
+
+
+# ---------------------------------------------------------------------------
+# sub-layer init / specs
+def sublayer_init(key, cfg: ModelConfig, dtype, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"ln1": norm_init(cfg, cfg.d_model),
+                "ssm": ssm_mod.mamba_init(ks[0], cfg, dtype)}
+    if kind == "dec":    # whisper decoder layer (self + cross + mlp)
+        return {"ln1": norm_init(cfg, cfg.d_model),
+                "attn": attn_init(ks[0], cfg, dtype),
+                "ln_x": norm_init(cfg, cfg.d_model),
+                "cross": attn_init(ks[1], cfg, dtype),
+                "ln2": norm_init(cfg, cfg.d_model),
+                "mlp": mlp_init(ks[2], cfg, dtype)}
+    p = {"ln1": norm_init(cfg, cfg.d_model),
+         "attn": attn_init(ks[0], cfg, dtype)}
+    if kind == "moe":
+        p["ln2"] = norm_init(cfg, cfg.d_model)
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:                # dense / shared / enc
+        if not cfg.parallel_block:
+            p["ln2"] = norm_init(cfg, cfg.d_model)
+        p["mlp"] = mlp_init(ks[1], cfg, dtype)
+    return p
+
+
+def sublayer_specs(cfg: ModelConfig, planner, kind: str) -> dict:
+    def nspec(_):
+        return {"scale": P()} if cfg.norm == "rmsnorm" else \
+            {"scale": P(), "bias": P()}
+    if kind == "ssm":
+        return {"ln1": nspec(0), "ssm": ssm_mod.mamba_specs(cfg, planner)}
+    if kind == "dec":
+        return {"ln1": nspec(0), "attn": attn_specs(cfg, planner),
+                "ln_x": nspec(0), "cross": attn_specs(cfg, planner),
+                "ln2": nspec(0), "mlp": mlp_specs(cfg, planner)}
+    s = {"ln1": nspec(0), "attn": attn_specs(cfg, planner)}
+    if kind == "moe":
+        s["ln2"] = nspec(0)
+        s["moe"] = moe_mod.moe_specs(cfg, planner)
+    else:
+        if not cfg.parallel_block:
+            s["ln2"] = nspec(0)
+        s["mlp"] = mlp_specs(cfg, planner)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# sub-layer forward (train path; cache handled in serve path below)
+def run_sublayer(kind: str, params: dict, ctx: ModelContext, x: jax.Array,
+                 positions: jax.Array, enc_out: Optional[jax.Array] = None,
+                 cache: Optional[dict] = None,
+                 cache_index: Optional[jax.Array] = None,
+                 causal: bool = True, use_rope: bool = True
+                 ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Returns (x_out, aux_loss, new_cache)."""
+    cfg = ctx.cfg
+    zero = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h = apply_norm(cfg, params["ln1"], x)
+        y, new_cache = ssm_mod.mamba_block(params["ssm"], ctx, h, cache)
+        if ctx.mode == "train":
+            y = ctx.resid(y)
+        return x + y, zero, new_cache
+    if kind == "dec":
+        h = apply_norm(cfg, params["ln1"], x)
+        a, new_cache = attention_block(
+            params["attn"], ctx, h, positions, causal=True, cache=cache,
+            cache_index=cache_index, use_rope=False)
+        x = x + a
+        h = apply_norm(cfg, params["ln_x"], x)
+        if cache is not None and "ck" in cache:
+            kv = {"k": cache["ck"], "v": cache["cv"]}
+        else:
+            kv = encode_cross_kv(params["cross"], cfg, enc_out)
+        c = cross_attention_block(params["cross"], ctx, h, enc_kv=kv)
+        x = x + c
+        h = apply_norm(cfg, params["ln2"], x)
+        x = x + mlp_block(params["mlp"], ctx, h)
+        if new_cache is not None:
+            new_cache = dict(new_cache, ck=kv["k"], cv=kv["v"])
+        return x, zero, new_cache
+    # dense / moe / shared / enc
+    sp = ctx.resid if ctx.mode == "train" else (lambda t: t)
+    h = apply_norm(cfg, params["ln1"], x)
+    a, new_cache = attention_block(
+        params["attn"], ctx, h, positions, causal=causal, cache=cache,
+        cache_index=cache_index, use_rope=use_rope)
+    # constrain TP-contraction outputs to the sequence-parallel layout at
+    # the point of production: GSPMD then emits reduce-scatter (+ the
+    # all-gather already inside the next layer's projections) instead of a
+    # full all-reduce — half the wire bytes per sub-layer (§Perf).
+    a = sp(a)
+    if kind == "moe":
+        x = x + a
+        h = apply_norm(cfg, params["ln2"], x)
+        m, aux = moe_mod.moe_block(params["moe"], ctx, h)
+        return x + sp(m), aux, new_cache
+    if cfg.parallel_block and kind in ("dense", "shared"):
+        m = sp(mlp_block(params["mlp"], ctx, h))  # same ln1 input (cohere)
+        return x + a + m, zero, new_cache
+    x = x + a
+    h = apply_norm(cfg, params["ln2"], x)
+    x = x + sp(mlp_block(params["mlp"], ctx, h))
+    return x, zero, new_cache
+
+
+# ---------------------------------------------------------------------------
+# parameter tree
+def init_params(key, cfg: ModelConfig, dtype) -> Params:
+    group, n_groups = arch_group(cfg)
+    ks = jax.random.split(key, 8)
+    p: Params = {"embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                     dtype),
+                 "final_norm": norm_init(cfg, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype)
+    if cfg.frontend != "none":
+        p["frontend"] = frontends.frontend_init(ks[2], cfg, dtype)
+
+    def stack_init(subkey, kind, n):
+        keys = jax.random.split(subkey, n)
+        return jax.vmap(lambda k: sublayer_init(k, cfg, dtype, kind))(keys)
+
+    groups: Params = {}
+    gk = jax.random.split(ks[3], len(group))
+    for j, kind in enumerate(group):
+        if kind == "shared":
+            continue
+        groups[f"sub_{j}"] = stack_init(gk[j], kind, n_groups)
+    p["groups"] = groups
+    if "shared" in group:
+        p["shared"] = sublayer_init(ks[4], cfg, dtype, "shared")
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(ks[5], cfg.encoder_layers)
+        p["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: sublayer_init(k, cfg, dtype, "enc"))(enc_keys),
+            "final_norm": norm_init(cfg, cfg.d_model),
+        }
+        # decoder layers are the scanned groups but of kind "dec"
+        p["groups"] = {"sub_0": stack_init(gk[0], "dec", cfg.num_layers)}
+    return p
+
+
+def param_specs(cfg: ModelConfig, planner) -> Params:
+    group, n_groups = arch_group(cfg)
+    fs, tp = planner.axes.fsdp, planner.axes.tensor
+    V, D = cfg.padded_vocab, cfg.d_model
+    nspec = {"scale": P()} if cfg.norm == "rmsnorm" else \
+        {"scale": P(), "bias": P()}
+    s: Params = {"embed": planner.spec((V, D), [tp, fs], "embed"),
+                 "final_norm": dict(nspec)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = planner.spec((V, D), [tp, fs], "unembed")
+    if cfg.frontend != "none":
+        s["frontend"] = frontends.frontend_specs(cfg, planner)
+
+    def stacked(spec_tree):
+        return jax.tree.map(lambda sp: P(*((None,) + tuple(sp))), spec_tree,
+                            is_leaf=lambda v: isinstance(v, P))
+
+    groups: Params = {}
+    for j, kind in enumerate(group):
+        if kind == "shared":
+            continue
+        groups[f"sub_{j}"] = stacked(sublayer_specs(cfg, planner, kind))
+    s["groups"] = groups
+    if "shared" in group:
+        s["shared"] = sublayer_specs(cfg, planner, "shared")
+    if cfg.is_encoder_decoder:
+        s["encoder"] = {
+            "layers": stacked(sublayer_specs(cfg, planner, "enc")),
+            "final_norm": dict(nspec),
+        }
+        s["groups"] = {"sub_0": stacked(sublayer_specs(cfg, planner, "dec"))}
+    return s
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+def embed_tokens(params: Params, ctx: ModelContext, tokens: jax.Array,
+                 frames: Optional[jax.Array] = None,
+                 patches: Optional[jax.Array] = None) -> jax.Array:
+    cfg = ctx.cfg
+    x = params["embed"][tokens]
+    if cfg.frontend == "vision_stub" and patches is not None:
+        x = frontends.merge_patches(params["frontend"], cfg, x, patches)
+    if cfg.is_encoder_decoder:
+        x = x + sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    if ctx.mode == "train":
+        return ctx.resid(x)
+    return ctx.act(x, "batch", None, None)
+
+
+def unembed(params: Params, ctx: ModelContext, h: jax.Array) -> jax.Array:
+    table = params["embed"] if ctx.cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,vd->bsv", h, table)
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+def encode(params: Params, ctx: ModelContext, frames: jax.Array) -> jax.Array:
+    cfg = ctx.cfg
+    x = frontends.embed_frames(params["frontend"], cfg, frames)
+    x = ctx.act(x, "batch", None, None)
+    enc = params["encoder"]
+    wrapped = ctx.wrap("enc_layer", functools.partial(_enc_layer, ctx))
+
+    def body(carry, lp):
+        return wrapped(lp, carry, jnp.zeros((), jnp.int32)), None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"], unroll=_unroll())
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+def _enc_layer(ctx, lp, x, _pos):
+    y, _, _ = run_sublayer("enc", lp, ctx, x,
+                           positions=jnp.zeros((x.shape[0], x.shape[1]),
+                                               jnp.int32),
+                           causal=False, use_rope=False)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# train forward
+def forward_train(params: Params, ctx: ModelContext, tokens: jax.Array,
+                  positions: jax.Array,
+                  frames: Optional[jax.Array] = None,
+                  patches: Optional[jax.Array] = None,
+                  stash_groups: Optional[int] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B,S,D), aux_loss)."""
+    cfg = ctx.cfg
+    group, n_groups = arch_group(cfg)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, ctx, frames)
+        group = ("dec",)
+
+    x = embed_tokens(params, ctx, tokens, frames, patches)
+    use_rope = not cfg.is_encoder_decoder
+
+    wrapped = {k: ctx.wrap(f"{k}_layer",
+                           functools.partial(_train_sublayer, ctx, k,
+                                             use_rope))
+               for k in set(group)}
+
+    def make_body(wrap: bool):
+        def body(carry, gp):
+            x, aux = carry
+            for j, kind in enumerate(group):
+                p = params["shared"] if kind == "shared" else gp[f"sub_{j}"]
+                fn = wrapped[kind] if wrap else \
+                    functools.partial(_train_sublayer, ctx, kind, use_rope)
+                if cfg.is_encoder_decoder:
+                    y, a = fn(p, x, positions, enc_out)
+                else:
+                    y, a = fn(p, x, positions)
+                x, aux = ctx.resid(y), aux + a
+            return (x, aux), None
+        return body
+
+    stacked = params["groups"]
+    if stash_groups is None:
+        stash_groups = n_groups
+    g1 = max(0, min(n_groups, stash_groups))
+    aux = jnp.zeros((), jnp.float32)
+    if g1 > 0:
+        p1 = jax.tree.map(lambda l: l[:g1], stacked)
+        (x, aux), _ = jax.lax.scan(make_body(True), (x, aux), p1,
+                                   unroll=_unroll())
+    if g1 < n_groups:
+        p2 = jax.tree.map(lambda l: l[g1:], stacked)
+        (x, aux), _ = jax.lax.scan(make_body(False), (x, aux), p2,
+                                   unroll=_unroll())
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, aux
+
+
+def _train_sublayer(ctx, kind, use_rope, p, x, positions, enc_out=None):
+    y, aux, _ = run_sublayer(kind, p, ctx, x, positions, enc_out=enc_out,
+                             use_rope=use_rope)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# serve forward (prefill S>1 / decode S==1) against stacked caches
+def forward_serve(params: Params, ctx: ModelContext, tokens: jax.Array,
+                  positions: jax.Array, caches: Params,
+                  cache_index: jax.Array,
+                  frames: Optional[jax.Array] = None,
+                  patches: Optional[jax.Array] = None,
+                  enc_out: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Params]:
+    cfg = ctx.cfg
+    group, n_groups = arch_group(cfg)
+    if cfg.is_encoder_decoder:
+        group = ("dec",)
+        if enc_out is None and frames is not None:
+            enc_out = encode_infer(params, ctx, frames)
+
+    x = embed_tokens(params, ctx, tokens, frames, patches)
+    if cfg.is_encoder_decoder and tokens.shape[1] == 1:
+        # decode: positional encoding at the current index
+        x = (params["embed"][tokens] +
+             sinusoidal_pos(1, cfg.d_model, offset=cache_index
+                            ).astype(x.dtype)[None])
+        x = ctx.act(x, "batch", None, None)
+    use_rope = not cfg.is_encoder_decoder
+
+    def body(x, xs):
+        gp, cache_g = xs
+        new_g = {}
+        for j, kind in enumerate(group):
+            p = params["shared"] if kind == "shared" else gp[f"sub_{j}"]
+            c = cache_g.get(f"sub_{j}")
+            x, _, nc = run_sublayer(kind, p, ctx, x, positions,
+                                    enc_out=enc_out, cache=c,
+                                    cache_index=cache_index,
+                                    use_rope=use_rope)
+            if nc is not None:
+                new_g[f"sub_{j}"] = nc
+        return x, new_g
+
+    x, new_caches = jax.lax.scan(body, x, (params["groups"], caches),
+                                 unroll=_unroll())
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, new_caches
+
+
+def encode_infer(params: Params, ctx: ModelContext, frames: jax.Array
+                 ) -> jax.Array:
+    cfg = ctx.cfg
+    x = frontends.embed_frames(params["frontend"], cfg, frames)
+    x = ctx.act(x, "batch", None, None)
+    enc = params["encoder"]
+
+    def body(carry, lp):
+        y = _enc_layer(ctx, lp, carry, None)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"], unroll=_unroll())
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# caches
+def init_caches(cfg: ModelConfig, batch: int, seq: int, dtype) -> Params:
+    """Stacked (n_groups, ...) caches matching forward_serve's scan."""
+    group, n_groups = arch_group(cfg)
+    if cfg.is_encoder_decoder:
+        group = ("dec",)
+
+    def one(kind):
+        if kind == "ssm":
+            return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        c = init_kv_cache(cfg, batch, seq, dtype)
+        if kind == "dec":
+            K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            c["ck"] = jnp.zeros((batch, cfg.frontend_tokens, K, hd), dtype)
+            c["cv"] = jnp.zeros((batch, cfg.frontend_tokens, K, hd), dtype)
+        return c
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_groups,) + l.shape), tree)
+
+    return {f"sub_{j}": stack(one(kind))
+            for j, kind in enumerate(group) if kind != "none"}
+
+
+def cache_specs(cfg: ModelConfig, planner, batch: int, seq: int) -> Params:
+    """Pooled-KV sharding for serve caches: batch over data, sequence over
+    'model' (the paper's technique applied to inference: the KV cache lives
+    striped across the pooled HBM)."""
+    group, n_groups = arch_group(cfg)
+    if cfg.is_encoder_decoder:
+        group = ("dec",)
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    b, tp = planner.axes.batch, planner.axes.tensor
+
+    def one(kind):
+        if kind == "ssm":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            return {
+                "conv": planner.spec(
+                    (n_groups, batch, cfg.ssm_conv_width - 1, conv_dim),
+                    [None, b, None, tp], "conv_cache"),
+                "ssm": planner.spec(
+                    (n_groups, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                     cfg.ssm_state), [None, b, tp, None, None], "ssm_cache"),
+            }
+        kv = planner.spec((n_groups, batch, seq, K, hd),
+                          [None, b, tp, None, None], "kv_cache")
+        c = {"k": kv, "v": kv}
+        if kind == "dec":
+            ckv = planner.spec((n_groups, batch, cfg.frontend_tokens, K, hd),
+                               [None, b, None, None, None], "cross_cache")
+            c["ck"] = ckv
+            c["cv"] = ckv
+        return c
+
+    return {f"sub_{j}": one(kind)
+            for j, kind in enumerate(group) if kind != "none"}

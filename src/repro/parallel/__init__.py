@@ -1,0 +1,1 @@
+from repro.parallel.sharding import Axes, ShardingPlanner, logical_to_spec

@@ -1,0 +1,89 @@
+"""Pod-axis pipeline parallelism (optional alternative to pod-DP).
+
+The production mesh runs data-parallel over the 'pod' axis by default
+(gradient all-reduce over DCN only — the paper's intra-node scope maps to
+in-pod traffic, MPI/IB maps to DCN).  For models whose *state* exceeds one
+pod even pooled, the pod axis can instead run a GPipe-style pipeline: each
+pod owns a contiguous stage of layers and microbatches stream through via
+``ppermute`` over DCN.
+
+``pipeline_apply`` is the generic combinator (stage_fn is any layer-stack
+function); it is exercised by tests/test_pipeline.py on a toy stack and is
+wired into launch/train.py behind ``--pipeline``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+Pytree = Any
+
+
+def pipeline_apply(stage_fn: Callable, stage_params: Pytree, x: jax.Array,
+                   n_micro: int, axis_name: str = "pod") -> jax.Array:
+    """Run a pipeline over ``axis_name`` *inside shard_map*.
+
+    stage_fn(params, x) -> y, applied by each member to its own stage.
+    stage_params: this member's stage weights (already sharded by stage).
+    x: (n_micro * mb, ...) microbatchable input — every member enters with
+    the same x; member 0's stage consumes it first.
+
+    GPipe schedule with S stages and M microbatches: T = M + S - 1 ticks.
+    At each tick a member runs its stage on the microbatch it received and
+    passes the activation to the next member.  Bubble fraction
+    (S-1)/(M+S-1) — pick n_micro >> n_stages.
+    """
+    S = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    if S == 1:
+        return stage_fn(stage_params, x)
+    M = n_micro
+    assert x.shape[0] % M == 0
+    micro = x.reshape((M, x.shape[0] // M) + x.shape[1:])
+    perm = [(i, (i + 1) % S) for i in range(S)]
+
+    T = M + S - 1
+    buf = jnp.zeros_like(micro[0])
+    outs = jnp.zeros_like(micro)
+
+    def tick(t, carry):
+        buf, outs = carry
+        # stage 0 injects microbatch t (if any); others use what arrived
+        inject = micro[jnp.clip(t, 0, M - 1)]
+        x_in = jnp.where(me == 0, inject, buf)
+        y = stage_fn(stage_params, x_in)
+        # last stage records its result for microbatch (t - (S-1))
+        out_idx = jnp.clip(t - (S - 1), 0, M - 1)
+        write = jnp.logical_and(me == S - 1, t >= S - 1)
+        outs = jax.lax.cond(
+            write,
+            lambda o: jax.lax.dynamic_update_index_in_dim(o, y, out_idx, 0),
+            lambda o: o, outs)
+        buf = jax.lax.ppermute(y, axis_name, perm)
+        return buf, outs
+
+    buf, outs = jax.lax.fori_loop(0, T, tick, (buf, outs))
+    # results live on the last stage; broadcast them to every member so the
+    # caller sees a replicated output (loss is computed everywhere).
+    outs = jax.lax.psum(jnp.where(me == S - 1, outs, jnp.zeros_like(outs)),
+                        axis_name)
+    return outs.reshape(x.shape)
+
+
+def make_pipelined(mesh: Mesh, stage_fn: Callable, n_micro: int,
+                   axis_name: str = "pod",
+                   stage_param_spec: P = P("pod")) -> Callable:
+    """shard_map wrapper: (stacked stage params, x) -> y."""
+
+    def inner(stage_params, x):
+        sp = jax.tree.map(lambda l: l[0], stage_params)  # my stage (size-1)
+        return pipeline_apply(stage_fn, sp, x, n_micro, axis_name)
+
+    return shard_map(inner, mesh=mesh,
+                     in_specs=(stage_param_spec, P()),
+                     out_specs=P(),
+                     check_vma=False)

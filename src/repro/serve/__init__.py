@@ -1,0 +1,1 @@
+"""Serving: batched engine over pooled KV caches."""

@@ -1,0 +1,178 @@
+"""Batched serving engine: continuous prefill/decode over pooled KV caches.
+
+The paper's technique applied to inference (DESIGN.md §6): the KV cache is
+sharded over the mesh's pooled HBM (sequence dim over 'model'), so a
+524k-token cache that exceeds one chip's memory serves from the pool with
+the decode attention executed *distributed* (flash-decode: partial softmax
+per shard + psum) — no cache migration, the compute goes to the data.
+
+The engine itself is a straightforward batched scheduler: fixed decode
+batch slots, prompt prefill into a free slot, greedy/temperature sampling,
+EOS / max-token retirement.  Designed to be driven step-by-step (tests) or
+via ``run()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (S_prompt,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                   # -1: never
+    out_tokens: Optional[List[int]] = None
+
+    def __post_init__(self):
+        if self.out_tokens is None:
+            self.out_tokens = []
+
+
+@dataclasses.dataclass
+class SlotState:
+    req: Optional[Request] = None
+    length: int = 0                    # tokens currently in this slot's cache
+
+
+class Engine:
+    """Fixed-slot batched engine.  batch = number of concurrent sequences;
+    max_len = cache capacity per sequence."""
+
+    def __init__(self, model: Model, params, batch: int, max_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.batch, self.max_len = batch, max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.caches = model.init_cache(batch, max_len)
+        self.slots = [SlotState() for _ in range(batch)]
+        self.pending: List[Request] = []
+        self.finished: List[Request] = []
+        self._decode = jax.jit(model.decode_step)
+        cfg = model.cfg
+
+        def prefill_one(params, caches, tokens, positions, slot):
+            """Prefill one sequence into slot `slot` of the batched cache."""
+            ctx = model.ctx("prefill")
+            from repro.models import transformer as tfm
+            one_cache = jax.tree.map(
+                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+                caches)
+            h, new_cache = tfm.forward_serve(
+                params, ctx, tokens, positions, one_cache,
+                cache_index=jnp.zeros((), jnp.int32))
+            logits = tfm.unembed(params, ctx, h[:, -1:, :])[:, 0, :]
+            caches = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), slot, axis=1),
+                caches, new_cache)
+            return logits[0], caches
+
+        self._prefill = jax.jit(prefill_one)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                return i
+        return None
+
+    def _sample(self, logits: jax.Array) -> int:
+        if self.temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / self.temperature))
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine step: admit pending prompts, then one decode step for
+        every active slot.  Returns number of active slots."""
+        # admit
+        while self.pending:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            req = self.pending.pop(0)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            S = toks.shape[1]
+            pos = self._positions(S, 0, 1)
+            logits, self.caches = self._prefill(
+                self.params, self.caches, toks, pos, slot)
+            nxt = self._sample(logits)
+            req.out_tokens.append(nxt)
+            self.slots[slot] = SlotState(req=req, length=S)
+
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return 0
+
+        # batched decode: every active slot advances by one token; idle
+        # slots decode a dummy token at index 0 (masked out).
+        tok = np.zeros((self.batch, 1), np.int32)
+        for i in active:
+            tok[i, 0] = self.slots[i].req.out_tokens[-1]
+        # single shared index is the max length (cache updates per-slot use
+        # the same index; slots admitted together share it). For mixed
+        # lengths we decode per unique length group.
+        groups: Dict[int, List[int]] = {}
+        for i in active:
+            groups.setdefault(self.slots[i].length, []).append(i)
+        for length, idxs in groups.items():
+            pos = self._positions(1, length, self.batch)
+            logits, new_caches = self._decode(
+                self.params, jnp.asarray(tok), pos, self.caches,
+                jnp.int32(length))
+            # merge: only the slots of this length group take the new cache
+            # (other slots' caches must not see the dummy write at `length`)
+            mask = np.zeros((self.batch,), bool)
+            mask[idxs] = True
+            m = jnp.asarray(mask)
+
+            def merge(old, new):
+                # cache leaves are (n_groups, B, ...): batch is dim 1
+                mm = m.reshape((1, self.batch) + (1,) * (old.ndim - 2))
+                return jnp.where(mm, new.astype(old.dtype), old)
+
+            self.caches = jax.tree.map(merge, self.caches, new_caches)
+            for i in idxs:
+                s = self.slots[i]
+                nxt = self._sample(logits[i])
+                s.req.out_tokens.append(nxt)
+                s.length += 1
+                done = (len(s.req.out_tokens) >= s.req.max_new_tokens
+                        or nxt == s.req.eos_id
+                        or s.length + 1 >= self.max_len)
+                if done:
+                    self.finished.append(s.req)
+                    self.slots[i] = SlotState()
+        return len(active)
+
+    def _positions(self, S: int, offset: int, batch: int):
+        if self.model.cfg.mrope_sections:
+            return jnp.broadcast_to(
+                jnp.arange(offset, offset + S, dtype=jnp.int32)[None, None],
+                (3, batch, S))
+        return jnp.broadcast_to(
+            jnp.arange(offset, offset + S, dtype=jnp.int32)[None],
+            (batch, S))
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.pending:
+                break
+        return self.finished

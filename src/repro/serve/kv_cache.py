@@ -1,0 +1,58 @@
+"""Pooled KV-cache utilities: capacity accounting + shardings.
+
+The cache layout itself is built by models/transformer.init_caches /
+cache_specs (sequence dim striped over the 'model' axis = the paper's
+pooled memory applied to inference).  This module answers the sizing
+questions: does a cache fit one chip?  the pool?  what does pooling buy?
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MeshPlan, ModelConfig
+from repro import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheFootprint:
+    total_bytes: float           # global cache bytes
+    per_device_unpooled: float   # if each chip held its batch shard fully
+    per_device_pooled: float     # with the sequence dim striped over 'model'
+
+    def fits(self, chip: hw.Chip = hw.TPU_V5E) -> bool:
+        return self.per_device_pooled <= chip.hbm_bytes
+
+
+def kv_cache_footprint(cfg: ModelConfig, plan: MeshPlan, batch: int,
+                       seq: int, dtype_bytes: int = 2) -> CacheFootprint:
+    if cfg.is_ssm:
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        per_layer = batch * ((cfg.ssm_conv_width - 1) * conv_dim +
+                             cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state)
+        total = cfg.num_layers * per_layer * dtype_bytes
+    else:
+        K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        n_sites = cfg.num_layers
+        if cfg.is_hybrid:
+            n_sites = cfg.num_layers // cfg.hybrid_attn_every  # shared sites
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            ssm_bytes = cfg.num_layers * batch * (
+                (cfg.ssm_conv_width - 1) * conv_dim +
+                cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state) * dtype_bytes
+        else:
+            ssm_bytes = 0.0
+        total = n_sites * 2 * batch * seq * K * hd * dtype_bytes + \
+            (ssm_bytes if cfg.is_hybrid else 0)
+    dp = plan.axis_size("data") * plan.axis_size("pod")
+    tp = plan.axis_size("model")
+    b_shard = dp if batch % dp == 0 else 1
+    s_shard = tp if seq % tp == 0 else 1
+    return CacheFootprint(
+        total_bytes=total,
+        per_device_unpooled=total / b_shard,
+        per_device_pooled=total / (b_shard * s_shard),
+    )

@@ -1,0 +1,8 @@
+"""The paper's evaluation, reproduced: analytic event-timeline simulator
+over the DC/HC/MC system design points (§IV-§V), the 8 Table-III workloads,
+and the Table-IV power model."""
+from repro.sim.simulator import StepResult, simulate, speedup_table, harmonic_mean
+from repro.sim.topology import (ALL_SYSTEMS, SYSTEMS_BY_NAME, DC_DLA,
+                                DC_DLA_GEN4, DC_DLA_O, HC_DLA, MC_DLA_B,
+                                MC_DLA_L, MC_DLA_S, SystemConfig)
+from repro.sim.workloads import WORKLOADS, CNNS, RNNS

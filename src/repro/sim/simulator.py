@@ -1,0 +1,167 @@
+"""Event-driven timeline simulator — the paper's evaluation methodology
+(§IV): fixed-bandwidth memory channels, coarse-grained bulk DMA transfers,
+double-buffered overlap of compute / synchronization / virtualization.
+
+Three concurrent engines per device, as in the paper's system model:
+  * the compute engine (PE array; time = max(FLOP-limited, HBM-limited)),
+  * the DMA engine driving stash/prefetch to the backing store
+    (host over PCIe for DC/HC, memory-nodes over the ring for MC),
+  * the communication engine running ring collectives for DP/MP sync.
+
+The forward pass stashes each layer's input feature map after its last use
+(double-buffered: compute may run ahead of the DMA queue by one layer —
+vDNN's memory-overlaying window); the backward pass prefetches one layer
+ahead.  Cheap layers are recomputed, not stashed (footnote 4 — already
+folded into the workload DAGs).
+
+Outputs reproduce the paper's figures: the Fig. 11 latency breakdown (raw
+per-category sums), Fig. 12 CPU-bandwidth usage, Fig. 13 speedups, Fig. 14
+batch sensitivity, and §V-D scalability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core.dag import LayerDAG
+from repro.sim.topology import SystemConfig
+
+PE_EFFICIENCY = 0.5          # achievable fraction of peak on dense GEMM/conv
+
+
+@dataclasses.dataclass
+class StepResult:
+    total: float                 # end-to-end iteration time (s)
+    compute: float               # raw compute latency (Fig 11 category a)
+    sync: float                  # raw synchronization latency (b)
+    virt: float                  # raw virtualization latency (c)
+    virt_bytes: float            # bytes moved to/from backing store
+    cpu_bw_frac: float           # fraction of host memory BW consumed
+
+    @property
+    def breakdown(self) -> Tuple[float, float, float]:
+        return (self.compute, self.sync, self.virt)
+
+
+def _compute_time(flops: float, bytes_touched: float,
+                  sys: SystemConfig) -> float:
+    dev = sys.device
+    return max(flops / (dev.peak_flops * PE_EFFICIENCY),
+               bytes_touched / dev.hbm_bw)
+
+
+def simulate(dag: LayerDAG, sys: SystemConfig, parallel: str = "dp",
+             n_devices: int = None, virtualize: bool = True) -> StepResult:
+    """One training iteration of `dag` on `sys` under dp/mp parallelism."""
+    n = n_devices or sys.n_devices
+    virt_bw = sys.effective_virt_bw(n)
+    L = dag.num_layers
+    layers = dag.layers
+
+    # per-device shares
+    def c_fwd(i):
+        f = layers[i].flops_fwd / n
+        by = (layers[i].saved_bytes + layers[i].weight_bytes) / n * 2
+        return _compute_time(f, by, sys)
+
+    def c_bwd(i):
+        return 2.0 * c_fwd(i)
+
+    def stash_bytes(i):
+        return layers[i].saved_bytes / n if virtualize and not sys.oracle \
+            else 0.0
+
+    # ---------------- forward ----------------
+    t = 0.0                      # compute engine clock
+    dma = 0.0                    # DMA engine clock
+    comm = 0.0                   # comm engine clock
+    stash_done = [0.0] * L
+    raw_virt = 0.0
+    raw_sync = 0.0
+    raw_compute = 0.0
+
+    for i in range(L):
+        # vDNN window: layer i's compute waits for layer i-2's stash
+        if i >= 2 and stash_bytes(i - 2) > 0:
+            t = max(t, stash_done[i - 2])
+        ct = c_fwd(i)
+        raw_compute += ct
+        t += ct
+        if parallel == "mp" and layers[i].fc and n > 1:
+            # Krizhevsky one-weird-trick MP: only FC/recurrent layers are
+            # feature-split; all-gather the FULL feature map before the
+            # next layer (blocking data dependency)
+            ag = sys.allgather_time(layers[i].saved_bytes)
+            raw_sync += ag
+            t += ag
+        sb = stash_bytes(i)
+        if sb > 0:
+            dma = max(dma, t) + sb / virt_bw
+            stash_done[i] = dma
+            raw_virt += sb / virt_bw
+
+    # ---------------- backward ----------------
+    fetch_done = [0.0] * L
+    # prefetch pipeline primed with the last layer's X
+    if stash_bytes(L - 1) > 0:
+        dma = max(dma, t)
+        dma += stash_bytes(L - 1) / virt_bw
+        fetch_done[L - 1] = dma
+        raw_virt += stash_bytes(L - 1) / virt_bw
+
+    for i in range(L - 1, -1, -1):
+        # prefetch one ahead (layer i-1) as soon as bwd of layer i starts
+        if i >= 1 and stash_bytes(i - 1) > 0:
+            dma = max(dma, t) + stash_bytes(i - 1) / virt_bw
+            fetch_done[i - 1] = dma
+            raw_virt += stash_bytes(i - 1) / virt_bw
+        if stash_bytes(i) > 0:
+            t = max(t, fetch_done[i])
+        ct = c_bwd(i)
+        raw_compute += ct
+        t += ct
+        if n == 1:
+            pass                                  # single device: no sync
+        elif parallel == "mp" and layers[i].fc:
+            # dX partial sums (each device holds dX of the FULL input of its
+            # feature shard) must reduce before layer i-1's backward; the
+            # split weights need no dW sync.
+            ar = sys.allreduce_time(layers[i].saved_bytes)
+            raw_sync += ar
+            t += ar
+        elif layers[i].weight_bytes > 0:
+            # data-parallel layers (all of DP mode; conv layers of MP mode):
+            # dW all-reduce, overlapped with the remaining backward
+            ar = sys.allreduce_time(layers[i].weight_bytes)
+            raw_sync += ar
+            comm = max(comm, t) + ar
+
+    total = max(t, comm, dma)
+    cpu_frac = 0.0
+    if sys.virt_uses_cpu and total > 0:
+        moved = sum(stash_bytes(i) for i in range(L)) * 2 * n
+        cpu_frac = (moved / total) / (sys.cpu_socket_bw * sys.n_sockets)
+    return StepResult(total=total, compute=raw_compute, sync=raw_sync,
+                      virt=raw_virt, virt_bytes=sum(
+                          stash_bytes(i) for i in range(L)) * 2 * n,
+                      cpu_bw_frac=cpu_frac)
+
+
+# ---------------------------------------------------------------------------
+def speedup_table(workloads: Dict[str, LayerDAG], systems,
+                  parallel: str = "dp", baseline: str = "DC-DLA"
+                  ) -> Dict[str, Dict[str, float]]:
+    """Fig 13: per-workload speedup of every system over the baseline."""
+    out: Dict[str, Dict[str, float]] = {}
+    for wname, dag in workloads.items():
+        base = simulate(dag, [s for s in systems
+                              if s.name == baseline][0], parallel).total
+        out[wname] = {}
+        for s in systems:
+            r = simulate(dag, s, parallel)
+            out[wname][s.name] = base / r.total
+    return out
+
+
+def harmonic_mean(xs: List[float]) -> float:
+    return len(xs) / sum(1.0 / x for x in xs)

@@ -1,0 +1,1 @@
+"""Training substrate: optimizer, state, loop, checkpoints, fault handling."""

@@ -1,0 +1,147 @@
+"""Training loop: jitted train_step builder + the driver with gradient
+accumulation, checkpointing, fault handling, and metrics."""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.model import Model
+from repro.train import checkpoint as ckpt_mod
+from repro.train.optimizer import apply_adamw
+from repro.train.train_state import init_state, state_shardings
+
+log = logging.getLogger(__name__)
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+def make_train_step(model: Model, tc: TrainConfig
+                    ) -> Callable[[Pytree, Dict[str, jax.Array]],
+                                  Tuple[Pytree, Dict[str, jax.Array]]]:
+    """(state, batch) -> (state, metrics).
+
+    Gradient accumulation: when ``tc.grad_accum > 1`` the batch's leading
+    batch dim is split into microbatches scanned sequentially (activation
+    memory / accum trade-off — one of the §Perf knobs).
+    """
+
+    def loss(params, batch):
+        return model.loss_fn(params, batch)
+
+    def grads_of(params, batch):
+        if tc.grad_accum <= 1:
+            (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+            return g, l, metrics
+        n = tc.grad_accum
+
+        def micro(i, batch):
+            return jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:])[i]
+                if x.ndim >= 1 and x.shape[0] % n == 0 else x, batch)
+
+        def body(carry, i):
+            acc, ltot = carry
+            (l, _), g = jax.value_and_grad(loss, has_aux=True)(
+                params, micro(i, batch))
+            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                               acc, g)
+            return (acc, ltot + l), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (g, ltot), _ = jax.lax.scan(body, (zeros, jnp.float32(0)),
+                                    jnp.arange(n))
+        g = jax.tree.map(lambda x: x / n, g)
+        return g, ltot / n, {"loss": ltot / n,
+                             "aux_loss": jnp.float32(0),
+                             "tokens": jnp.float32(0)}
+
+    def train_step(state, batch):
+        g, l, metrics = grads_of(state["params"], batch)
+        params, opt, opt_metrics = apply_adamw(state["params"], g,
+                                               state["opt"], tc)
+        new_state = dict(state, params=params, opt=opt,
+                         step=state["step"] + 1)
+        metrics = dict(metrics, **opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(model: Model, tc: TrainConfig, batch_shardings=None):
+    step = make_train_step(model, tc)
+    if model.mesh is None:
+        return jax.jit(step, donate_argnums=0)
+    shardings = state_shardings(model, tc)
+    return jax.jit(step,
+                   in_shardings=(shardings, batch_shardings),
+                   out_shardings=(shardings, None),
+                   donate_argnums=0)
+
+
+# ---------------------------------------------------------------------------
+def train(model: Model, tc: TrainConfig, data_iter, *,
+          state: Optional[Pytree] = None,
+          fault_handler=None,
+          hooks: Optional[Dict[str, Callable]] = None) -> Pytree:
+    """The end-to-end driver (examples/train_*.py).
+
+    data_iter: yields (step_idx, batch) — resumable via its own state.
+    fault_handler: train.fault.FaultHandler (SIGTERM-safe checkpointing).
+    """
+    hooks = hooks or {}
+    step_fn = jit_train_step(model, tc)
+    mgr = ckpt_mod.CheckpointManager(tc.checkpoint_dir, keep=tc.keep_checkpoints)
+
+    start_step = 0
+    if state is None:
+        restored = mgr.restore_latest()
+        if restored is not None:
+            start_step, payload = restored
+            template = jax.eval_shape(
+                lambda: init_state(model, tc, jax.random.PRNGKey(tc.seed)))
+            state = ckpt_mod.to_device(payload["state"], template, model, tc)
+            if hasattr(data_iter, "set_state") and "data" in payload:
+                data_iter.set_state(payload["data"])
+            log.info("resumed from step %d", start_step)
+        else:
+            state = init_state(model, tc)
+
+    times = []
+    metrics = {}
+    for step_idx, batch in data_iter:
+        if step_idx < start_step:
+            continue
+        if step_idx >= tc.total_steps:
+            break
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        if fault_handler is not None:
+            fault_handler.observe_step(time.perf_counter() - t0)
+        times.append(time.perf_counter() - t0)
+
+        done = step_idx + 1
+        if done % tc.log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            log.info("step %d loss=%.4f grad_norm=%.3f lr=%.2e (%.1f ms)",
+                     done, m.get("loss", -1), m.get("grad_norm", -1),
+                     m.get("lr", 0), 1e3 * times[-1])
+            if "on_log" in hooks:
+                hooks["on_log"](done, m)
+        save_now = (done % tc.checkpoint_every == 0)
+        if fault_handler is not None and fault_handler.should_stop:
+            save_now = True
+        if save_now:
+            data_state = (data_iter.get_state()
+                          if hasattr(data_iter, "get_state") else None)
+            mgr.save(done, {"state": state, "data": data_state})
+        if fault_handler is not None and fault_handler.should_stop:
+            log.warning("preemption requested — checkpoint written, exiting")
+            break
+    return state, metrics

@@ -1,0 +1,53 @@
+"""Train state: params + optimizer moments + step + compression error."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+from repro.models.model import Model
+from repro.train.optimizer import init_opt_state, opt_state_specs
+
+Pytree = Any
+
+
+def init_state(model: Model, tc: TrainConfig, key=None) -> Pytree:
+    params = model.init(key if key is not None else
+                        jax.random.PRNGKey(tc.seed))
+    state = {
+        "params": params,
+        "opt": init_opt_state(params, model.memory.opt_state_bits),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if tc.grad_compress == "int8":
+        state["ef_err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def state_specs(model: Model, tc: TrainConfig) -> Pytree:
+    pspecs = model.param_specs()
+    s = {
+        "params": pspecs,
+        "opt": opt_state_specs(pspecs, model.memory.opt_state_bits),
+        "step": P(),
+    }
+    if tc.grad_compress == "int8":
+        s["ef_err"] = pspecs
+    return s
+
+
+def state_shardings(model: Model, tc: TrainConfig) -> Pytree:
+    assert model.mesh is not None
+    return jax.tree.map(lambda sp: NamedSharding(model.mesh, sp),
+                        state_specs(model, tc),
+                        is_leaf=lambda v: isinstance(v, P))
+
+
+def abstract_state(model: Model, tc: TrainConfig) -> Pytree:
+    """ShapeDtypeStruct state for the dry-run (no allocation)."""
+    return jax.eval_shape(lambda: init_state(model, tc,
+                                             jax.random.PRNGKey(0)))

@@ -1,0 +1,88 @@
+"""Config registry + analytic param counts for the 10 assigned archs."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, SHAPES_BY_NAME, get_arch, list_archs
+from repro.configs.registry import all_cells, cells_for
+
+# published (approximate) parameter counts, tolerance 12%
+EXPECTED_PARAMS = {
+    # the real c4ai-command-r-v01 is MHA (64 kv heads) at ~35B; the
+    # assignment pins GQA kv=8, which removes ~4.7B of K/V projections
+    "command-r-35b": 30.3e9,
+    "h2o-danube-1.8b": 1.8e9,
+    "starcoder2-7b": 7.2e9,
+    "smollm-135m": 135e6,
+    "whisper-medium": 769e6,
+    "llama4-maverick-400b": 400e9,
+    "mixtral-8x7b": 46.7e9,
+    "zamba2-2.7b": 2.7e9,
+    "qwen2-vl-2b": 1.6e9,       # LM backbone only (vision tower stubbed)
+    "mamba2-370m": 370e6,
+}
+
+ACTIVE_PARAMS = {
+    "llama4-maverick-400b": 17e9,
+    "mixtral-8x7b": 12.9e9,
+}
+
+
+def test_all_archs_registered():
+    assert len(list_archs()) == 10
+    assert set(EXPECTED_PARAMS) == set(list_archs())
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED_PARAMS))
+def test_param_counts(name):
+    cfg = get_arch(name)
+    n = cfg.param_count()
+    want = EXPECTED_PARAMS[name]
+    assert abs(n - want) / want < 0.12, (name, n, want)
+
+
+@pytest.mark.parametrize("name", sorted(ACTIVE_PARAMS))
+def test_active_params(name):
+    cfg = get_arch(name)
+    n = cfg.active_param_count()
+    want = ACTIVE_PARAMS[name]
+    assert abs(n - want) / want < 0.35, (name, n, want)
+    assert n < cfg.param_count()
+
+
+def test_shapes_assignment():
+    assert [s.name for s in SHAPES] == [
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    assert SHAPES_BY_NAME["train_4k"].seq_len == 4096
+    assert SHAPES_BY_NAME["train_4k"].global_batch == 256
+    assert SHAPES_BY_NAME["long_500k"].seq_len == 524_288
+    assert SHAPES_BY_NAME["long_500k"].mode == "decode"
+
+
+def test_cells_total_40():
+    cells = all_cells()
+    assert len(cells) == 40
+    runs = [c for c in cells if c[2] == "run"]
+    skips = [c for c in cells if c[2] != "run"]
+    # long_500k runs only for sub-quadratic archs (4 of 10)
+    assert len(skips) == 6
+    assert all(s[1].name == "long_500k" for s in skips)
+    assert len(runs) == 34
+
+
+def test_long500k_subquadratic_only():
+    for cfg, shape, status in all_cells():
+        if shape.name == "long_500k":
+            assert (status == "run") == cfg.sub_quadratic, cfg.name
+
+
+def test_reduced_configs():
+    for name in list_archs():
+        cfg = get_arch(name).reduced()
+        assert cfg.d_model <= 128 and cfg.num_layers <= 2 or cfg.is_hybrid
+        assert cfg.family == get_arch(name).family
+
+
+def test_get_arch_fuzzy():
+    assert get_arch("mixtral_8x7b").name == "mixtral-8x7b"
+    assert get_arch("smollm").name == "smollm-135m"
+    with pytest.raises(KeyError):
+        get_arch("nonexistent-model")

@@ -1,0 +1,155 @@
+"""core/: pool specs, policy planner, DAG, compression — incl. hypothesis
+property tests on the sharding planner's divisibility invariant."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, MemoryPlan, MeshPlan, SHAPES_BY_NAME, get_arch
+from repro.core import compress as comp
+from repro.core.dag import build_dag, model_flops
+from repro.core.policy import fetch_bandwidth, plan_memory
+from repro.core.pool import PoolAccountant, PoolAxes, pool_spec
+from repro.core.vdnn import split_layers, stash_fraction
+from repro.parallel.sharding import ShardingPlanner
+
+SINGLE = MeshPlan((16, 16), ("data", "model"))
+MULTI = MeshPlan((2, 16, 16), ("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------------------
+@hp.given(
+    dims=st.lists(st.integers(1, 8192), min_size=1, max_size=4),
+    plan=st.sampled_from([SINGLE, MULTI, MeshPlan((4, 2), ("data", "model")),
+                          MeshPlan((1,), ("data",))]),
+)
+@hp.settings(max_examples=200, deadline=None)
+def test_planner_specs_always_divisible(dims, plan):
+    """INVARIANT: every axis the planner assigns exactly divides its dim."""
+    planner = ShardingPlanner(plan)
+    assignment = [("data", "model")] * len(dims)
+    spec = planner.spec(dims, assignment, "prop")
+    for dim, part in zip(dims, tuple(spec)):
+        if part is None:
+            continue
+        axes = (part,) if isinstance(part, str) else part
+        size = 1
+        for a in axes:
+            size *= plan.axis_size(a)
+        assert dim % size == 0
+
+
+@hp.given(
+    b=st.sampled_from([1, 2, 16, 32, 256, 512]),
+    s=st.sampled_from([1, 128, 4096, 32768]),
+    d=st.sampled_from([576, 1024, 8192]),
+    placement=st.sampled_from(["bw_aware", "local"]),
+    plan=st.sampled_from([SINGLE, MULTI]),
+)
+@hp.settings(max_examples=100, deadline=None)
+def test_pool_spec_valid_and_nontrivial(b, s, d, placement, plan):
+    """The stash spec is always a valid sharding; when any dim divides the
+    model axis, the pool actually shards something."""
+    planner = ShardingPlanner(plan)
+    spec = pool_spec((b, s, d), planner, placement, batch_dim=0)
+    parts = tuple(spec)
+    for dim, part in zip((b, s, d), parts + (None,) * (3 - len(parts))):
+        if part is None:
+            continue
+        axes = (part,) if isinstance(part, str) else part
+        size = 1
+        for a in axes:
+            size *= plan.axis_size(a)
+        assert dim % size == 0
+    tp = plan.axis_size("model")
+    if s % tp == 0 or d % tp == 0:
+        assert any(p is not None for p in parts)
+
+
+# ---------------------------------------------------------------------------
+def test_pool_axes_and_capacity():
+    acct = PoolAccountant(SINGLE, MemoryPlan(placement="bw_aware"))
+    assert acct.pool_devices == 256
+    # a 1 TB pooled tensor costs 4 GB/device on a 256-chip pool
+    acct.alloc_pooled(1e12)
+    assert abs(acct.pooled_bytes - 1e12 / 256) < 1
+    assert acct.system_capacity() == pytest.approx(16e9 * 256)
+
+
+def test_fetch_bandwidth_orders():
+    bw_b = fetch_bandwidth(SINGLE, MemoryPlan(placement="bw_aware"))
+    bw_l = fetch_bandwidth(SINGLE, MemoryPlan(placement="local"))
+    assert bw_b >= bw_l > 0
+
+
+# ---------------------------------------------------------------------------
+def test_policy_modes():
+    dag = build_dag(get_arch("mixtral-8x7b"), SHAPES_BY_NAME["train_4k"])
+    state = 47e9 * 10
+    r_mcdla = plan_memory(dag, SINGLE, MemoryPlan(policy="mcdla"),
+                          model_state_bytes=state)
+    assert r_mcdla.count("keep") == 0           # paper: stash everything
+    assert r_mcdla.fits
+    r_auto = plan_memory(dag, SINGLE, MemoryPlan(policy="auto"),
+                         model_state_bytes=state)
+    assert r_auto.count("keep") > 0             # budget allows keeping
+    # tiny budget forces pooling
+    r_tight = plan_memory(dag, SINGLE,
+                          MemoryPlan(policy="auto", hbm_budget_gb=2.5),
+                          model_state_bytes=state)
+    assert r_tight.count("pool") + r_tight.count("recompute") > \
+        r_auto.count("pool") + r_auto.count("recompute")
+
+
+def test_stash_fraction_bounds():
+    dag = build_dag(get_arch("smollm-135m"), SHAPES_BY_NAME["train_4k"])
+    assert stash_fraction(dag, SINGLE, MemoryPlan(policy="mcdla")) == 1.0
+    assert stash_fraction(dag, SINGLE, MemoryPlan(policy="none")) == 0.0
+    f = stash_fraction(dag, SINGLE, MemoryPlan(policy="auto"),
+                       model_state_bytes=135e6 * 10)
+    assert 0.0 <= f <= 1.0
+    assert split_layers(30, f) <= 30
+
+
+# ---------------------------------------------------------------------------
+def test_dag_reuse_distance_monotone():
+    dag = build_dag(get_arch("starcoder2-7b"), SHAPES_BY_NAME["train_4k"])
+    sched = dag.schedule()
+    dists = [d for (_, _, d) in sched]
+    assert dists == sorted(dists, reverse=True)   # earlier layers wait longer
+
+
+def test_model_flops_moe_active():
+    cfg = get_arch("llama4-maverick-400b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    mf = model_flops(cfg, shape)
+    dense_equiv = 6.0 * cfg.param_count() * shape.global_batch * shape.seq_len
+    assert mf < 0.2 * dense_equiv                 # top-1 of 128 experts
+
+
+# ---------------------------------------------------------------------------
+@hp.given(st.integers(0, 10).flatmap(
+    lambda seed: st.just(seed)))
+@hp.settings(max_examples=20, deadline=None)
+def test_fp8_roundtrip_bounded_error(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64, 32)) * (seed + 1)
+    q, s = comp.fp8_compress(x)
+    y = comp.fp8_decompress(q, s, jnp.float32)
+    rel = float(jnp.linalg.norm(y - x) / (jnp.linalg.norm(x) + 1e-9))
+    assert rel < 0.06
+    assert q.dtype == jnp.float8_e4m3fn
+
+
+@hp.given(st.integers(0, 20))
+@hp.settings(max_examples=20, deadline=None)
+def test_int8_error_feedback_contracts(seed):
+    """EF property: quantize(g + err) keeps sum(sent + new_err) == g + err."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 3.0
+    err = jax.random.normal(jax.random.PRNGKey(seed + 1), (128,)) * 0.1
+    q, scale, new_err = comp.int8_ef_quantize(g, err)
+    sent = comp.int8_dequantize(q, scale)
+    np.testing.assert_allclose(np.asarray(sent + new_err),
+                               np.asarray(g + err), rtol=1e-5, atol=1e-5)
+    assert float(jnp.max(jnp.abs(new_err))) <= float(scale) * 0.5 + 1e-6

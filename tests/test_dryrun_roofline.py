@@ -1,0 +1,55 @@
+"""Unit tests for the dry-run HLO collective parser and roofline math (the
+actual 512-device lowering runs in the sweep; see EXPERIMENTS.md)."""
+import pytest
+
+from repro.launch.dryrun import parse_collectives
+from repro.launch.roofline import analyze_cell
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,4096,512]{2,1,0} all-gather(bf16[1,4096,512]{2,1,0} %p0), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %p1), replica_groups=[1,256]<=[256], to_apply=%add
+  %rs = bf16[8,128]{1,0} reduce-scatter(bf16[128,128]{1,0} %p2), replica_groups=[16,16]<=[256], dimensions={0}
+  %cp-start = bf16[64]{0} collective-permute-start(bf16[64]{0} %p3), source_target_pairs={{0,1}}
+  %tup = (f32[256]{0}, f32[256]{0}) all-reduce(%a, %b), replica_groups=[4,64]<=[256], to_apply=%add
+}
+"""
+
+
+def test_parse_collectives_types_and_bytes():
+    out = parse_collectives(HLO)
+    # all-gather: result 16*4096*512*2 bytes, n=16 -> wire 15/16 * size
+    ag = 16 * 4096 * 512 * 2 * 15 / 16
+    assert out["all-gather"] == pytest.approx(ag)
+    # all-reduce: scalar array 1024*4, n=256 -> 2*(255/256)*size ; plus the
+    # tuple variant 2*256*4 with n=64
+    ar = 2 * (255 / 256) * 1024 * 4 + 2 * (63 / 64) * (2 * 256 * 4)
+    assert out["all-reduce"] == pytest.approx(ar)
+    # reduce-scatter: result shard 8*128*2, n=16 -> (n-1)*shard
+    assert out["reduce-scatter"] == pytest.approx(15 * 8 * 128 * 2)
+    assert out["collective-permute"] == pytest.approx(64 * 2)
+
+
+def test_analyze_cell_terms():
+    r = {
+        "ok": True, "arch": "smollm-135m", "shape": "train_4k",
+        "mesh": "16x16", "policy": "mcdla", "placement": "bw_aware",
+        "compress": "none", "opt_bits": 32, "accum": 1,
+        "flops_per_dev": 197e12 * 0.5,          # 0.5 s of compute
+        "bytes_accessed_per_dev": 819e9 * 0.25,  # 0.25 s of HBM
+        "collective_wire_bytes_per_dev": 50e9 * 0.1,   # 0.1 s of ICI
+        "arg_bytes_per_dev": 1e9, "temp_bytes_per_dev": 2e9,
+    }
+    a = analyze_cell(r)
+    assert a["compute_s"] == pytest.approx(0.5)
+    assert a["memory_s"] == pytest.approx(0.25)
+    assert a["collective_s"] == pytest.approx(0.1)
+    assert a["dominant"] == "compute"
+    assert a["fits_hbm"]
+    assert 0 < a["roofline_fraction"] <= 1.0
+    assert 0 < a["useful_ratio"] < 1.0
+
+
+def test_analyze_cell_skip_passthrough():
+    assert analyze_cell({"ok": None, "skip": "x"}) is None
+    assert analyze_cell({"ok": False, "error": "y"}) is None

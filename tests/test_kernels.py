@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode
+(assignment requirement: every kernel sweeps shapes/dtypes against ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.gemm_os import gemm_os, pick_blocks
+from repro.kernels.offload_pack import fp8_pack, fp8_unpack
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 2e-1)])
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 128, 128, 128, 128, 128),
+    (256, 512, 384, 128, 128, 128),
+    (256, 1024, 256, 128, 128, 256),
+    (512, 256, 512, 256, 256, 128),
+])
+def test_gemm_os_sweep(m, k, n, bm, bn, bk, dtype, tol):
+    x = jax.random.normal(KEY, (m, k)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)).astype(dtype)
+    y = gemm_os(x, w, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_gemm_pick_blocks_aligned():
+    for m, k, n in [(256, 8192, 22528), (4096, 512, 1024), (128, 128, 128)]:
+        bm, bn, bk = pick_blocks(m, k, n)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+        assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-4),
+                                       (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("B,H,Hkv,S,T,d,causal,window", [
+    (2, 4, 2, 128, 128, 64, True, 0),
+    (1, 4, 4, 256, 256, 32, True, 64),
+    (2, 8, 2, 96, 160, 64, False, 0),
+    (1, 2, 1, 64, 192, 128, True, 0),
+])
+def test_flash_attention_sweep(B, H, Hkv, S, T, d, causal, window,
+                               dtype, tol):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, T, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, T, d)).astype(dtype)
+    o = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                            bq=64, bk=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 5)
+
+
+def test_flash_attention_grads_match_ref():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+
+    def loss(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, True, 0) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=True) ** 2)
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-4),
+                                       (jnp.bfloat16, 4e-2)])
+@pytest.mark.parametrize("BH,S,P,N,c", [
+    (3, 64, 16, 8, 16),
+    (2, 128, 32, 16, 32),
+    (1, 256, 64, 64, 128),
+])
+def test_ssd_scan_sweep(BH, S, P, N, c, dtype, tol):
+    ks = jax.random.split(KEY, 4)
+    x = (jax.random.normal(ks[0], (BH, S, P)) * 0.5).astype(dtype)
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (BH, S)))
+    B = (jax.random.normal(ks[2], (BH, S, N)) * 0.4).astype(dtype)
+    C = (jax.random.normal(ks[3], (BH, S, N)) * 0.4).astype(dtype)
+    y = ssd_scan(x, a, B, C, chunk=c, interpret=True)
+    for i in range(BH):
+        want, _ = ref.ssd_ref(x[i], a[i], B[i], C[i])
+        np.testing.assert_allclose(np.asarray(y[i], np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol * 5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,C,br", [(256, 64, 64), (128, 128, 128),
+                                    (512, 32, 64)])
+def test_fp8_pack_sweep(R, C, br):
+    x = jax.random.normal(KEY, (R, C)) * 5.0
+    q, s = fp8_pack(x, block_rows=br, interpret=True)
+    qr, sr = ref.fp8_pack_ref(x, br)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(q, np.float32),
+                               np.asarray(qr, np.float32))
+    y = fp8_unpack(q, s, block_rows=br, dtype=jnp.float32, interpret=True)
+    yr = ref.fp8_unpack_ref(qr, sr, br, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5)
+    rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+    assert rel < 0.04       # blockwise scales beat the per-tensor bound

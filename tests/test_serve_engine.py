@@ -1,0 +1,94 @@
+"""Batched serving engine: greedy decode correctness + slot isolation +
+pooled-cache sizing math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, MemoryPlan, MeshPlan, RunConfig
+from repro.configs.base import ShapeConfig
+from repro.models.model import build_model
+from repro.serve.engine import Engine, Request
+from repro.serve.kv_cache import kv_cache_footprint
+
+CFG = ARCHS["smollm-135m"].reduced()
+PLAN1 = MeshPlan((1,), ("data",))
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    run = RunConfig(model=CFG, shape=ShapeConfig("t", 64, 2, "decode"),
+                    mesh=PLAN1, memory=MemoryPlan(policy="none"))
+    m = build_model(run)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _greedy_ref(m, params, prompt, n_new):
+    """Reference: repeated full prefill (no cache reuse)."""
+    toks = list(prompt)
+    for _ in range(n_new):
+        t = jnp.asarray(toks, jnp.int32)[None, :]
+        pos = jnp.arange(len(toks), dtype=jnp.int32)[None, :]
+        caches = m.init_cache(1, len(toks) + 1)
+        logits, _ = m.prefill(params, {"tokens": t, "positions": pos}, caches)
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks[len(prompt):]
+
+
+def test_engine_matches_full_forward(model_and_params):
+    m, params = model_and_params
+    eng = Engine(m, params, batch=2, max_len=64)
+    prompt = np.arange(7, dtype=np.int32) + 3
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
+    done = eng.run()
+    assert len(done) == 1
+    want = _greedy_ref(m, params, list(prompt), 6)
+    assert done[0].out_tokens == want
+
+
+def test_engine_batched_slots_isolated(model_and_params):
+    """Two concurrent sequences must decode exactly what they decode alone."""
+    m, params = model_and_params
+    p1 = np.arange(5, dtype=np.int32) + 1
+    p2 = (np.arange(9, dtype=np.int32) * 3 + 2) % CFG.vocab_size
+    solo = []
+    for p in (p1, p2):
+        eng = Engine(m, params, batch=2, max_len=64)
+        eng.submit(Request(uid=0, prompt=p, max_new_tokens=5))
+        solo.append(eng.run()[0].out_tokens)
+    eng = Engine(m, params, batch=2, max_len=64)
+    eng.submit(Request(uid=0, prompt=p1, max_new_tokens=5))
+    eng.submit(Request(uid=1, prompt=p2, max_new_tokens=5))
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    assert done[0].out_tokens == solo[0]
+    assert done[1].out_tokens == solo[1]
+
+
+def test_engine_queues_beyond_slots(model_and_params):
+    m, params = model_and_params
+    eng = Engine(m, params, batch=2, max_len=64)
+    for i in range(5):
+        eng.submit(Request(uid=i, prompt=np.arange(4, dtype=np.int32) + i,
+                           max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 5
+    assert sorted(r.uid for r in done) == list(range(5))
+
+
+# ---------------------------------------------------------------------------
+def test_kv_footprint_long_context_needs_pool():
+    """zamba2 @ 524k decode: the KV cache exceeds one chip's HBM but fits
+    pooled (the paper's capacity argument applied to inference)."""
+    from repro import hw
+    from repro.configs import SINGLE_POD, get_arch
+    fp = kv_cache_footprint(get_arch("zamba2-2.7b"), SINGLE_POD,
+                            batch=1, seq=524_288)
+    assert fp.per_device_unpooled > hw.TPU_V5E.hbm_bytes
+    assert fp.per_device_pooled < hw.TPU_V5E.hbm_bytes
+
+
+def test_kv_footprint_ssm_tiny():
+    from repro.configs import SINGLE_POD, get_arch
+    fp = kv_cache_footprint(get_arch("mamba2-370m"), SINGLE_POD,
+                            batch=1, seq=524_288)
+    assert fp.total_bytes < 1e9         # O(1) state: no long-context blowup

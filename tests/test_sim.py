@@ -1,0 +1,157 @@
+"""The paper's claims, validated against our simulator (EXPERIMENTS.md §Paper
+anchors).  Exact magnitudes depend on unpublished simulator internals; the
+assertions pin the orderings and the headline bands."""
+import pytest
+
+from repro import hw
+from repro.sim.power import DIMM_OPTIONS, perf_per_watt, system_overhead, table4
+from repro.sim.simulator import harmonic_mean, simulate, speedup_table
+from repro.sim.topology import (ALL_SYSTEMS, DC_DLA, DC_DLA_GEN4, DC_DLA_O,
+                                HC_DLA, MC_DLA_B, MC_DLA_L, MC_DLA_S)
+from repro.sim.workloads import CNNS, RNNS, WORKLOADS
+
+
+@pytest.fixture(scope="module")
+def dags():
+    return {k: f() for k, f in WORKLOADS.items()}
+
+
+@pytest.fixture(scope="module")
+def tables(dags):
+    return {mode: speedup_table(dags, ALL_SYSTEMS, mode)
+            for mode in ("dp", "mp")}
+
+
+def _hm(tab, name):
+    return harmonic_mean([tab[w][name] for w in tab])
+
+
+def test_workload_layer_counts(dags):
+    # Table III layer counts
+    assert dags["AlexNet"].num_layers == 8
+    assert dags["GoogLeNet"].num_layers == 58
+    assert dags["VGG-E"].num_layers == 19
+    assert dags["ResNet"].num_layers == 34
+    assert dags["RNN-GEMV"].num_layers == 50
+    assert dags["RNN-GRU"].num_layers == 187
+
+
+def test_system_ordering_every_workload(tables):
+    """DC <= HC,MC(S) <= MC(L) <= MC(B) <= oracle for every workload/mode."""
+    for mode, tab in tables.items():
+        for w, row in tab.items():
+            assert row["MC-DLA(B)"] >= row["MC-DLA(L)"] - 1e-6, (mode, w)
+            assert row["MC-DLA(L)"] >= row["MC-DLA(S)"] - 1e-6, (mode, w)
+            assert row["DC-DLA(O)"] >= row["MC-DLA(B)"] - 1e-6, (mode, w)
+            # sync-dominated RNN MP cells may dip slightly below 1.0: our
+            # latency model charges the 16-node MC rings ~7% more than the
+            # paper's (documented deviation, EXPERIMENTS.md §Paper anchors)
+            floor = 0.9 if (mode == "mp" and w.startswith("RNN")) else 1.0
+            assert row["MC-DLA(B)"] >= floor, (mode, w)
+
+
+def test_headline_speedup_band(tables):
+    """Paper: MC-DLA(B) 3.5x dp / 2.1x mp / 2.8x overall vs DC-DLA."""
+    dp = _hm(tables["dp"], "MC-DLA(B)")
+    mp = _hm(tables["mp"], "MC-DLA(B)")
+    overall = harmonic_mean([dp, mp])
+    assert 3.0 <= dp <= 5.0, dp
+    assert 1.4 <= mp <= 2.8, mp
+    assert 2.0 <= overall <= 3.6, overall
+
+
+def test_oracle_fraction(tables):
+    """Paper: MC-DLA(B) reaches 84-99% (avg 95%) of the oracle."""
+    for mode in ("dp", "mp"):
+        frac = _hm(tables[mode], "MC-DLA(B)") / _hm(tables[mode], "DC-DLA(O)")
+        assert 0.80 <= frac <= 1.0, (mode, frac)
+
+
+def test_local_close_to_bw_aware(tables):
+    """Paper: MC-DLA(L) achieves ~96% of MC-DLA(B)."""
+    for mode in ("dp", "mp"):
+        r = _hm(tables[mode], "MC-DLA(L)") / _hm(tables[mode], "MC-DLA(B)")
+        assert 0.88 <= r <= 1.0, (mode, r)
+
+
+def test_hc_between_dc_and_mc(tables):
+    for mode in ("dp", "mp"):
+        hc = _hm(tables[mode], "HC-DLA")
+        assert 1.0 <= hc <= _hm(tables[mode], "MC-DLA(B)")
+
+
+def test_cpu_bandwidth_usage(dags):
+    """Paper Fig 12: HC-DLA consumes a large share of CPU memory bandwidth
+    (avg 92% cited); MC uses none."""
+    fracs = []
+    for w, dag in dags.items():
+        r = simulate(dag, HC_DLA, "dp")
+        fracs.append(r.cpu_bw_frac)
+        assert simulate(dag, MC_DLA_B, "dp").cpu_bw_frac == 0.0
+    assert max(fracs) > 0.5
+
+
+def test_pcie_gen4_narrows_gap(dags):
+    """Paper §V-B: PCIe gen4 improves DC-DLA ~38%, narrowing MC/DC to ~2.1x."""
+    base, gen4 = [], []
+    for w, dag in dags.items():
+        base.append(simulate(dag, DC_DLA, "dp").total)
+        gen4.append(simulate(dag, DC_DLA_GEN4, "dp").total)
+    gain = harmonic_mean([b / g for b, g in zip(base, gen4)])
+    assert 1.15 <= gain <= 2.2, gain
+
+
+def test_batch_sensitivity_robust(dags):
+    """Paper Fig 14: MC-DLA(B) keeps a healthy speedup across batch sizes."""
+    from repro.sim.workloads import WORKLOADS as W
+    for batch in (128, 256, 1024):
+        sp = []
+        for name, fn in W.items():
+            dag = fn(batch)
+            sp.append(simulate(dag, DC_DLA, "dp").total
+                      / simulate(dag, MC_DLA_B, "dp").total)
+        assert harmonic_mean(sp) > 1.5, batch
+
+
+def test_scalability_4_vs_8(dags):
+    """Paper §V-D: with virtualization ON, DC-DLA scales poorly (1.3x/2.7x
+    at 4/8 devices); MC-DLA regains near-linear scaling."""
+    dag = dags["VGG-E"]
+    t1_dc = simulate(dag, DC_DLA, "dp", n_devices=1).total
+    t8_dc = simulate(dag, DC_DLA, "dp", n_devices=8).total
+    t1_mc = simulate(dag, MC_DLA_B, "dp", n_devices=1).total
+    t8_mc = simulate(dag, MC_DLA_B, "dp", n_devices=8).total
+    assert (t1_mc / t8_mc) > (t1_dc / t8_dc)
+    assert (t1_mc / t8_mc) > 5.0          # near-linear for MC
+    # virtualization off -> both near-linear
+    t1 = simulate(dag, DC_DLA, "dp", n_devices=1, virtualize=False).total
+    t8 = simulate(dag, DC_DLA, "dp", n_devices=8, virtualize=False).total
+    assert (t1 / t8) > 6.0
+
+
+def test_breakdown_categories(dags):
+    """Fig 11: DC-DLA is virtualization-dominated on most workloads; the
+    MC designs cut virtualization without inflating sync."""
+    worse = 0
+    for w, dag in dags.items():
+        dc = simulate(dag, DC_DLA, "dp")
+        mc = simulate(dag, MC_DLA_B, "dp")
+        if dc.virt > dc.compute:
+            worse += 1
+        assert mc.virt < dc.virt
+        assert mc.sync <= dc.sync * 1.6      # longer rings cost a little
+    assert worse >= 5         # paper: 14/16 cases virtualization-bound
+
+
+def test_power_table4():
+    t = table4()
+    assert t["8GB RDIMM"]["node_tdp_w"] == pytest.approx(29.0)
+    assert t["128GB LRDIMM"]["gb_per_w"] == pytest.approx(10.1, abs=0.1)
+    ov_small = system_overhead(DIMM_OPTIONS[0])
+    ov_big = system_overhead(DIMM_OPTIONS[-1])
+    assert ov_small["power_increase_frac"] == pytest.approx(0.0725, abs=0.01)
+    assert ov_big["power_increase_frac"] == pytest.approx(0.3175, abs=0.01)
+    assert ov_big["pool_capacity_tb"] == pytest.approx(10.24, abs=0.1)
+    # paper: 2.1-2.6x perf/W for a 2.8x speedup
+    assert 2.0 <= perf_per_watt(2.8, DIMM_OPTIONS[0]) <= 2.7
+    assert 2.0 <= perf_per_watt(2.8, DIMM_OPTIONS[-1]) <= 2.3

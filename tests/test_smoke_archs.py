@@ -1,0 +1,109 @@
+"""Per-arch smoke tests (assignment requirement): a REDUCED same-family twin
+runs one forward/train step on CPU asserting output shapes + no NaNs, plus a
+prefill + decode step."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, MemoryPlan, MeshPlan, RunConfig
+from repro.configs.base import ShapeConfig
+from repro.models.model import build_model
+
+B, S = 2, 32
+PLAN1 = MeshPlan((1,), ("data",))
+
+
+def make_batch(cfg, m):
+    batch = {
+        "tokens": jnp.ones((B, S), jnp.int32),
+        "labels": jnp.where(jnp.arange(S)[None] < S - 1,
+                            jnp.ones((B, S), jnp.int32), -1),
+        "positions": (jnp.zeros((3, B, S), jnp.int32)
+                      + jnp.arange(S)[None, None, :]
+                      if cfg.mrope_sections else
+                      jnp.broadcast_to(jnp.arange(S)[None], (B, S))),
+    }
+    if cfg.frontend == "audio_stub":
+        from repro.models.frontends import AUDIO_FRAME_DIM
+        batch["frames"] = jnp.ones((B, cfg.frontend_tokens,
+                                    AUDIO_FRAME_DIM), m.dtype)
+    if cfg.frontend == "vision_stub":
+        from repro.models.frontends import VISION_PATCH_DIM
+        batch["patches"] = jnp.ones((B, cfg.frontend_tokens,
+                                     VISION_PATCH_DIM), m.dtype)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {}
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_step_smoke(name):
+    cfg = ARCHS[name].reduced()
+    run = RunConfig(model=cfg, shape=ShapeConfig("smoke", S, B, "train"),
+                    mesh=PLAN1, memory=MemoryPlan(policy="none"))
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, m)
+    (loss, metrics), grads = jax.value_and_grad(
+        m.loss_fn, has_aux=True)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), name
+    gsum = sum(jnp.sum(jnp.abs(l.astype(jnp.float32)))
+               for l in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(gsum)) and float(gsum) > 0, name
+    assert float(metrics["tokens"]) == B * (S - 1)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_serve_smoke(name):
+    cfg = ARCHS[name].reduced()
+    run = RunConfig(model=cfg, shape=ShapeConfig("smoke", S, B, "decode"),
+                    mesh=PLAN1, memory=MemoryPlan(policy="none"))
+    m = build_model(run)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, m)
+    caches = m.init_cache(B, S + 4)
+    logits, caches = m.prefill(params, batch, caches)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), name
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    pos = (jnp.full((3, B, 1), S, jnp.int32) if cfg.mrope_sections
+           else jnp.full((B, 1), S, jnp.int32))
+    logits2, caches = m.decode_step(params, tok, pos, caches, jnp.int32(S))
+    assert logits2.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32)))), name
+
+
+def test_decode_matches_prefill_continuation():
+    """Greedy decode after prefill(S) must equal a fresh prefill(S+1)'s
+    last-token logits (cache correctness across the whole stack)."""
+    for name in ("smollm-135m", "mamba2-370m", "zamba2-2.7b"):
+        cfg = ARCHS[name].reduced()
+        run = RunConfig(model=cfg,
+                        shape=ShapeConfig("smoke", S, B, "decode"),
+                        mesh=PLAN1, memory=MemoryPlan(policy="none"))
+        m = build_model(run)
+        params = m.init(jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(7)
+        toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+        pos_full = jnp.broadcast_to(jnp.arange(S + 1)[None], (B, S + 1))
+
+        caches = m.init_cache(B, S + 8)
+        batch = {"tokens": toks[:, :S], "positions": pos_full[:, :S]}
+        _, caches = m.prefill(params, batch, caches)
+        logits_dec, _ = m.decode_step(
+            params, toks[:, S:S + 1], pos_full[:, S:S + 1], caches,
+            jnp.int32(S))
+
+        caches2 = m.init_cache(B, S + 8)
+        batch2 = {"tokens": toks, "positions": pos_full}
+        logits_pref, _ = m.prefill(params, batch2, caches2)
+
+        a = logits_dec.astype(jnp.float32)
+        b = logits_pref.astype(jnp.float32)
+        err = float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-9))
+        assert err < 0.05, (name, err)
+        assert bool(jnp.all(jnp.argmax(a, -1) == jnp.argmax(b, -1))), name
