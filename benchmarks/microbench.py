@@ -55,3 +55,38 @@ def kernel_microbench() -> List[Row]:
                  round(_time(lambda t: ops.fp8_pack(t, block_rows=128)[0],
                              big), 1), "interpret mode"))
     return rows
+
+
+def tier_microbench() -> List[Row]:
+    """stash/fetch round-trip through each registered memory tier
+    (single-device CPU wall-clock; the constraint collectives are no-ops
+    off-mesh, so this times the data path: codec + copies)."""
+    from repro.configs.base import MemoryPlan, MeshPlan
+    from repro.core.runtime import MemoryRuntime
+    from repro.core.tiers import HostTier, TransferHints
+
+    plan = MeshPlan((1,), ("data",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 1024), jnp.float32)
+    hints = TransferHints(dtype=jnp.float32)
+    rows: List[Row] = []
+    for policy, compress in (("none", "none"), ("mcdla", "none"),
+                             ("mcdla", "fp8"), ("host", "none"),
+                             ("host", "fp8")):
+        memory = MemoryPlan(policy=policy, compress=compress)
+        runtime = MemoryRuntime(plan, memory)
+        tier = runtime.tier
+
+        @jax.jit
+        def roundtrip(t, _tier=tier):
+            return _tier.fetch(_tier.stash(t, hints), hints)
+
+        note = "stash+fetch round-trip (CPU)"
+        inner = tier
+        while hasattr(inner, "inner"):
+            inner = inner.inner
+        if isinstance(inner, HostTier) and not HostTier._supported():
+            # don't let a no-op masquerade as a transfer in regression CSVs
+            note = "no-op: backend lacks pinned_host (codec only)"
+        rows.append((f"micro.tier_{tier.describe()}_256x1024.us",
+                     round(_time(roundtrip, x), 1), note))
+    return rows

@@ -7,7 +7,7 @@ import time
 
 
 def main() -> None:
-    from benchmarks.microbench import kernel_microbench
+    from benchmarks.microbench import kernel_microbench, tier_microbench
     from benchmarks.paper_figs import ALL_FIGS
 
     t0 = time.time()
@@ -15,6 +15,7 @@ def main() -> None:
     for fig in ALL_FIGS:
         rows.extend(fig())
     rows.extend(kernel_microbench())
+    rows.extend(tier_microbench())
     print("name,value,note")
     for name, value, note in rows:
         print(f"{name},{value},{note}")

@@ -1,0 +1,44 @@
+"""Version-compat shims for the installed jax.
+
+One shared location for every API that moved between jax releases, so the
+rest of the codebase imports from here instead of guessing:
+
+* ``shard_map`` — promoted from ``jax.experimental.shard_map`` to
+  ``jax.shard_map`` in newer releases; older jaxlibs only ship the
+  experimental path.  The replication-check kwarg was also renamed
+  (``check_rep`` -> ``check_vma``); this wrapper accepts either spelling
+  and forwards whichever the installed jax understands.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:                                    # newer jax exports it directly
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:                     # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+@functools.wraps(_shard_map)
+def shard_map(*args, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(*args, **kwargs)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` appeared in newer jax; fall back to the mesh
+    axis env lookup that works everywhere (psum of 1 is constant-folded)."""
+    import jax
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+__all__ = ["shard_map", "axis_size"]
+

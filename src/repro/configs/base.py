@@ -49,9 +49,14 @@ class MemoryPlan:
     opt_state_bits: int = 32         # 32 | 8  (8-bit Adam moments, beyond-paper)
 
     def validate(self) -> None:
-        assert self.policy in ("none", "host", "mcdla", "auto"), self.policy
+        # policies and codecs are extensible (core.tiers registries) — the
+        # registry, not a frozen list here, is the source of truth
+        from repro.core.tiers import registered_codecs, registered_policies
+        assert self.policy in registered_policies(), (
+            self.policy, registered_policies())
         assert self.placement in ("bw_aware", "local"), self.placement
-        assert self.compress in ("none", "fp8"), self.compress
+        assert self.compress in ("none",) + registered_codecs(), (
+            self.compress, registered_codecs())
         assert self.opt_state_bits in (32, 8), self.opt_state_bits
 
 

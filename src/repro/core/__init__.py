@@ -1,11 +1,16 @@
 """The paper's primary contribution: transparent memory-capacity expansion
 over the device-side interconnect (MC-DLA), realised in JAX.
 
-* pool      — the pooled-HBM tier + BW_AWARE/LOCAL placement (Fig. 10)
-* offload   — stash/fetch memory-overlaying as custom_vjp autodiff surgery
+* tiers     — pluggable MemoryTier backing stores (device / pooled / host /
+              compressed) behind one registry (DESIGN.md §3)
+* runtime   — MemoryRuntime facade: planner + mesh + tier + wrap_layer +
+              per-call traffic accounting
+* pool      — the pooled-HBM placement helpers (BW_AWARE/LOCAL, Fig. 10)
+* offload   — deprecated stash/fetch shims over the tier API
 * dag       — layer DAG + reuse-distance schedule (§II-B)
-* policy    — KEEP/POOL/RECOMPUTE cost-model planner (footnote 4 + auto)
-* vdnn      — policy-driven layer wrapper used by all model code
+* policy    — KEEP/POOL/RECOMPUTE cost-model planner (footnote 4 + auto),
+              priced through the tier contract
+* vdnn      — deprecated wrapper shim over MemoryRuntime
 * compress  — fp8 stash / int8 error-feedback grads (the memory-node 'ASIC')
 """
 from repro.core.compress import (fp8_compress, fp8_decompress,
@@ -14,6 +19,12 @@ from repro.core.dag import LayerDAG, LayerNode, build_dag, model_flops
 from repro.core.offload import maybe_offload, offload_layer, stash, fetch
 from repro.core.policy import plan_memory, fetch_bandwidth, summarize
 from repro.core.pool import PoolAxes, PoolAccountant, pool_spec, pool_report
+from repro.core.runtime import MemoryRuntime, TierTraffic
+from repro.core.tiers import (Codec, CompressedTier, DeviceTier, HostTier,
+                              MemoryTier, PooledHbmTier, TierSpec,
+                              TransferHints, build_tier, get_codec,
+                              register_codec, register_tier,
+                              registered_policies)
 from repro.core.vdnn import VdnnContext, stash_fraction, split_layers
 
 __all__ = [
@@ -22,5 +33,9 @@ __all__ = [
     "maybe_offload", "offload_layer", "stash", "fetch",
     "plan_memory", "fetch_bandwidth", "summarize",
     "PoolAxes", "PoolAccountant", "pool_spec", "pool_report",
+    "MemoryRuntime", "TierTraffic",
+    "Codec", "CompressedTier", "DeviceTier", "HostTier", "MemoryTier",
+    "PooledHbmTier", "TierSpec", "TransferHints", "build_tier", "get_codec",
+    "register_codec", "register_tier", "registered_policies",
     "VdnnContext", "stash_fraction", "split_layers",
 ]

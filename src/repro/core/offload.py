@@ -1,183 +1,78 @@
-"""stash/fetch — the paper's memory-overlaying runtime, as autodiff surgery.
+"""stash/fetch — deprecated shims over the MemoryTier / MemoryRuntime API.
 
-The paper's vDNN-style runtime (§III-B) pushes each layer's input feature
-map to the backing store after its last forward use and prefetches it ahead
-of its backward use, overlapped with compute.  In JAX the "saved for
-backward" set *is* the residual set of autodiff, so the mechanism becomes a
-``jax.custom_vjp`` around the layer:
-
-  forward:  y = layer(params, x)            (compute uses the exact x)
-            stash = compress(pool(x))       (copy-out to the pooled tier)
-  residual: (params, stash, aux)            (x itself is NOT saved)
-  backward: x' = fetch(decompress(stash))   (all-gather over ICI)
-            recompute layer vjp from x'
-
-This is bit-faithful to the paper: the device-local copy is used for the
-forward math, the pooled copy is a DMA'd duplicate, cheap intermediates are
-re-computed during backward (footnote 4) because the vjp recomputes the
-layer body from x'.  Under ``jax.lax.scan`` over layers, XLA's latency
-hiding scheduler overlaps the stash collective of layer *i* with the compute
-of layer *i+1* — the TPU analogue of the paper's DMA/compute overlap.
-
-``host`` policy (the DC-DLA baseline) keeps the same structure but moves the
-stash to host memory via ``jax.device_put(..., TransferToMemoryKind)`` where
-the backend supports it (TPU does; the CPU test backend silently no-ops, and
-the DC/HC/MC comparison is reproduced in ``sim/``).
+The memory-overlaying machinery that used to live here (custom_vjp autodiff
+surgery around each layer, §III-B) moved to
+:class:`repro.core.runtime.MemoryRuntime`, and the per-backing-store data
+paths moved to :mod:`repro.core.tiers`.  These wrappers keep the historical
+signatures alive for examples and external callers; new code should build a
+``MemoryRuntime`` once and call ``wrap_layer`` on it.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import MemoryPlan
-from repro.core import compress as comp
-from repro.core.pool import pool_spec
+from repro.core.runtime import MemoryRuntime
+from repro.core.tiers import TransferHints, build_tier
 from repro.parallel.sharding import ShardingPlanner
 
 
-def _constrain(x: jax.Array, mesh: Optional[Mesh], spec: P) -> jax.Array:
-    if mesh is None or mesh.size <= 1:
-        return x
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+def _runtime(planner: ShardingPlanner, mesh: Optional[Mesh],
+             memory: MemoryPlan) -> MemoryRuntime:
+    return MemoryRuntime(planner.plan, memory, mesh, planner=planner)
 
 
-def _to_host(x: jax.Array) -> jax.Array:
-    """Move to host memory space (TPU pinned_host); no-op if unsupported."""
-    try:
-        from jax._src.sharding_impls import TransferToMemoryKind  # noqa
-        return jax.device_put(x, TransferToMemoryKind("pinned_host"))
-    except Exception:
-        return x
+# one tier per (memory, planner, mesh) triple — a paired stash/fetch must
+# see the same tier instance, and per-traced-call construction is waste
+_TIER_CACHE: dict = {}
 
 
-def _from_host(x: jax.Array) -> jax.Array:
-    try:
-        from jax._src.sharding_impls import TransferToMemoryKind  # noqa
-        return jax.device_put(x, TransferToMemoryKind("device"))
-    except Exception:
-        return x
+def _tier(planner: ShardingPlanner, mesh: Optional[Mesh],
+          memory: MemoryPlan):
+    key = (memory, id(planner), id(mesh))
+    if key not in _TIER_CACHE:
+        _TIER_CACHE[key] = build_tier(memory, planner, mesh)
+    return _TIER_CACHE[key]
 
 
 # ---------------------------------------------------------------------------
 def stash(x: jax.Array, planner: ShardingPlanner, mesh: Optional[Mesh],
           memory: MemoryPlan, batch_dim: int = 0, allow_compress: bool = True):
-    """Copy-out to the backing store.  Returns an opaque stash payload."""
-    if memory.policy == "host":
-        payload = _to_host(x)
-        return (payload, None)
-    if allow_compress and memory.compress == "fp8" and \
-            jnp.issubdtype(x.dtype, jnp.floating):
-        q, scale = comp.fp8_compress(x)
-        spec = pool_spec(q.shape, planner, memory.placement, batch_dim)
-        return (_constrain(q, mesh, spec), scale)
-    spec = pool_spec(x.shape, planner, memory.placement, batch_dim)
-    return (_constrain(x, mesh, spec), None)
+    """Deprecated: copy-out to the configured tier.  Returns an opaque
+    payload.  Use ``MemoryRuntime.stash`` / ``tier.stash`` instead."""
+    return _tier(planner, mesh, memory).stash(
+        x, TransferHints(batch_dim=batch_dim, allow_compress=allow_compress))
 
 
 def fetch(payload: Tuple[jax.Array, Optional[jax.Array]],
           planner: ShardingPlanner, mesh: Optional[Mesh], memory: MemoryPlan,
           compute_spec, dtype) -> jax.Array:
-    """Prefetch back from the backing store (all-gather over the pool).
-
-    compute_spec: a PartitionSpec, a callable shape->PartitionSpec, or None.
-    """
-    q, scale = payload
-    if memory.policy == "host":
-        return _from_host(q)
-    if scale is not None:
-        x = comp.fp8_decompress(q, scale, dtype)
-    else:
-        x = q
-    if compute_spec is not None:
-        spec = compute_spec(x.shape) if callable(compute_spec) else compute_spec
-        x = _constrain(x, mesh, spec)
-    return x
+    """Deprecated: prefetch back from the configured tier.  Use
+    ``MemoryRuntime.fetch`` / ``tier.fetch`` instead."""
+    return _tier(planner, mesh, memory).fetch(
+        payload, TransferHints(compute_spec=compute_spec, dtype=dtype))
 
 
 # ---------------------------------------------------------------------------
-def _split_aux(aux: Sequence[Any]):
-    """Partition aux leaves into differentiable / non-differentiable."""
-    flags = tuple(
-        isinstance(a, (jax.Array, jnp.ndarray)) and
-        jnp.issubdtype(jnp.result_type(a), jnp.inexact)
-        for a in aux)
-    return flags
-
-
 def offload_layer(layer_fn: Callable, planner: ShardingPlanner,
                   mesh: Optional[Mesh], memory: MemoryPlan,
                   compute_spec: Optional[P] = None,
                   batch_dim: int = 0) -> Callable:
-    """Wrap ``layer_fn(params, x, *aux) -> y`` so the saved-for-backward copy
-    of ``x`` lives in the pooled tier (possibly fp8-compressed).
-
-    * params and aux are saved by reference (params are live anyway under the
-      optimizer; aux are small: positions, cache indices, ...).
-    * float aux receive real cotangents (e.g. encoder states feeding
-      cross-attention); integer aux receive None.
-    """
-
-    AUX_STASH_NDIM = 3      # big float aux (e.g. encoder states) pool too
-
-    @jax.custom_vjp
-    def f(params, x, *aux):
-        return layer_fn(params, x, *aux)
-
-    def f_fwd(params, x, *aux):
-        y = layer_fn(params, x, *aux)
-        payload = stash(x, planner, mesh, memory, batch_dim)
-        witness = jnp.zeros((), x.dtype)        # dtype token (residuals must
-        flags = _split_aux(aux)                 # be JAX types)
-        saved_aux = tuple(
-            stash(a, planner, mesh, memory, batch_dim, allow_compress=False)
-            if (memory.stash_aux and fl and
-                getattr(a, "ndim", 0) >= AUX_STASH_NDIM) else a
-            for a, fl in zip(aux, flags))
-        return y, (params, payload, witness, saved_aux)
-
-    def f_bwd(res, gy):
-        params, payload, witness, saved_aux = res
-        x = fetch(payload, planner, mesh, memory, compute_spec, witness.dtype)
-        aux = tuple(
-            fetch(sa, planner, mesh, memory, compute_spec, None)
-            if isinstance(sa, tuple) else sa
-            for sa in saved_aux)
-        flags = _split_aux(aux)
-        diff_aux = tuple(a for a, fl in zip(aux, flags) if fl)
-
-        def call(p, xx, *da):
-            it = iter(da)
-            full = tuple(next(it) if fl else a for a, fl in zip(aux, flags))
-            return layer_fn(p, xx, *full)
-
-        _, vjp = jax.vjp(call, params, x, *diff_aux)
-        grads = vjp(gy)
-        dp, dx, d_diff = grads[0], grads[1], list(grads[2:])
-        if compute_spec is not None:
-            # constrain the residual-stream cotangent to the same layout as
-            # the primal: GSPMD can then turn the TP backward all-reduces
-            # into reduce-scatters (Megatron-SP transposition; §Perf)
-            spec = compute_spec(dx.shape) if callable(compute_spec) \
-                else compute_spec
-            dx = _constrain(dx, mesh, spec)
-        d_aux = tuple(d_diff.pop(0) if fl else None for fl in flags)
-        return (dp, dx) + d_aux
-
-    f.defvjp(f_fwd, f_bwd)
-    return f
+    """Deprecated: wrap ``layer_fn(params, x, *aux) -> y`` so the
+    saved-for-backward copy of ``x`` lives in the configured tier.
+    Delegates to ``MemoryRuntime.wrap_layer``."""
+    return _runtime(planner, mesh, memory).wrap_layer(
+        layer_fn, compute_spec=compute_spec, batch_dim=batch_dim)
 
 
 def maybe_offload(layer_fn: Callable, planner: ShardingPlanner,
                   mesh: Optional[Mesh], memory: MemoryPlan,
                   compute_spec: Optional[P] = None,
                   batch_dim: int = 0) -> Callable:
-    """Policy dispatch: 'none' -> plain layer (oracle DC-DLA(O));
-    'mcdla'/'auto'/'host' -> offload-wrapped layer."""
-    if memory.policy == "none":
-        return layer_fn
-    return offload_layer(layer_fn, planner, mesh, memory, compute_spec,
-                         batch_dim)
+    """Deprecated: policy dispatch now lives in the tier registry — a
+    non-offloading tier (``policy='none'``) returns the plain layer."""
+    return _runtime(planner, mesh, memory).wrap_layer(
+        layer_fn, compute_spec=compute_spec, batch_dim=batch_dim)

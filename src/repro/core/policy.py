@@ -7,7 +7,7 @@ mode: a per-layer cost model decides, under the per-device HBM budget,
 
   KEEP      — leave the saved tensor resident (zero traffic) while the
               budget allows;
-  POOL      — stash to the pooled tier; predicted stall is
+  POOL      — stash to the backing tier; predicted stall is
               max(0, stash_time + fetch_time - overlap_window);
   RECOMPUTE — if re-running the layer forward is cheaper than the fetch
               (footnote 4 generalized by the cost model).
@@ -16,17 +16,24 @@ Decisions are taken largest-reuse-distance-first: the tensor that stays idle
 longest is the best candidate to evict, and its transfer has the widest
 overlap window — the same intuition the paper's memory-overlaying scheduler
 uses.
+
+The planner costs candidate placements through the
+:class:`~repro.core.tiers.MemoryTier` contract — ``tier.bandwidth()`` prices
+the transfer, ``tier.account()``/``tier.capacity()`` maintain the boot-time
+memory map — so a new tier (host+pool spill, zstd codec, ...) is priced
+without touching this module.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import List, Optional
 
 from repro import hw
 from repro.configs.base import MemoryPlan, MeshPlan
-from repro.core.compress import compress_ratio
 from repro.core.dag import LayerDAG
-from repro.core.pool import PoolAxes
+from repro.core.pool import PoolAccountant
+from repro.core.tiers import MemoryTier, build_tier
+from repro.parallel.sharding import ShardingPlanner
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +50,8 @@ class MemoryPlanReport:
     resident_bytes_per_dev: float
     pooled_bytes_per_dev: float
     budget_bytes: float
+    tier: str = "pooled_hbm"
+    host_bytes: float = 0.0
 
     @property
     def fits(self) -> bool:
@@ -58,51 +67,53 @@ class MemoryPlanReport:
 
 def fetch_bandwidth(plan: MeshPlan, memory: MemoryPlan,
                     chip: hw.Chip = hw.TPU_V5E) -> float:
-    """Per-device stash/fetch bandwidth of the pooled tier.
+    """Per-device stash/fetch bandwidth of the configured backing tier.
 
-    bw_aware engages the ICI links of every mesh dimension the pool spans
-    (paper Fig. 10: all N links, left+right nodes); local engages one
-    dimension's links.  A 2D torus gives 2 links per dimension per chip.
+    Deprecated shim: dispatches through the tier registry — use
+    ``tier.bandwidth(plan, chip)`` (or ``MemoryRuntime``) directly.
     """
-    dims = len(PoolAxes(plan).axes_for(memory.placement))
-    links = min(2 * dims, chip.num_links)
-    return links * chip.link_bw
+    return build_tier(memory, ShardingPlanner(plan)).bandwidth(plan, chip)
 
 
 def plan_memory(dag: LayerDAG, plan: MeshPlan, memory: MemoryPlan,
                 chip: hw.Chip = hw.TPU_V5E,
-                model_state_bytes: float = 0.0) -> MemoryPlanReport:
+                model_state_bytes: float = 0.0,
+                tier: Optional[MemoryTier] = None) -> MemoryPlanReport:
     """Run the planner over a layer DAG.
 
     model_state_bytes: global bytes of params+optimizer state (FSDP-sharded
     over the pool, so they cost /pool_size per device).
+    tier: the backing store to cost POOL decisions against; resolved from
+    ``memory`` via the tier registry when not provided.
     """
+    if tier is None:
+        tier = build_tier(memory, ShardingPlanner(plan))
     n_dev = plan.num_devices
-    pool_n = PoolAxes(plan).pool_size(memory.placement)
-    budget = memory.hbm_budget_gb * 1e9
-    bw = fetch_bandwidth(plan, memory, chip)
-    ratio = compress_ratio(memory.compress)
+    acct = PoolAccountant(plan, memory)
+    bw = tier.bandwidth(plan, chip)
+    ratio = tier.payload_ratio()
     eff_flops = n_dev * chip.peak_flops
 
     # state (params + moments) is pooled via FSDP
-    state_per_dev = model_state_bytes / (pool_n if memory.pool_params else 1)
-    resident = state_per_dev
-    pooled = 0.0
+    state_per_dev = model_state_bytes / (acct.pool_devices
+                                         if memory.pool_params else 1)
+    acct.alloc_local(state_per_dev)
     decisions: List[Decision] = []
 
     sched = dag.schedule()
     # largest reuse distance first — best eviction victims
     order = sorted(range(len(sched)), key=lambda j: -sched[j][2])
-    stash_all = memory.policy in ("mcdla", "host")
+    stash_all = tier.stash_all and tier.offloads
 
     # Pass 1: keep everything resident, then evict until it fits (auto), or
-    # stash everything (mcdla — the paper's stress-test policy).
+    # stash everything (mcdla/host — the paper's stress-test policies).
     per_dev_saved = [b / n_dev for (_, b, _) in sched]
-    resident += sum(per_dev_saved)
+    for b in per_dev_saved:
+        acct.alloc_local(b)
 
     for j in order:
         i, bytes_g, window_flops = sched[j]
-        if not stash_all and resident <= budget:
+        if not stash_all and acct.fits:
             decisions.append(Decision(i, "keep", bytes_g, 0.0))
             continue
         layer = dag.layers[i]
@@ -111,19 +122,22 @@ def plan_memory(dag: LayerDAG, plan: MeshPlan, memory: MemoryPlan,
         window = window_flops / eff_flops
         if memory.recompute_cheap and recomp < xfer:
             decisions.append(Decision(i, "recompute", bytes_g, 0.0))
-            resident -= per_dev_saved[j]
+            acct.alloc_local(-per_dev_saved[j])
         else:
             stall = max(0.0, xfer - window)
             decisions.append(Decision(i, "pool", bytes_g, stall))
-            resident -= per_dev_saved[j]
-            pooled += bytes_g * ratio / pool_n
+            acct.alloc_local(-per_dev_saved[j])
+            tier.account(acct, bytes_g)
 
     decisions.sort(key=lambda d: d.layer)
-    return MemoryPlanReport(decisions, resident, pooled, budget)
+    return MemoryPlanReport(decisions, acct.local_bytes, acct.pooled_bytes,
+                            acct.budget, tier=tier.describe(),
+                            host_bytes=acct.host_bytes)
 
 
 def summarize(report: MemoryPlanReport) -> str:
-    return (f"keep={report.count('keep')} pool={report.count('pool')} "
+    return (f"tier={report.tier} "
+            f"keep={report.count('keep')} pool={report.count('pool')} "
             f"recompute={report.count('recompute')} "
             f"resident={report.resident_bytes_per_dev/1e9:.2f}GB "
             f"pooled={report.pooled_bytes_per_dev/1e9:.2f}GB "

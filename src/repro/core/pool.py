@@ -133,6 +133,8 @@ class PoolAccountant:
     memory: MemoryPlan
     local_bytes: float = 0.0          # resident per-device bytes
     pooled_bytes: float = 0.0         # per-device share of pooled tensors
+    host_bytes: float = 0.0           # per-device share parked in host DRAM
+                                      # (no HBM cost)
 
     @property
     def pool_devices(self) -> int:
@@ -148,6 +150,10 @@ class PoolAccountant:
     def alloc_pooled(self, nbytes: float) -> None:
         # a pooled tensor of `nbytes` costs nbytes/pool_size per chip
         self.pooled_bytes += nbytes / max(self.pool_devices, 1)
+
+    def alloc_host(self, nbytes: float) -> None:
+        # host-tier stash: occupies DRAM, not HBM (DC-DLA baseline)
+        self.host_bytes += nbytes
 
     @property
     def per_device(self) -> float:

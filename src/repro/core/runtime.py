@@ -1,0 +1,317 @@
+"""``MemoryRuntime`` — the single facade over the memory-tier machinery.
+
+The paper's runtime (§III-B) is one object: it knows the mesh, the backing
+store, and the stash/prefetch schedule, and the model simply runs layers.
+This module is that object for the repro.  Built once from
+``(MeshPlan, MemoryPlan)``, it owns the sharding planner, the mesh handle
+and the :class:`~repro.core.tiers.MemoryTier` stack, and exposes the one
+``wrap_layer`` entry point the rest of the codebase uses:
+
+  forward:  y = layer(params, x)            (compute uses the exact x)
+            payload = tier.stash(x)         (copy-out to the backing store)
+  residual: (params, payload, aux)          (x itself is NOT saved)
+  backward: x' = tier.fetch(payload)        (prefetch ahead of use)
+            recompute layer vjp from x'
+
+Under ``jax.lax.scan`` over layers, XLA's latency-hiding scheduler overlaps
+the stash collective of layer *i* with the compute of layer *i+1* — the TPU
+analogue of the paper's DMA/compute overlap.  Cheap intermediates are
+recomputed in backward (footnote 4) because the vjp re-runs the layer body.
+
+Every stash/fetch is metered at trace time: :meth:`traffic_report` gives
+per-tier logical and wire bytes plus an estimated transfer time against the
+tier's bandwidth contract — surfaced by ``launch/dryrun.py`` next to XLA's
+``memory_analysis()`` numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import hw
+from repro.configs.base import MemoryPlan, MeshPlan
+from repro.core import policy as policy_mod
+from repro.core.dag import LayerDAG, build_dag
+from repro.core.tiers import MemoryTier, TransferHints, build_tier
+from repro.parallel.sharding import ShardingPlanner
+
+# big float aux (e.g. encoder states feeding cross-attention) pool too
+AUX_STASH_NDIM = 3
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TierTraffic:
+    """Trace-time transfer meter for one direction through the tier.
+
+    Counts are per *traced* call: a layer wrapped inside ``jax.lax.scan``
+    traces its body once, so multiply by the trip count (the dry-run's
+    group count) for whole-step totals.
+    """
+
+    calls: int = 0
+    raw_bytes: float = 0.0        # tensor bytes before compression
+    wire_bytes: float = 0.0       # bytes that actually cross the interconnect
+
+    def add(self, raw: float, wire: float) -> None:
+        self.calls += 1
+        self.raw_bytes += raw
+        self.wire_bytes += wire
+
+
+class MemoryRuntime:
+    """Facade: planner + mesh + tier + per-call accounting.
+
+    Everything the old call sites hand-threaded — ``(planner, mesh, memory,
+    compute_spec, batch_dim)`` — lives here; model code asks for
+    ``wrap_layer`` and nothing else.
+    """
+
+    def __init__(self, plan: MeshPlan, memory: MemoryPlan,
+                 mesh: Optional[Mesh] = None,
+                 planner: Optional[ShardingPlanner] = None,
+                 chip: hw.Chip = hw.TPU_V5E):
+        self.plan = plan
+        self.memory = memory
+        self.mesh = mesh
+        self.chip = chip
+        self.planner = planner if planner is not None else ShardingPlanner(plan)
+        self.tier: MemoryTier = build_tier(memory, self.planner, mesh)
+        self._traffic: Dict[str, TierTraffic] = {}
+
+    # ------------------------------------------------------------------
+    # traits
+    @property
+    def offloads(self) -> bool:
+        """Whether wrapped layers actually move their saved tensors."""
+        return self.tier.offloads
+
+    def describe(self) -> str:
+        return (f"runtime[tier={self.tier.describe()} "
+                f"mesh={'x'.join(map(str, self.plan.shape))}]")
+
+    # ------------------------------------------------------------------
+    # layout defaults
+    def residual_spec(self, name: str = "resid") -> Callable[[Sequence[int]], P]:
+        """Shape-aware compute layout of the residual stream: batch axes on
+        dim 0, sequence-parallel dim 1 over the tensor axes when enabled."""
+
+        def spec(shape):
+            roles: list = [self.planner.axes.batch] + [None] * (len(shape) - 1)
+            if self.memory.seq_parallel and len(shape) >= 3:
+                roles[1] = self.planner.axes.tensor
+            return self.planner.spec(shape, roles, name=name)
+
+        return spec
+
+    def _aux_spec(self, compute_spec, shape) -> Optional[P]:
+        """Layout for a fetched *aux* tensor.
+
+        Aux tensors (encoder states, caches, ...) generally differ in
+        rank/shape from the residual stream, so a static residual
+        ``compute_spec`` must NOT be applied to them — derive a layout from
+        the planner instead (shape-aware callables already do)."""
+        if callable(compute_spec):
+            return compute_spec(shape)
+        roles = [self.planner.axes.batch] + [None] * (len(shape) - 1)
+        return self.planner.spec(shape, roles, name="aux_fetch")
+
+    # ------------------------------------------------------------------
+    # accounting
+    def _meter(self, direction: str, x: jax.Array,
+               hints: Optional[TransferHints] = None) -> None:
+        raw = float(x.size) * jnp.dtype(x.dtype).itemsize
+        wire = raw * self.tier.wire_ratio(x, hints or TransferHints())
+        self._traffic.setdefault(direction, TierTraffic()).add(raw, wire)
+
+    def reset_traffic(self) -> None:
+        self._traffic = {}
+
+    def traffic_report(self) -> Dict[str, Any]:
+        """Per-tier byte/stall accounting of every metered stash/fetch."""
+        bw = self.tier.bandwidth(self.plan, self.chip)
+        n_dev = max(self.plan.num_devices, 1)
+        report: Dict[str, Any] = {
+            "tier": self.tier.describe(),
+            "bandwidth_per_dev": bw,
+        }
+        total_wire = 0.0
+        for direction, t in sorted(self._traffic.items()):
+            report[direction] = {
+                "calls": t.calls, "raw_bytes": t.raw_bytes,
+                "wire_bytes": t.wire_bytes,
+            }
+            total_wire += t.wire_bytes
+        report["wire_bytes_total"] = total_wire
+        # global bytes stream through n_dev links in parallel
+        report["est_transfer_s"] = (total_wire / (bw * n_dev)
+                                    if bw > 0 and total_wire else 0.0)
+        return report
+
+    def traffic_summary(self) -> str:
+        r = self.traffic_report()
+        per = {d: f"{fmt_bytes(v['wire_bytes'])}/{v['calls']}x"
+               for d, v in r.items() if isinstance(v, dict)}
+        return (f"tier={r['tier']} wire={fmt_bytes(r['wire_bytes_total'])} "
+                f"est_transfer={r['est_transfer_s']*1e3:.2f}ms {per}")
+
+    # ------------------------------------------------------------------
+    # data path (metered tier passthrough)
+    def stash(self, x: jax.Array, hints: Optional[TransferHints] = None):
+        hints = hints or TransferHints()
+        if self.offloads:
+            self._meter("stash", x, hints)
+        return self.tier.stash(x, hints)
+
+    def fetch(self, payload, hints: Optional[TransferHints] = None):
+        hints = hints or TransferHints()
+        x = self.tier.fetch(payload, hints)
+        if self.offloads:
+            self._meter("fetch", x, hints)
+        return x
+
+    # ------------------------------------------------------------------
+    # the one wrapper
+    def wrap_layer(self, layer_fn: Callable,
+                   compute_spec: Optional[object] = "auto",
+                   batch_dim: int = 0,
+                   name: str = "layer") -> Callable:
+        """Wrap ``layer_fn(params, x, *aux) -> y`` so the saved-for-backward
+        copy of ``x`` lives in this runtime's tier.
+
+        * ``compute_spec``: the layout to restore on fetch — a static
+          PartitionSpec, a shape-aware callable, None, or the default
+          ``"auto"`` (the residual-stream layout for this memory plan).
+        * params and small aux are saved by reference; float aux with
+          ndim >= 3 are stashed too (uncompressed — they must round-trip
+          bit-exactly for the cotangent path).
+        """
+        if not self.offloads:
+            return layer_fn
+        if compute_spec == "auto":
+            compute_spec = self.residual_spec(name)
+        tier = self.tier
+        runtime = self
+
+        def hints_for(dtype=None, allow_compress=True) -> TransferHints:
+            return TransferHints(compute_spec=compute_spec,
+                                 batch_dim=batch_dim, dtype=dtype,
+                                 allow_compress=allow_compress, name=name)
+
+        @jax.custom_vjp
+        def f(params, x, *aux):
+            return layer_fn(params, x, *aux)
+
+        def f_fwd(params, x, *aux):
+            y = layer_fn(params, x, *aux)
+            payload = runtime.stash(x, hints_for())
+            witness = jnp.zeros((), x.dtype)    # dtype token (residuals must
+            flags = _split_aux(aux)             # be JAX types)
+            saved_aux = []
+            for a, fl in zip(aux, flags):
+                if (runtime.memory.stash_aux and fl
+                        and getattr(a, "ndim", 0) >= AUX_STASH_NDIM):
+                    saved_aux.append(runtime.stash(
+                        a, hints_for(allow_compress=False)))
+                else:
+                    saved_aux.append(a)
+            return y, (params, payload, witness, tuple(saved_aux))
+
+        def f_bwd(res, gy):
+            params, payload, witness, saved_aux = res
+            x = runtime.fetch(payload, hints_for(dtype=witness.dtype))
+            aux = []
+            for sa in saved_aux:
+                if isinstance(sa, tuple):
+                    # aux tensors differ in rank/shape from the residual —
+                    # they derive their own fetch layout (never the static
+                    # residual compute_spec)
+                    shape = sa[0].shape
+                    aux.append(runtime.fetch(sa, TransferHints(
+                        compute_spec=runtime._aux_spec(compute_spec, shape),
+                        batch_dim=batch_dim, dtype=witness.dtype,
+                        allow_compress=False, name=f"{name}_aux")))
+                else:
+                    aux.append(sa)
+            aux = tuple(aux)
+            flags = _split_aux(aux)
+            diff_aux = tuple(a for a, fl in zip(aux, flags) if fl)
+
+            def call(p, xx, *da):
+                it = iter(da)
+                full = tuple(next(it) if fl else a
+                             for a, fl in zip(aux, flags))
+                return layer_fn(p, xx, *full)
+
+            _, vjp = jax.vjp(call, params, x, *diff_aux)
+            grads = vjp(gy)
+            dp, dx, d_diff = grads[0], grads[1], list(grads[2:])
+            if compute_spec is not None:
+                # constrain the residual-stream cotangent to the same layout
+                # as the primal: GSPMD can then turn the TP backward
+                # all-reduces into reduce-scatters (Megatron-SP; §Perf)
+                spec = compute_spec(dx.shape) if callable(compute_spec) \
+                    else compute_spec
+                dx = tier._constrain(dx, spec)
+            d_aux = tuple(d_diff.pop(0) if fl else None for fl in flags)
+            return (dp, dx) + d_aux
+
+        f.defvjp(f_fwd, f_bwd)
+        return f
+
+    # ------------------------------------------------------------------
+    # planning (KEEP/POOL/RECOMPUTE through the tier cost contract)
+    def plan_report(self, dag: LayerDAG,
+                    model_state_bytes: float = 0.0):
+        return policy_mod.plan_memory(dag, self.plan, self.memory,
+                                      chip=self.chip,
+                                      model_state_bytes=model_state_bytes,
+                                      tier=self.tier)
+
+    def stash_fraction(self, dag: LayerDAG,
+                       model_state_bytes: float = 0.0) -> float:
+        """Fraction of layers this runtime stashes: 0 when the tier keeps
+        everything resident, 1 for stash-all tiers, cost-model-derived
+        otherwise."""
+        if not self.offloads:
+            return 0.0
+        if self.tier.stash_all:
+            return 1.0
+        report = self.plan_report(dag, model_state_bytes=model_state_bytes)
+        pooled = report.count("pool") + report.count("recompute")
+        return pooled / max(len(report.decisions), 1)
+
+    def resolve_stash_groups(self, cfg, shape, n_groups: int) -> int:
+        """Number of scanned layer groups to stash (largest reuse distance
+        first, matching the planner's eviction order)."""
+        if not self.offloads:
+            return 0
+        if self.tier.stash_all:
+            return n_groups
+        dag = build_dag(cfg, shape)
+        opt_bytes = 2 + (8 if self.memory.opt_state_bits == 32 else 2) + 4
+        frac = self.stash_fraction(
+            dag, model_state_bytes=cfg.param_count() * opt_bytes)
+        k = int(round(n_groups * frac))
+        return max(0, min(n_groups, k))
+
+
+# ---------------------------------------------------------------------------
+def fmt_bytes(n: float) -> str:
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if n >= div:
+            return f"{n/div:.2f}{unit}"
+    return f"{n:.0f}B"
+
+
+# ---------------------------------------------------------------------------
+def _split_aux(aux: Sequence[Any]):
+    """Partition aux leaves into differentiable / non-differentiable."""
+    return tuple(
+        isinstance(a, (jax.Array, jnp.ndarray)) and
+        jnp.issubdtype(jnp.result_type(a), jnp.inexact)
+        for a in aux)

@@ -1,0 +1,461 @@
+"""Pluggable ``MemoryTier`` backing stores — the paper's memory hierarchy as
+a first-class API.
+
+The paper's central claim (§III) is *transparent* memory-capacity expansion:
+the runtime decides where a tensor lives — device HBM, pooled HBM over the
+device-side interconnect, or host DRAM — without the model knowing.  This
+module is that decision surface.  Each backing store is a :class:`MemoryTier`
+with a uniform contract:
+
+  ``stash(x, hints)``      copy-out to the tier; returns an opaque payload
+  ``fetch(payload, hints)`` prefetch back, restored to the compute layout
+  ``bandwidth(plan, chip)`` per-device stash/fetch bandwidth (cost model)
+  ``capacity(accountant)``  bytes one device can address through the tier
+  ``account(acct, nbytes)`` charge a stashed tensor to the boot-time map
+
+Shipped tiers (DESIGN.md §3):
+
+* :class:`DeviceTier`     — KEEP / the oracle DC-DLA(O): nothing leaves HBM.
+* :class:`PooledHbmTier`  — MC-DLA: the aggregate HBM of the mesh reached
+  over ICI, BW_AWARE or LOCAL placement (core/pool.py, paper Fig. 10).
+* :class:`HostTier`       — DC-DLA baseline: pinned host memory over PCIe.
+* :class:`CompressedTier` — decorator adding the memory-node's "optional
+  compression ASIC" (§III-A) to any tier; codecs are registry-extensible
+  (fp8 ships; int8/zstd-style codecs slot in via :func:`register_codec`).
+
+Policies map to tiers through :func:`build_tier` — the ONLY place in the
+codebase that branches on ``MemoryPlan.policy`` strings.  Everything else
+(models, train, serve, sim, the planner) dispatches through the tier object
+or the :class:`repro.core.runtime.MemoryRuntime` facade.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import hw
+from repro.configs.base import MemoryPlan, MeshPlan
+from repro.core import compress as comp
+from repro.core.pool import PoolAccountant, PoolAxes, pool_spec
+from repro.parallel.sharding import ShardingPlanner
+
+# (data, optional codec scale) — the opaque unit a tier hands back from stash
+Payload = Tuple[jax.Array, Optional[jax.Array]]
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TransferHints:
+    """Per-call context a tier may consult when placing a tensor.
+
+    compute_spec: the layout the *compute* wants the tensor back in — a
+      static PartitionSpec, a shape-aware callable ``shape -> spec``, or
+      None (leave the tier's layout in place).
+    batch_dim: index of the global-batch dim (pool placement stripes it).
+    dtype: dtype to restore on fetch (codecs decompress into it).
+    allow_compress: False for tensors that must round-trip bit-exactly
+      (e.g. aux residuals validated against an uncompressed oracle).
+    name: label for sharding-planner fallbacks and traffic accounting.
+    """
+
+    compute_spec: object = None
+    batch_dim: int = 0
+    dtype: Optional[jnp.dtype] = None
+    allow_compress: bool = True
+    name: str = "stash"
+
+    def resolved_spec(self, shape) -> Optional[P]:
+        if self.compute_spec is None:
+            return None
+        if callable(self.compute_spec):
+            return self.compute_spec(shape)
+        return self.compute_spec
+
+
+# ---------------------------------------------------------------------------
+class MemoryTier(abc.ABC):
+    """One backing store of the memory hierarchy.
+
+    Tiers are built once per run by :func:`build_tier` and threaded through
+    :class:`repro.core.runtime.MemoryRuntime`; they hold the (planner, mesh)
+    pair so call sites never hand-thread sharding state again.
+    """
+
+    #: short id used in reports and the registry
+    kind: str = "abstract"
+
+    def __init__(self, planner: ShardingPlanner, mesh: Optional[Mesh],
+                 memory: MemoryPlan, *, stash_all: bool = True):
+        self.planner = planner
+        self.mesh = mesh
+        self.memory = memory
+        # policy trait: stash every layer (paper's stress-test mode) vs let
+        # the KEEP/POOL/RECOMPUTE planner choose a stash fraction.
+        self.stash_all = stash_all
+
+    # -- data path ---------------------------------------------------------
+    @abc.abstractmethod
+    def stash(self, x: jax.Array, hints: TransferHints) -> Payload:
+        """Copy-out ``x`` to the tier; returns an opaque payload."""
+
+    @abc.abstractmethod
+    def fetch(self, payload: Payload, hints: TransferHints) -> jax.Array:
+        """Prefetch a payload back into the compute layout."""
+
+    # -- cost contract -----------------------------------------------------
+    @abc.abstractmethod
+    def bandwidth(self, plan: MeshPlan, chip: hw.Chip = hw.TPU_V5E) -> float:
+        """Per-device stash/fetch bandwidth in bytes/s (cost-model input)."""
+
+    @abc.abstractmethod
+    def capacity(self, accountant: PoolAccountant) -> float:
+        """Bytes one device can address through this tier (paper Fig. 10
+        boot-time memory map)."""
+
+    def account(self, accountant: PoolAccountant, nbytes: float) -> None:
+        """Charge a stashed tensor of global ``nbytes`` to the memory map."""
+        accountant.alloc_pooled(nbytes)
+
+    # -- traits ------------------------------------------------------------
+    @property
+    def offloads(self) -> bool:
+        """False when stashing is a no-op (tensors stay resident)."""
+        return True
+
+    def payload_ratio(self) -> float:
+        """Stashed bytes per raw byte (codecs shrink this below 1)."""
+        return 1.0
+
+    def wire_ratio(self, x: jax.Array, hints: TransferHints) -> float:
+        """Actual bytes-per-raw-byte for THIS transfer — unlike
+        ``payload_ratio`` it accounts for tensors a codec would skip
+        (non-float dtypes, ``allow_compress=False``)."""
+        return 1.0
+
+    def describe(self) -> str:
+        return self.kind
+
+    # -- helpers -----------------------------------------------------------
+    def _constrain(self, x: jax.Array, spec: Optional[P]) -> jax.Array:
+        if spec is None or self.mesh is None or self.mesh.size <= 1:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+class DeviceTier(MemoryTier):
+    """KEEP / oracle tier: the tensor never leaves device HBM.
+
+    ``stash`` is the identity — this is DC-DLA(O), the paper's
+    infinite-memory baseline, and the KEEP arm of the auto planner.
+    """
+
+    kind = "device"
+
+    def stash(self, x: jax.Array, hints: TransferHints) -> Payload:
+        return (x, None)
+
+    def fetch(self, payload: Payload, hints: TransferHints) -> jax.Array:
+        return payload[0]
+
+    def bandwidth(self, plan: MeshPlan, chip: hw.Chip = hw.TPU_V5E) -> float:
+        return chip.hbm_bw
+
+    def capacity(self, accountant: PoolAccountant) -> float:
+        return accountant.budget
+
+    def account(self, accountant: PoolAccountant, nbytes: float) -> None:
+        # global bytes stay resident, batch-sharded across the devices
+        accountant.alloc_local(nbytes / max(accountant.plan.num_devices, 1))
+
+    @property
+    def offloads(self) -> bool:
+        return False
+
+
+# ---------------------------------------------------------------------------
+class PooledHbmTier(MemoryTier):
+    """MC-DLA: the aggregate HBM of the mesh as the backing store.
+
+    A stashed tensor is re-sharded so every chip of the pool keeps only
+    1/pool_size of it (core/pool.py BW_AWARE/LOCAL placements, paper
+    Fig. 10) and all-gathered over ICI right before its backward use.
+    """
+
+    kind = "pooled_hbm"
+
+    def stash(self, x: jax.Array, hints: TransferHints) -> Payload:
+        spec = pool_spec(x.shape, self.planner, self.memory.placement,
+                         hints.batch_dim, name=hints.name)
+        return (self._constrain(x, spec), None)
+
+    def fetch(self, payload: Payload, hints: TransferHints) -> jax.Array:
+        x, _ = payload
+        return self._constrain(x, hints.resolved_spec(x.shape))
+
+    def bandwidth(self, plan: MeshPlan, chip: hw.Chip = hw.TPU_V5E) -> float:
+        """bw_aware engages the ICI links of every mesh dimension the pool
+        spans (paper Fig. 10: all N links, left+right nodes); local engages
+        one dimension's links.  A 2D torus gives 2 links per dimension."""
+        dims = len(PoolAxes(plan).axes_for(self.memory.placement))
+        links = min(2 * dims, chip.num_links)
+        return links * chip.link_bw
+
+    def capacity(self, accountant: PoolAccountant) -> float:
+        return accountant.system_capacity()
+
+    def pool_devices(self, plan: MeshPlan) -> int:
+        return PoolAxes(plan).pool_size(self.memory.placement)
+
+    def describe(self) -> str:
+        return f"{self.kind}[{self.memory.placement}]"
+
+
+# ---------------------------------------------------------------------------
+class HostTier(MemoryTier):
+    """DC-DLA baseline: virtualize against pinned host memory over PCIe.
+
+    Uses ``memory_kind='pinned_host'`` where the backend supports it (TPU
+    does; the CPU test backend silently no-ops and the DC/HC/MC contrast is
+    reproduced in ``sim/``).
+    """
+
+    kind = "host"
+
+    _backend_has_pinned_host: Optional[bool] = None
+
+    @classmethod
+    def _supported(cls) -> bool:
+        """True when the backend really exposes a pinned_host memory space.
+
+        The CPU test backend advertises only 'unpinned_host' and its SPMD
+        partitioner rejects the placement annotation under scan — so the
+        host tier must genuinely no-op there (the DC/HC/MC contrast is
+        reproduced in ``sim/`` instead)."""
+        if cls._backend_has_pinned_host is None:
+            try:
+                kinds = {m.kind for m in
+                         jax.devices()[0].addressable_memories()}
+                cls._backend_has_pinned_host = "pinned_host" in kinds
+            except Exception:
+                cls._backend_has_pinned_host = False
+        return cls._backend_has_pinned_host
+
+    @classmethod
+    def _transfer(cls, x: jax.Array, memory_kind: str) -> jax.Array:
+        if not cls._supported():
+            return x
+        try:
+            from jax._src.sharding_impls import TransferToMemoryKind  # noqa
+            return jax.device_put(x, TransferToMemoryKind(memory_kind))
+        except Exception:
+            return x
+
+    def stash(self, x: jax.Array, hints: TransferHints) -> Payload:
+        return (self._transfer(x, "pinned_host"), None)
+
+    def fetch(self, payload: Payload, hints: TransferHints) -> jax.Array:
+        return self._transfer(payload[0], "device")
+
+    def bandwidth(self, plan: MeshPlan, chip: hw.Chip = hw.TPU_V5E) -> float:
+        """PCIe path, root-complex shared across the host's devices (paper
+        §I: per-device host bandwidth divides by intra-node device count)."""
+        local_devices = max(1, min(plan.num_devices, hw.DEVICES_PER_HOST))
+        shared = 2 * hw.PCIE_ROOT_PER_SOCKET / local_devices
+        return min(hw.PCIE_GEN3_BW, shared)
+
+    def capacity(self, accountant: PoolAccountant) -> float:
+        return hw.HOST_DRAM_BYTES
+
+    def account(self, accountant: PoolAccountant, nbytes: float) -> None:
+        # each device parks its own shard in host DRAM (per-device share,
+        # matching the accountant's other per-device fields)
+        accountant.alloc_host(nbytes / max(accountant.plan.num_devices, 1))
+
+
+# ---------------------------------------------------------------------------
+# codec registry — the memory-node's "optional compression ASIC" (§III-A)
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    name: str
+    ratio: float                                   # stashed bytes per raw byte
+    compress: Callable[[jax.Array], Tuple[jax.Array, jax.Array]]
+    decompress: Callable[..., jax.Array]           # (q, scale, dtype) -> x
+
+    def applies_to(self, x: jax.Array) -> bool:
+        return jnp.issubdtype(x.dtype, jnp.floating)
+
+
+_CODECS: Dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec) -> None:
+    _CODECS[codec.name] = codec
+
+
+def get_codec(name: str) -> Codec:
+    if name not in _CODECS:
+        raise KeyError(f"unknown stash codec {name!r}; "
+                       f"registered: {sorted(_CODECS)}")
+    return _CODECS[name]
+
+
+def registered_codecs() -> Tuple[str, ...]:
+    return tuple(sorted(_CODECS))
+
+
+register_codec(Codec("fp8", comp.compress_ratio("fp8"),
+                     comp.fp8_compress, comp.fp8_decompress))
+
+
+class CompressedTier(MemoryTier):
+    """Decorator: quantize-and-pack before any tier's stash collective.
+
+    Halves (fp8) the bytes that cross the wire AND that occupy the inner
+    tier — composable with pooled HBM and host alike, subsuming the old
+    ``allow_compress`` flag threading.
+    """
+
+    kind = "compressed"
+
+    def __init__(self, inner: MemoryTier, codec: str = "fp8"):
+        super().__init__(inner.planner, inner.mesh, inner.memory,
+                         stash_all=inner.stash_all)
+        self.inner = inner
+        self.codec = get_codec(codec)
+
+    def stash(self, x: jax.Array, hints: TransferHints) -> Payload:
+        if not hints.allow_compress or not self.codec.applies_to(x):
+            return self.inner.stash(x, hints)
+        q, scale = self.codec.compress(x)
+        payload, _ = self.inner.stash(q, hints)
+        return (payload, scale)
+
+    def fetch(self, payload: Payload, hints: TransferHints) -> jax.Array:
+        q, scale = payload
+        if scale is None:
+            return self.inner.fetch(payload, hints)
+        # fetch the packed bytes through the inner tier in its own layout,
+        # decompress, then restore the compute layout
+        raw = self.inner.fetch(
+            (q, None), dataclasses.replace(hints, compute_spec=None))
+        x = self.codec.decompress(raw, scale, hints.dtype or jnp.bfloat16)
+        return self._constrain(x, hints.resolved_spec(x.shape))
+
+    def bandwidth(self, plan: MeshPlan, chip: hw.Chip = hw.TPU_V5E) -> float:
+        return self.inner.bandwidth(plan, chip)
+
+    def capacity(self, accountant: PoolAccountant) -> float:
+        return self.inner.capacity(accountant)
+
+    def account(self, accountant: PoolAccountant, nbytes: float) -> None:
+        self.inner.account(accountant, nbytes * self.codec.ratio)
+
+    @property
+    def offloads(self) -> bool:
+        return self.inner.offloads
+
+    def payload_ratio(self) -> float:
+        return self.codec.ratio * self.inner.payload_ratio()
+
+    def wire_ratio(self, x: jax.Array, hints: TransferHints) -> float:
+        if hints.allow_compress and self.codec.applies_to(x):
+            return self.codec.ratio * self.inner.wire_ratio(x, hints)
+        return self.inner.wire_ratio(x, hints)
+
+    def describe(self) -> str:
+        return f"{self.inner.describe()}+{self.codec.name}"
+
+
+# ---------------------------------------------------------------------------
+# tier registry: MemoryPlan.policy -> tier.  The one sanctioned policy-string
+# dispatch in the codebase (everything else goes through the tier object).
+TierFactory = Callable[[MemoryPlan, ShardingPlanner, Optional[Mesh]],
+                       MemoryTier]
+
+
+@dataclasses.dataclass(frozen=True)
+class TierBinding:
+    factory: TierFactory
+    stash_all: bool          # stash every layer vs planner-chosen fraction
+
+
+_TIER_REGISTRY: Dict[str, TierBinding] = {}
+
+
+def register_tier(policy: str, factory: TierFactory,
+                  stash_all: bool = True) -> None:
+    _TIER_REGISTRY[policy] = TierBinding(factory, stash_all)
+
+
+def registered_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_TIER_REGISTRY))
+
+
+def build_tier(memory: MemoryPlan, planner: ShardingPlanner,
+               mesh: Optional[Mesh] = None) -> MemoryTier:
+    """Resolve a :class:`MemoryPlan` to its tier stack.
+
+    Configs stay plain serializable dataclasses; this is where the policy
+    string becomes an object.  ``compress != 'none'`` wraps the tier in a
+    :class:`CompressedTier` (a no-op stack on the device tier, which never
+    moves bytes).
+    """
+    if memory.policy not in _TIER_REGISTRY:
+        raise KeyError(f"unknown memory policy {memory.policy!r}; "
+                       f"registered: {registered_policies()}")
+    binding = _TIER_REGISTRY[memory.policy]
+    tier = binding.factory(memory, planner, mesh)
+    tier.stash_all = binding.stash_all
+    if memory.compress != "none" and tier.offloads:
+        tier = CompressedTier(tier, memory.compress)
+    return tier
+
+
+register_tier("none",
+              lambda m, p, mesh: DeviceTier(p, mesh, m), stash_all=False)
+register_tier("host",
+              lambda m, p, mesh: HostTier(p, mesh, m), stash_all=True)
+register_tier("mcdla",
+              lambda m, p, mesh: PooledHbmTier(p, mesh, m), stash_all=True)
+# "auto" uses the same pooled tier; the KEEP/POOL/RECOMPUTE planner
+# (core/policy.py) decides the stash fraction instead of stashing all.
+register_tier("auto",
+              lambda m, p, mesh: PooledHbmTier(p, mesh, m), stash_all=False)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """Hardware-model-level bandwidth/capacity contract of a backing store.
+
+    The executable tiers above move real arrays; this spec is their analytic
+    twin used by ``sim/`` to model the paper's DC/HC/MC design points as
+    tier configurations (same contract, no jax arrays).
+    """
+
+    kind: str                          # device | host | pooled
+    bw_per_device: float               # stash/fetch bytes/s per device
+    shared_bw: float = 0.0             # host-side cap (0 = uncapped)
+    uses_cpu: bool = False             # traffic counts against CPU memory BW
+    capacity_bytes: float = float("inf")
+
+    @property
+    def is_oracle(self) -> bool:
+        return self.kind == "device"
+
+    def effective_bw(self, n_devices: int, n_sockets: int = 2) -> float:
+        """Per-device bandwidth when ``n_devices`` stream concurrently —
+        the paper's §I observation that shared host links divide."""
+        if self.is_oracle:
+            return float("inf")
+        bw = self.bw_per_device
+        if self.shared_bw > 0:
+            bw = min(bw, self.shared_bw * n_sockets / max(n_devices, 1))
+        return bw

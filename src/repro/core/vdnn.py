@@ -1,20 +1,16 @@
-"""vdnn — the policy-driven layer wrapper (the memory-overlaying runtime).
+"""vdnn — legacy wrapper entry point, now a thin veneer over MemoryRuntime.
 
-``wrap_layer`` is the single entry point the model code uses: given the
-run's :class:`MemoryPlan` it returns the layer function with the right
-saved-for-backward behaviour:
-
-* ``none``   — oracle DC-DLA(O): plain layer, everything resident.
-* ``mcdla``  — paper-faithful: every layer's input feature map is stashed to
-               the pooled tier (core.offload), intermediates recomputed.
-* ``host``   — DC-DLA baseline: stash to host memory (PCIe path on real HW).
-* ``auto``   — beyond-paper: the core.policy cost model picks KEEP for as
-               many layers as the HBM budget allows; the rest POOL.
+Historically this module was one of three divergent wrapper entry points
+(`core.offload.maybe_offload`, `VdnnContext.wrap_layer`,
+`models.layers.ModelContext.wrap`).  All three now delegate to
+:class:`repro.core.runtime.MemoryRuntime` — the single facade that owns the
+planner, the mesh and the :class:`~repro.core.tiers.MemoryTier` stack.
+Prefer constructing a ``MemoryRuntime`` directly in new code.
 
 Under scan-over-layers all layers share one body, so ``auto`` is realised
 with a *stash fraction*: the planner returns r = pooled/(pooled+kept) and
-``scan_stash_fraction`` partitions the scanned stack into a kept prefix and
-a pooled suffix (early layers have the largest reuse distance — they are
+``split_layers`` partitions the scanned stack into a kept prefix and a
+pooled suffix (early layers have the largest reuse distance — they are
 stashed first, exactly the planner's eviction order).
 """
 from __future__ import annotations
@@ -22,45 +18,42 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
-import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import MemoryPlan, MeshPlan
-from repro.core import policy as policy_mod
 from repro.core.dag import LayerDAG
-from repro.core.offload import maybe_offload
+from repro.core.runtime import MemoryRuntime
 from repro.parallel.sharding import ShardingPlanner
 
 
 @dataclasses.dataclass
 class VdnnContext:
+    """Deprecated shim — use :class:`repro.core.runtime.MemoryRuntime`."""
+
     planner: ShardingPlanner
     mesh: Optional[Mesh]
     memory: MemoryPlan
+
+    def __post_init__(self):
+        self.runtime = MemoryRuntime(self.planner.plan, self.memory,
+                                     self.mesh, planner=self.planner)
 
     def wrap_layer(self, layer_fn: Callable,
                    compute_spec: Optional[P] = None,
                    batch_dim: int = 0) -> Callable:
         """Offload-wrap a layer according to the memory policy."""
-        if self.memory.policy == "none" or self.mesh is None:
+        if self.mesh is None:
             return layer_fn
-        return maybe_offload(layer_fn, self.planner, self.mesh, self.memory,
-                             compute_spec, batch_dim)
+        return self.runtime.wrap_layer(layer_fn, compute_spec=compute_spec,
+                                       batch_dim=batch_dim)
 
 
 def stash_fraction(dag: LayerDAG, plan: MeshPlan, memory: MemoryPlan,
                    model_state_bytes: float = 0.0) -> float:
-    """Fraction of layers the policy stashes (1.0 for mcdla/host;
-    cost-model-derived for auto; 0.0 for none)."""
-    if memory.policy == "none":
-        return 0.0
-    if memory.policy in ("mcdla", "host"):
-        return 1.0
-    report = policy_mod.plan_memory(dag, plan, memory,
-                                    model_state_bytes=model_state_bytes)
-    pooled = report.count("pool") + report.count("recompute")
-    total = len(report.decisions)
-    return pooled / max(total, 1)
+    """Fraction of layers the policy stashes (1.0 for stash-all tiers;
+    cost-model-derived for auto; 0.0 when nothing offloads)."""
+    return MemoryRuntime(plan, memory).stash_fraction(
+        dag, model_state_bytes=model_state_bytes)
 
 
 def split_layers(num_layers: int, fraction: float) -> int:

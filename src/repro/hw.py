@@ -75,6 +75,15 @@ PAPER_MEMNODE = MemNode(
 PCIE_GEN3_BW = 16e9            # x16 per direction (DC-DLA host link)
 PCIE_GEN4_BW = 32e9            # sensitivity study (paper §V-B)
 
+# DGX-1-style PCIe tree: 4 GPUs share one CPU socket's root complex
+# (~2 x16 uplinks worth).  Paper §I: per-device host bandwidth divides by
+# the number of intra-node devices streaming concurrently.
+PCIE_ROOT_PER_SOCKET = 32e9
+DEVICES_PER_HOST = 8           # intra-node devices sharing the host links
+
+# host DRAM visible to one device's virtualization (DC-DLA backing store)
+HOST_DRAM_BYTES = 512 * GB
+
 # host CPU socket memory bandwidth (paper §II-C): Xeon 80 GB/s, Power9 120;
 # the hypothetical HC-DLA CPU is overprovisioned to 300 GB/s (paper §IV).
 XEON_SOCKET_BW = 80e9

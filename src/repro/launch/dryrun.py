@@ -202,6 +202,7 @@ def _lower_one(cfg, shape_name: str, *, multi_pod: bool, policy: str,
     run = RunConfig(model=cfg, shape=shape, mesh=plan, memory=memory,
                     train=tc)
     model = build_model(run, mesh=mesh)
+    model.runtime.reset_traffic()
     t0 = time.time()
 
     batch_sds = model.input_specs(shape)
@@ -251,8 +252,14 @@ def _lower_one(cfg, shape_name: str, *, multi_pod: bool, policy: str,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):          # older jax returns [dict]
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
+    # per-tier stash/fetch traffic metered while tracing the step (counts
+    # are per traced layer group; scan bodies trace once — see
+    # MemoryRuntime.traffic_report)
+    traffic = model.runtime.traffic_report()
     res = {
         "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
@@ -266,6 +273,8 @@ def _lower_one(cfg, shape_name: str, *, multi_pod: bool, policy: str,
         "bytes_accessed_per_dev": ca.get("bytes accessed"),
         "collectives": colls,
         "collective_wire_bytes_per_dev": sum(colls.values()),
+        "tier": traffic["tier"],
+        "traffic": traffic,
     }
     return res
 
@@ -313,11 +322,14 @@ def main() -> int:
                                probes=not args.no_probes,
                                opt_bits=args.opt_bits, mesh=mesh)
                 results.append(r)
+                tr = r.get("traffic", {})
                 print(f"[ok]   {tag}: compile={r['compile_s']}s "
                       f"args={r['arg_bytes_per_dev']/1e9:.2f}GB "
                       f"temp={r['temp_bytes_per_dev']/1e9:.2f}GB "
                       f"flops/dev={r['flops_per_dev']:.3e} "
-                      f"coll/dev={r['collective_wire_bytes_per_dev']/1e9:.3f}GB")
+                      f"coll/dev={r['collective_wire_bytes_per_dev']/1e9:.3f}GB "
+                      f"tier[{tr.get('tier', '?')}]="
+                      f"{tr.get('wire_bytes_total', 0.0)/1e9:.3f}GB/group")
             except Exception as e:  # noqa: BLE001 — a failed cell is a bug
                 results.append({"arch": arch, "shape": shape.name,
                                 "mesh": "2x16x16" if args.multi_pod

@@ -23,6 +23,13 @@ class ModelContext:
     memory: MemoryPlan
     mesh: Optional[Mesh] = None
     mode: str = "train"                  # train | prefill | decode
+    runtime: Optional["MemoryRuntime"] = None
+
+    def __post_init__(self):
+        if self.runtime is None:
+            from repro.core.runtime import MemoryRuntime
+            self.runtime = MemoryRuntime(self.planner.plan, self.memory,
+                                         self.mesh, planner=self.planner)
 
     def constrain(self, x: jax.Array, assignment) -> jax.Array:
         if self.mesh is None or self.mesh.size == 1:
@@ -52,23 +59,14 @@ class ModelContext:
         return self.act(x, "batch", None, None)
 
     def wrap(self, name: str, fn):
-        """vDNN-wrap a sub-layer for training (core.offload): the layer's
-        input feature map is stashed to the pooled tier, intermediates are
-        recomputed in backward.  No-op for serving / oracle policy / no
-        mesh."""
-        if (self.mode != "train" or self.memory.policy == "none"
-                or self.mesh is None or self.mesh.size <= 1):
+        """vDNN-wrap a sub-layer for training (MemoryRuntime.wrap_layer):
+        the layer's input feature map is stashed to the configured memory
+        tier, intermediates are recomputed in backward.  No-op for serving /
+        a non-offloading tier / no mesh."""
+        if (self.mode != "train" or self.mesh is None
+                or self.mesh.size <= 1):
             return fn
-        from repro.core.offload import maybe_offload
-
-        def compute_spec(shape):
-            roles = [self.planner.axes.batch] + [None] * (len(shape) - 1)
-            if self.memory.seq_parallel and len(shape) >= 3:
-                roles[1] = self.planner.axes.tensor
-            return self.planner.spec(shape, roles, name=name)
-
-        return maybe_offload(fn, self.planner, self.mesh, self.memory,
-                             compute_spec=compute_spec, batch_dim=0)
+        return self.runtime.wrap_layer(fn, batch_dim=0, name=name)
 
 
 # ---------------------------------------------------------------------------

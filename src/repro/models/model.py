@@ -17,8 +17,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import (MemoryPlan, MeshPlan, ModelConfig, RunConfig,
                                 ShapeConfig)
-from repro.core.dag import build_dag
-from repro.core.vdnn import split_layers, stash_fraction
+from repro.core.runtime import MemoryRuntime
 from repro.models import frontends, transformer as tfm
 from repro.models.layers import ModelContext, chunked_cross_entropy
 from repro.parallel.sharding import ShardingPlanner
@@ -38,11 +37,14 @@ class Model:
     def __post_init__(self):
         self.planner = ShardingPlanner(self.plan)
         self.dtype = jnp.dtype(self.cfg.dtype)
+        self.runtime = MemoryRuntime(self.plan, self.memory, self.mesh,
+                                     planner=self.planner)
 
     # ------------------------------------------------------------------
     def ctx(self, mode: str) -> ModelContext:
         return ModelContext(cfg=self.cfg, planner=self.planner,
-                            memory=self.memory, mesh=self.mesh, mode=mode)
+                            memory=self.memory, mesh=self.mesh, mode=mode,
+                            runtime=self.runtime)
 
     def init(self, key) -> Params:
         return tfm.init_params(key, self.cfg, self.dtype)
@@ -166,19 +168,11 @@ class Model:
 
 # ---------------------------------------------------------------------------
 def build_model(run: RunConfig, mesh: Optional[Mesh] = None) -> Model:
-    """Construct the Model for a run, resolving the memory policy's stash
-    split (core.policy cost model for policy='auto')."""
+    """Construct the Model for a run, resolving the memory tier's stash
+    split through the MemoryRuntime (cost model for non-stash-all tiers)."""
     cfg, memory, plan = run.model, run.memory, run.mesh
     _, n_groups = tfm.arch_group(cfg)
-    stash_groups = n_groups
-    if memory.policy == "auto":
-        dag = build_dag(cfg, run.shape)
-        n_params = cfg.param_count()
-        opt_bytes = 2 + (8 if memory.opt_state_bits == 32 else 2) + 4
-        frac = stash_fraction(dag, plan, memory,
-                              model_state_bytes=n_params * opt_bytes)
-        stash_groups = split_layers(n_groups, frac)
-    elif memory.policy == "none":
-        stash_groups = 0
-    return Model(cfg=cfg, plan=plan, memory=memory, mesh=mesh,
-                 stash_groups=stash_groups)
+    model = Model(cfg=cfg, plan=plan, memory=memory, mesh=mesh)
+    model.stash_groups = model.runtime.resolve_stash_groups(
+        cfg, run.shape, n_groups)
+    return model

@@ -25,7 +25,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import ModelContext, dense_init

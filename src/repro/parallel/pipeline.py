@@ -18,7 +18,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro import compat
+from repro.compat import shard_map
 
 Pytree = Any
 
@@ -37,7 +38,7 @@ def pipeline_apply(stage_fn: Callable, stage_params: Pytree, x: jax.Array,
     passes the activation to the next member.  Bubble fraction
     (S-1)/(M+S-1) — pick n_micro >> n_stages.
     """
-    S = jax.lax.axis_size(axis_name)
+    S = compat.axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
     if S == 1:
         return stage_fn(stage_params, x)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serve.kv_cache import cache_tier_report
 
 log = logging.getLogger(__name__)
 
@@ -56,6 +57,23 @@ class Engine:
         self.batch, self.max_len = batch, max_len
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
+        # pooled-KV sizing is queried per-tier (DESIGN.md §6): the serving
+        # runtime's tier decides what one device can address for the cache
+        self.kv_report = cache_tier_report(model.cfg, model.runtime,
+                                           batch, max_len)
+        from repro.core.runtime import fmt_bytes
+        log.info("kv cache [%s]: %s total, %s/device, fits=%s",
+                 self.kv_report["tier"],
+                 fmt_bytes(self.kv_report["total_bytes"]),
+                 fmt_bytes(self.kv_report["per_device_bytes"]),
+                 self.kv_report["fits"])
+        if not self.kv_report["fits"]:
+            log.warning("kv cache exceeds per-device HBM: %.2f GB/device "
+                        "(tier %s could address %.2f GB) — expect OOM at "
+                        "this batch/max_len",
+                        self.kv_report["per_device_bytes"] / 1e9,
+                        self.kv_report["tier"],
+                        self.kv_report["capacity_bytes"] / 1e9)
         self.caches = model.init_cache(batch, max_len)
         self.slots = [SlotState() for _ in range(batch)]
         self.pending: List[Request] = []

@@ -4,11 +4,14 @@ The cache layout itself is built by models/transformer.init_caches /
 cache_specs (sequence dim striped over the 'model' axis = the paper's
 pooled memory applied to inference).  This module answers the sizing
 questions: does a cache fit one chip?  the pool?  what does pooling buy?
+Sizing is queried per-tier: :func:`cache_tier_report` prices the cache
+against the serving runtime's :class:`~repro.core.tiers.MemoryTier`
+capacity contract (DESIGN.md §6).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -56,3 +59,38 @@ def kv_cache_footprint(cfg: ModelConfig, plan: MeshPlan, batch: int,
         per_device_unpooled=total / b_shard,
         per_device_pooled=total / (b_shard * s_shard),
     )
+
+
+# ---------------------------------------------------------------------------
+def cache_tier_report(cfg: ModelConfig, runtime, batch: int, seq: int,
+                      dtype_bytes: int = 2,
+                      chip: hw.Chip = None) -> Dict[str, Any]:
+    """Price a serving cache against the runtime's memory tier.
+
+    ``runtime``: a :class:`repro.core.runtime.MemoryRuntime`.  The cache
+    layout itself (models/transformer.cache_specs) always stripes the
+    sequence dim over the mesh — pooled HBM applied to inference — so the
+    cache occupies ``per_device_pooled`` bytes of local HBM regardless of
+    the training policy; ``fits`` is that number against chip HBM.  The
+    tier contract supplies the context around it: what one device could
+    address through the backing store (``capacity_bytes``) and what a
+    decode step's cache read costs against the tier bandwidth.
+    """
+    from repro.core.pool import PoolAccountant
+
+    chip = chip if chip is not None else runtime.chip
+    fp = kv_cache_footprint(cfg, runtime.plan, batch, seq, dtype_bytes)
+    acct = PoolAccountant(runtime.plan, runtime.memory)
+    tier = runtime.tier
+    per_dev = fp.per_device_pooled
+    # one decode step touches the whole cache shard once (attention reads)
+    bw = tier.bandwidth(runtime.plan, chip)
+    return {
+        "tier": tier.describe(),
+        "total_bytes": fp.total_bytes,
+        "per_device_bytes": per_dev,
+        "capacity_bytes": tier.capacity(acct),
+        "fits": per_dev <= chip.hbm_bytes,
+        "pooling_gain": (fp.per_device_unpooled / per_dev) if per_dev else 1.0,
+        "decode_read_s": per_dev / bw if bw > 0 else 0.0,
+    }

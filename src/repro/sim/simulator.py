@@ -54,7 +54,8 @@ def simulate(dag: LayerDAG, sys: SystemConfig, parallel: str = "dp",
              n_devices: int = None, virtualize: bool = True) -> StepResult:
     """One training iteration of `dag` on `sys` under dp/mp parallelism."""
     n = n_devices or sys.n_devices
-    virt_bw = sys.effective_virt_bw(n)
+    tier = sys.backing_tier          # DC/HC/MC as tier configurations
+    virt_bw = tier.effective_bw(n, sys.n_sockets)
     L = dag.num_layers
     layers = dag.layers
 
@@ -68,7 +69,7 @@ def simulate(dag: LayerDAG, sys: SystemConfig, parallel: str = "dp",
         return 2.0 * c_fwd(i)
 
     def stash_bytes(i):
-        return layers[i].saved_bytes / n if virtualize and not sys.oracle \
+        return layers[i].saved_bytes / n if virtualize and not tier.is_oracle \
             else 0.0
 
     # ---------------- forward ----------------
@@ -138,7 +139,7 @@ def simulate(dag: LayerDAG, sys: SystemConfig, parallel: str = "dp",
 
     total = max(t, comm, dma)
     cpu_frac = 0.0
-    if sys.virt_uses_cpu and total > 0:
+    if tier.uses_cpu and total > 0:
         moved = sum(stash_bytes(i) for i in range(L)) * 2 * n
         cpu_frac = (moved / total) / (sys.cpu_socket_bw * sys.n_sockets)
     return StepResult(total=total, compute=raw_compute, sync=raw_sync,

@@ -21,6 +21,7 @@ import dataclasses
 from typing import Tuple
 
 from repro import hw
+from repro.core.tiers import TierSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,16 +35,38 @@ class SystemConfig:
     ring_nodes: int = 8             # nodes per ring (hop count driver)
     ring_link_bw: float = 25e9      # per-direction GB/s of one ring link
 
-    # memory virtualization
+    # memory virtualization — the backing store is a tier configuration:
+    # "device" (oracle, nothing leaves HBM), "host" (DC/HC: PCIe or
+    # dedicated links into host DRAM), "pooled" (MC: memory-nodes on the
+    # device-side interconnect).  The TierSpec carries the same
+    # bandwidth/capacity contract the executable tiers expose.
+    tier_kind: str = "pooled"              # device | host | pooled
     virt_bw_per_device: float = 16e9       # stash/fetch bandwidth per device
     virt_shared_bw: float = 0.0            # host-side cap (0 = uncapped)
-    virt_uses_cpu: bool = False            # counts against CPU memory BW
     cpu_socket_bw: float = hw.XEON_SOCKET_BW
     n_sockets: int = 2
-    oracle: bool = False
 
     hop_latency_s: float = 0.5e-6          # per-hop ring latency
     msg_size: float = 4096.0               # ring message granularity (Fig 9)
+
+    @property
+    def backing_tier(self) -> TierSpec:
+        """The virtualization backing store as a tier contract."""
+        return TierSpec(
+            kind=self.tier_kind,
+            bw_per_device=self.virt_bw_per_device,
+            shared_bw=self.virt_shared_bw,
+            uses_cpu=(self.tier_kind == "host"),
+        )
+
+    # legacy accessors (pre-tier API)
+    @property
+    def oracle(self) -> bool:
+        return self.backing_tier.is_oracle
+
+    @property
+    def virt_uses_cpu(self) -> bool:
+        return self.backing_tier.uses_cpu
 
     @property
     def comm_bw_per_device(self) -> float:
@@ -54,13 +77,8 @@ class SystemConfig:
         """Per-device virtualization bandwidth when ``n_devices`` stream
         concurrently — the paper's §I observation: the host-side bandwidth
         divides across the intra-node devices."""
-        if self.oracle:
-            return float("inf")
-        n = n_devices or self.n_devices
-        bw = self.virt_bw_per_device
-        if self.virt_shared_bw > 0:
-            bw = min(bw, self.virt_shared_bw * self.n_sockets / n)
-        return bw
+        return self.backing_tier.effective_bw(n_devices or self.n_devices,
+                                              self.n_sockets)
 
     def allreduce_time(self, nbytes: float) -> float:
         """Ring all-reduce of nbytes (per device) over the ring set."""
@@ -82,42 +100,38 @@ class SystemConfig:
 
 
 PCIE = hw.PCIE_GEN3_BW
-# DGX-1-style PCIe tree: 4 GPUs share one CPU socket's root complex
-# (~2 x16 uplinks worth).  This is the paper's §I observation that "the
-# effective host-device communication bandwidth allocated per device gets
-# proportionally reduced to the number of intra-node devices": 8 GPUs
-# streaming concurrently see ~8 GB/s each, not 16.
-PCIE_ROOT_PER_SOCKET = 32e9
+# DGX-1-style PCIe tree — see hw.PCIE_ROOT_PER_SOCKET: 8 GPUs streaming
+# concurrently see ~8 GB/s each, not 16 (paper §I).
+PCIE_ROOT_PER_SOCKET = hw.PCIE_ROOT_PER_SOCKET
 
 DC_DLA = SystemConfig(
-    name="DC-DLA", n_rings=3, ring_nodes=8,
-    virt_bw_per_device=PCIE, virt_shared_bw=PCIE_ROOT_PER_SOCKET,
-    virt_uses_cpu=True)
+    name="DC-DLA", n_rings=3, ring_nodes=8, tier_kind="host",
+    virt_bw_per_device=PCIE, virt_shared_bw=PCIE_ROOT_PER_SOCKET)
 
 DC_DLA_GEN4 = dataclasses.replace(
     DC_DLA, name="DC-DLA(pcie4)", virt_bw_per_device=hw.PCIE_GEN4_BW,
     virt_shared_bw=2 * PCIE_ROOT_PER_SOCKET)
 
 HC_DLA = SystemConfig(
-    name="HC-DLA", n_rings=1.5, ring_nodes=8,
+    name="HC-DLA", n_rings=1.5, ring_nodes=8, tier_kind="host",
     virt_bw_per_device=3 * 25e9, virt_shared_bw=hw.HCDLA_SOCKET_BW,
-    virt_uses_cpu=True, cpu_socket_bw=hw.HCDLA_SOCKET_BW)
+    cpu_socket_bw=hw.HCDLA_SOCKET_BW)
 
 MC_DLA_S = SystemConfig(
     name="MC-DLA(S)", n_rings=2, ring_nodes=14,   # unbalanced longest ring
-    virt_bw_per_device=2 * 25e9)
+    tier_kind="pooled", virt_bw_per_device=2 * 25e9)
 
 MC_DLA_L = SystemConfig(
     name="MC-DLA(L)", n_rings=3, ring_nodes=16,
-    virt_bw_per_device=3 * 25e9)
+    tier_kind="pooled", virt_bw_per_device=3 * 25e9)
 
 MC_DLA_B = SystemConfig(
     name="MC-DLA(B)", n_rings=3, ring_nodes=16,
-    virt_bw_per_device=6 * 25e9)
+    tier_kind="pooled", virt_bw_per_device=6 * 25e9)
 
 DC_DLA_O = SystemConfig(
-    name="DC-DLA(O)", n_rings=3, ring_nodes=8,
-    virt_bw_per_device=float("inf"), oracle=True)
+    name="DC-DLA(O)", n_rings=3, ring_nodes=8, tier_kind="device",
+    virt_bw_per_device=float("inf"))
 
 ALL_SYSTEMS = (DC_DLA, HC_DLA, MC_DLA_S, MC_DLA_L, MC_DLA_B, DC_DLA_O)
 SYSTEMS_BY_NAME = {s.name: s for s in ALL_SYSTEMS}

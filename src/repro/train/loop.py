@@ -144,4 +144,7 @@ def train(model: Model, tc: TrainConfig, data_iter, *,
         if fault_handler is not None and fault_handler.should_stop:
             log.warning("preemption requested — checkpoint written, exiting")
             break
+    runtime = getattr(model, "runtime", None)
+    if runtime is not None and runtime.offloads:
+        log.info("memory traffic: %s", runtime.traffic_summary())
     return state, metrics

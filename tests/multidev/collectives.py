@@ -2,7 +2,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.parallel.collectives import ring_all_reduce, compressed_all_reduce
 
 mesh = jax.make_mesh((8,), ("data",))

@@ -1,7 +1,9 @@
 """Attention correctness: blockwise (flash-style XLA) vs dense reference,
 SWA spans, decode vs full, M-RoPE, and the layers utilities."""
-import hypothesis as hp
-import hypothesis.strategies as st
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np

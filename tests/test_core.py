@@ -1,11 +1,12 @@
 """core/: pool specs, policy planner, DAG, compression — incl. hypothesis
 property tests on the sharding planner's divisibility invariant."""
-import hypothesis as hp
-import hypothesis.strategies as st
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCHS, MemoryPlan, MeshPlan, SHAPES_BY_NAME, get_arch
 from repro.core import compress as comp

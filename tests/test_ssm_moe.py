@@ -1,7 +1,9 @@
 """SSD chunked-vs-recurrent equivalence (+hypothesis) and MoE vs dense-loop
 reference on the local path (mesh paths run in tests/multidev)."""
-import hypothesis as hp
-import hypothesis.strategies as st
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
