@@ -1,0 +1,83 @@
+"""Serving throughput microbench: tokens/sec through the Engine facade.
+
+CPU wall-clock for regression tracking (like benchmarks/microbench.py; the
+TPU numbers come from running launch/serve.py on hardware).  Measures the
+full serving stack — scheduler admission, per-length decode groups, cache
+manager slot churn and (for the fair-scheduler row) cold-slot spill/fetch
+through the secondary tier — on a reduced config.
+
+Run directly (``python benchmarks/serve_bench.py``) or import
+:func:`serve_bench` from CI.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _build(arch: str = "smollm-135m"):
+    import jax
+    from repro.configs import (ARCHS, MemoryPlan, RunConfig, TrainConfig)
+    from repro.configs.base import MeshPlan, ShapeConfig
+    from repro.models.model import build_model
+
+    cfg = ARCHS[arch].reduced()
+    run = RunConfig(model=cfg, shape=ShapeConfig("serve", 64, 4, "decode"),
+                    mesh=MeshPlan((1,), ("data",)),
+                    memory=MemoryPlan(policy="none"), train=TrainConfig())
+    model = build_model(run)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _drive(model, params, cfg, *, scheduler, n_requests: int,
+           new_tokens: int, batch: int, max_len: int) -> Tuple[float, int]:
+    from repro.serve.engine import Engine, Request
+
+    eng = Engine(model, params, batch=batch, max_len=max_len,
+                 scheduler=scheduler)
+    rng = np.random.default_rng(0)
+    sessions = []
+    for i in range(n_requests):
+        sessions.append(eng.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=(8,)).astype(
+                np.int32),
+            max_new_tokens=new_tokens)))
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    return dt, sum(len(s.result()) for s in sessions)
+
+
+def serve_bench(n_requests: int = 6, new_tokens: int = 8,
+                batch: int = 2, max_len: int = 64) -> List[Row]:
+    """Tokens/sec for each scheduler policy (fair exercises the spill
+    path: more requests than slots, cold slots through the spill tier)."""
+    from repro.serve.scheduler import FairScheduler
+
+    cfg, model, params = _build()
+    rows: List[Row] = []
+    # warm-up: prime the backend compilation caches once.  Each Engine
+    # still retraces its own jit wrappers, so rows include that constant
+    # cost identically — comparable across schedulers, not jit-free.
+    _drive(model, params, cfg, scheduler="fcfs", n_requests=1,
+           new_tokens=2, batch=batch, max_len=max_len)
+    for name, sched in (("fcfs", "fcfs"),
+                        ("fair_q2", FairScheduler(quantum=2))):
+        dt, total = _drive(model, params, cfg, scheduler=sched,
+                           n_requests=n_requests, new_tokens=new_tokens,
+                           batch=batch, max_len=max_len)
+        rows.append((f"serve.{name}_{n_requests}req.tok_per_s",
+                     round(total / dt, 1),
+                     f"{total} tokens, batch={batch} (CPU wall-clock)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, value, note in serve_bench():
+        print(f"{name},{value},{note}")

@@ -31,16 +31,20 @@ class MemoryPlan:
       - "auto":   beyond-paper — cost-model driven: stash only what is needed
                   to fit the per-device HBM budget, prefer recompute when the
                   recompute time is below the fetch time.
+      - "spill":  pooled HBM until the pool's capacity contract is spent,
+                  host DRAM past it (core.tiers.SpillTier; the serving
+                  stack's default secondary store for cold KV slots).
     placement: "bw_aware" stripes a stash across *both* mesh axes (paper
       Fig. 10 BW_AWARE, maximum link utilization); "local" stripes across the
       model axis only (LOCAL: one neighbour, half the links).
     compress: optional stash compression — the memory-node's "optional
-      encryption/compression ASIC" of §III-A ("fp8" halves stash bytes).
+      encryption/compression ASIC" of §III-A ("fp8"/"int8" halve stash
+      bytes; codecs are registry-extensible via core.tiers.register_codec).
     """
 
-    policy: str = "mcdla"            # none | host | mcdla | auto
+    policy: str = "mcdla"            # none | host | mcdla | auto | spill
     placement: str = "bw_aware"      # bw_aware | local
-    compress: str = "none"           # none | fp8
+    compress: str = "none"           # none | fp8 | int8
     recompute_cheap: bool = True     # paper footnote 4
     seq_parallel: bool = True        # sequence-parallel residual stream
     stash_aux: bool = True           # pool big float aux (enc states) too

@@ -38,6 +38,22 @@ def fp8_decompress(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Ar
 
 
 # ---------------------------------------------------------------------------
+# int8 stash compression (per-tensor scale; kernels/offload_pack has the
+# blockwise Pallas twin) — registered as a stash codec in core.tiers
+def int8_compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x -> (int8 payload, fp32 scale).  Halves stash bytes vs bf16."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(absmax / INT8_MAX, 1e-30)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # int8 error-feedback gradient compression
 def int8_ef_quantize(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Quantize gradient+carried error to int8 with a per-tensor scale.

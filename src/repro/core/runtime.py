@@ -160,18 +160,23 @@ class MemoryRuntime:
                 f"est_transfer={r['est_transfer_s']*1e3:.2f}ms {per}")
 
     # ------------------------------------------------------------------
-    # data path (metered tier passthrough)
-    def stash(self, x: jax.Array, hints: Optional[TransferHints] = None):
+    # data path (metered tier passthrough).  ``direction`` labels the
+    # traffic-report bucket: training residuals use the default
+    # "stash"/"fetch", the serving KVCacheManager meters its cold-slot
+    # traffic as "kv_stash"/"kv_fetch" so a report tells the two apart.
+    def stash(self, x: jax.Array, hints: Optional[TransferHints] = None,
+              direction: str = "stash"):
         hints = hints or TransferHints()
         if self.offloads:
-            self._meter("stash", x, hints)
+            self._meter(direction, x, hints)
         return self.tier.stash(x, hints)
 
-    def fetch(self, payload, hints: Optional[TransferHints] = None):
+    def fetch(self, payload, hints: Optional[TransferHints] = None,
+              direction: str = "fetch"):
         hints = hints or TransferHints()
         x = self.tier.fetch(payload, hints)
         if self.offloads:
-            self._meter("fetch", x, hints)
+            self._meter(direction, x, hints)
         return x
 
     # ------------------------------------------------------------------
@@ -229,8 +234,10 @@ class MemoryRuntime:
                 if isinstance(sa, tuple):
                     # aux tensors differ in rank/shape from the residual —
                     # they derive their own fetch layout (never the static
-                    # residual compute_spec)
-                    shape = sa[0].shape
+                    # residual compute_spec).  The payload's first array
+                    # leaf carries the stashed shape (tier payloads may
+                    # wrap it, e.g. SpillTier's leg-routing node).
+                    shape = jax.tree_util.tree_leaves(sa)[0].shape
                     aux.append(runtime.fetch(sa, TransferHints(
                         compute_spec=runtime._aux_spec(compute_spec, shape),
                         batch_dim=batch_dim, dtype=witness.dtype,

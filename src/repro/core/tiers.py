@@ -312,6 +312,8 @@ def registered_codecs() -> Tuple[str, ...]:
 
 register_codec(Codec("fp8", comp.compress_ratio("fp8"),
                      comp.fp8_compress, comp.fp8_decompress))
+register_codec(Codec("int8", comp.compress_ratio("int8"),
+                     comp.int8_compress, comp.int8_decompress))
 
 
 class CompressedTier(MemoryTier):
@@ -374,6 +376,139 @@ class CompressedTier(MemoryTier):
 
 
 # ---------------------------------------------------------------------------
+class SpillPayload:
+    """Payload of a :class:`SpillTier` stash: the inner leg's payload plus a
+    *static* record of which leg took it and how many bytes it charged.
+
+    Registered as a pytree node with (leg, nbytes) in the treedef so the
+    routing decision — made at trace time by the Python-side capacity
+    counter — survives jit residuals without becoming a traced value.
+    """
+
+    __slots__ = ("leg", "nbytes", "inner")
+
+    def __init__(self, leg: str, nbytes: float, inner: Payload):
+        self.leg = leg              # "primary" | "overflow"
+        self.nbytes = nbytes        # bytes charged against the primary budget
+        self.inner = inner
+
+    def __repr__(self) -> str:
+        return f"SpillPayload(leg={self.leg!r}, nbytes={self.nbytes:.0f})"
+
+
+jax.tree_util.register_pytree_node(
+    SpillPayload,
+    lambda p: ((p.inner,), (p.leg, p.nbytes)),
+    lambda aux, children: SpillPayload(aux[0], aux[1], children[0]))
+
+
+class SpillTier(MemoryTier):
+    """Decorator: primary tier until its capacity contract is exhausted,
+    then overflow to a cheaper backing store.
+
+    The ROADMAP's host+pool composition (Buddy-Compression-style cold-page
+    demotion, arXiv:1903.02596): stash to the *primary* leg (e.g. pooled
+    HBM) while the boot-time capacity contract has headroom, and overflow
+    to the *overflow* leg (e.g. host DRAM) once it is spent.  The routing
+    decision is taken per-stash at trace time against a Python-side byte
+    counter, so the same object works inside jit (static routing) and in
+    the serving host loop (dynamic slot churn via :meth:`discard`).
+
+    The planner prices both legs: each leg is itself a full
+    :class:`MemoryTier`, and the blended :meth:`bandwidth` degrades from
+    the primary's toward the occupancy-weighted harmonic mean as the
+    primary fills.
+    """
+
+    kind = "spill"
+
+    def __init__(self, primary: MemoryTier, overflow: MemoryTier,
+                 primary_budget: Optional[float] = None):
+        super().__init__(primary.planner, primary.mesh, primary.memory,
+                         stash_all=primary.stash_all)
+        self.primary = primary
+        self.overflow = overflow
+        if primary_budget is None:
+            acct = PoolAccountant(primary.planner.plan, primary.memory)
+            primary_budget = primary.capacity(acct)
+        self.primary_budget = float(primary_budget)
+        self._primary_used = 0.0
+        self._overflow_used = 0.0
+
+    # -- routing -----------------------------------------------------------
+    def _charge_bytes(self, x: jax.Array) -> float:
+        raw = float(x.size) * jnp.dtype(x.dtype).itemsize
+        return raw * self.primary.payload_ratio()
+
+    def primary_headroom(self) -> float:
+        return self.primary_budget - self._primary_used
+
+    def reset(self) -> None:
+        self._primary_used = 0.0
+        self._overflow_used = 0.0
+
+    def stash(self, x: jax.Array, hints: TransferHints) -> Payload:
+        nbytes = self._charge_bytes(x)
+        if nbytes <= self.primary_headroom():
+            self._primary_used += nbytes
+            return (SpillPayload("primary", nbytes,
+                                 self.primary.stash(x, hints)), None)
+        self._overflow_used += nbytes
+        return (SpillPayload("overflow", nbytes,
+                             self.overflow.stash(x, hints)), None)
+
+    def fetch(self, payload: Payload, hints: TransferHints) -> jax.Array:
+        sp = payload[0]
+        leg = self.primary if sp.leg == "primary" else self.overflow
+        return leg.fetch(sp.inner, hints)
+
+    def discard(self, payload: Payload) -> None:
+        """Release a stashed slot's budget charge (serving slot churn)."""
+        sp = payload[0]
+        if sp.leg == "primary":
+            self._primary_used = max(0.0, self._primary_used - sp.nbytes)
+        else:
+            self._overflow_used = max(0.0, self._overflow_used - sp.nbytes)
+
+    def leg_for(self, payload: Payload) -> str:
+        return payload[0].leg
+
+    # -- cost contract: both legs priced -----------------------------------
+    def bandwidth(self, plan: MeshPlan, chip: hw.Chip = hw.TPU_V5E) -> float:
+        """Occupancy-blended: all-primary while nothing has overflowed,
+        then the harmonic mean weighted by the routed byte fractions
+        (bytes on each leg stream at that leg's rate)."""
+        bw_p = self.primary.bandwidth(plan, chip)
+        if self._overflow_used <= 0.0:
+            return bw_p
+        bw_o = self.overflow.bandwidth(plan, chip)
+        total = self._primary_used + self._overflow_used
+        f_over = self._overflow_used / total
+        return 1.0 / ((1.0 - f_over) / bw_p + f_over / bw_o)
+
+    def capacity(self, accountant: PoolAccountant) -> float:
+        return self.primary_budget + self.overflow.capacity(accountant)
+
+    def account(self, accountant: PoolAccountant, nbytes: float) -> None:
+        if nbytes <= self.primary_headroom():
+            self.primary.account(accountant, nbytes)
+        else:
+            self.overflow.account(accountant, nbytes)
+
+    def payload_ratio(self) -> float:
+        return self.primary.payload_ratio()
+
+    def wire_ratio(self, x: jax.Array, hints: TransferHints) -> float:
+        if self._charge_bytes(x) <= self.primary_headroom():
+            return self.primary.wire_ratio(x, hints)
+        return self.overflow.wire_ratio(x, hints)
+
+    def describe(self) -> str:
+        return (f"{self.kind}[{self.primary.describe()}"
+                f"->{self.overflow.describe()}]")
+
+
+# ---------------------------------------------------------------------------
 # tier registry: MemoryPlan.policy -> tier.  The one sanctioned policy-string
 # dispatch in the codebase (everything else goes through the tier object).
 TierFactory = Callable[[MemoryPlan, ShardingPlanner, Optional[Mesh]],
@@ -428,6 +563,12 @@ register_tier("mcdla",
 # (core/policy.py) decides the stash fraction instead of stashing all.
 register_tier("auto",
               lambda m, p, mesh: PooledHbmTier(p, mesh, m), stash_all=False)
+# "spill": pooled HBM until the pool's capacity contract is spent, host
+# DRAM past it (ROADMAP host+pool composition).
+register_tier("spill",
+              lambda m, p, mesh: SpillTier(PooledHbmTier(p, mesh, m),
+                                           HostTier(p, mesh, m)),
+              stash_all=True)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 FP8_MAX = 448.0
+INT8_MAX = 127.0
 
 
 def _pack_kernel(x_ref, q_ref, s_ref):
@@ -24,6 +25,15 @@ def _pack_kernel(x_ref, q_ref, s_ref):
     absmax = jnp.max(jnp.abs(x))
     scale = jnp.maximum(absmax / FP8_MAX, 1e-12)
     q_ref[...] = (x / scale).astype(q_ref.dtype)
+    s_ref[0, 0] = scale
+
+
+def _int8_pack_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax / INT8_MAX, 1e-30)
+    q_ref[...] = jnp.clip(jnp.round(x / scale),
+                          -INT8_MAX, INT8_MAX).astype(q_ref.dtype)
     s_ref[0, 0] = scale
 
 
@@ -60,6 +70,53 @@ def fp8_pack(x: jax.Array, *, block_rows: int = 128,
                                              "interpret"))
 def fp8_unpack(q: jax.Array, scales: jax.Array, *, block_rows: int = 128,
                dtype=jnp.bfloat16, interpret: bool = False) -> jax.Array:
+    R, C = q.shape
+    nb = R // block_rows
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), dtype),
+        interpret=interpret,
+    )(q, scales[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def int8_pack(x: jax.Array, *, block_rows: int = 128,
+              interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (R, C) -> (q: int8 (R, C), scales: f32 (R//block_rows,)).
+
+    The int8 codec twin of :func:`fp8_pack` — same per-row-block absmax
+    scaling, round-and-clip instead of fp8 cast (int8 has no subnormals,
+    so the round is explicit)."""
+    R, C = x.shape
+    assert R % block_rows == 0, (R, block_rows)
+    nb = R // block_rows
+    q, s = pl.pallas_call(
+        _int8_pack_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "dtype",
+                                             "interpret"))
+def int8_unpack(q: jax.Array, scales: jax.Array, *, block_rows: int = 128,
+                dtype=jnp.bfloat16, interpret: bool = False) -> jax.Array:
     R, C = q.shape
     nb = R // block_rows
     return pl.pallas_call(

@@ -38,6 +38,15 @@ def fp8_unpack(q, scales, *, block_rows: int = 128, dtype=jnp.bfloat16):
                          interpret=_interpret())
 
 
+def int8_pack(x, *, block_rows: int = 128):
+    return op.int8_pack(x, block_rows=block_rows, interpret=_interpret())
+
+
+def int8_unpack(q, scales, *, block_rows: int = 128, dtype=jnp.bfloat16):
+    return op.int8_unpack(q, scales, block_rows=block_rows, dtype=dtype,
+                          interpret=_interpret())
+
+
 # ---------------------------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def flash_attention(q, k, v, causal: bool = True, window: int = 0):

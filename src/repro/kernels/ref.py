@@ -85,3 +85,21 @@ def fp8_unpack_ref(q: jax.Array, scale: jax.Array, block_rows: int,
     nb = R // block_rows
     xb = q.reshape(nb, block_rows, C).astype(jnp.float32)
     return (xb * scale[:, None, None]).reshape(R, C).astype(dtype)
+
+
+def int8_pack_ref(x: jax.Array, block_rows: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise int8 quantize: x (R, C) -> (q int8 (R, C), scales (R/br,))."""
+    R, C = x.shape
+    nb = R // block_rows
+    xb = x.reshape(nb, block_rows, C).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xb), axis=(1, 2))
+    scale = jnp.maximum(absmax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(xb / scale[:, None, None]),
+                 -127.0, 127.0).astype(jnp.int8)
+    return q.reshape(R, C), scale
+
+
+def int8_unpack_ref(q: jax.Array, scale: jax.Array, block_rows: int,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    return fp8_unpack_ref(q, scale, block_rows, dtype)

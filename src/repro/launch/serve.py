@@ -1,8 +1,14 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Runs the batched engine (serve/engine.py) over pooled KV caches.  On the
-CPU container use ``--smoke`` for the reduced twin; on TPU the full config
-serves against the production mesh with the cache striped across the pool.
+Runs the tier-aware serving stack (serve/engine.py facade over Scheduler /
+KVCacheManager / Session) over pooled KV caches.  On the CPU container use
+``--smoke`` for the reduced twin; on TPU the full config serves against
+the production mesh with the cache striped across the pool.
+
+``--batch`` / ``--max-len`` may be omitted: the cache manager then sizes
+the decode slots from the serving tier's ``cache_tier_report``.  Cold
+slots (preempted sessions under ``--scheduler fair/priority``) spill to
+the ``--spill`` tier; the run prints the spill traffic report.
 """
 from __future__ import annotations
 
@@ -18,18 +24,27 @@ from repro.configs.base import MeshPlan, ShapeConfig
 from repro.launch.mesh import make_host_mesh, make_production_mesh, plan_for
 from repro.models.model import build_model
 from repro.serve.engine import Engine, Request
+from repro.serve.scheduler import build_scheduler, registered_schedulers
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="decode slots (default: auto from the tier report)")
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="cache rows per slot (default: auto)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=registered_schedulers())
+    ap.add_argument("--quantum", type=int, default=8,
+                    help="fair-scheduler decode quantum")
+    ap.add_argument("--spill", default="spill",
+                    help="secondary tier policy for cold KV slots")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
@@ -45,29 +60,46 @@ def main() -> None:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         plan = plan_for(multi_pod=args.multi_pod)
 
-    shape = ShapeConfig("serve", args.max_len, args.batch, "decode")
+    shape = ShapeConfig("serve", args.max_len or 128, args.batch or 4,
+                        "decode")
     run = RunConfig(model=cfg, shape=shape, mesh=plan,
                     memory=MemoryPlan(policy="none"), train=TrainConfig())
     model = build_model(run, mesh=mesh)
     params = model.init(jax.random.PRNGKey(0))
 
+    sched = (build_scheduler("fair", quantum=args.quantum)
+             if args.scheduler == "fair" else build_scheduler(args.scheduler))
     eng = Engine(model, params, batch=args.batch, max_len=args.max_len,
-                 temperature=args.temperature)
+                 temperature=args.temperature, scheduler=sched,
+                 spill=args.spill)
+    print(eng.describe())
     rng = np.random.default_rng(0)
+    sessions = []
     for i in range(args.requests):
-        eng.submit(Request(uid=i,
-                           prompt=rng.integers(
-                               0, cfg.vocab_size,
-                               size=(args.prompt_len,)).astype(np.int32),
-                           max_new_tokens=args.new_tokens))
+        sessions.append(eng.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=(args.prompt_len,)).astype(np.int32),
+            max_new_tokens=args.new_tokens,
+            priority=i % 3 if args.scheduler == "priority" else 0)))
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
-    total_new = sum(len(r.out_tokens) for r in done)
+    total_new = sum(len(s.result()) for s in sessions)
     print(f"served {len(done)} requests, {total_new} tokens "
           f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
-    for r in done[:3]:
-        print(f"  req {r.uid}: {r.out_tokens[:8]}...")
+    for s in sessions[:3]:
+        print(f"  req {s.uid}: {s.finish_reason}, "
+              f"preempted {s.preemptions}x, {s.result()[:8]}...")
+    report = eng.traffic_report()
+    if report.get("kv_stash"):
+        from repro.core.runtime import fmt_bytes
+        fetch = report.get("kv_fetch", {"wire_bytes": 0.0, "calls": 0})
+        print(f"spill[{report['tier']}]: "
+              f"stash {fmt_bytes(report['kv_stash']['wire_bytes'])}"
+              f"/{report['kv_stash']['calls']}x, "
+              f"fetch {fmt_bytes(fetch['wire_bytes'])}"
+              f"/{fetch['calls']}x")
 
 
 if __name__ == "__main__":

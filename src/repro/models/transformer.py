@@ -502,3 +502,22 @@ def cache_specs(cfg: ModelConfig, planner, batch: int, seq: int) -> Params:
 
     return {f"sub_{j}": one(kind)
             for j, kind in enumerate(group) if kind != "none"}
+
+
+def slot_cache(caches: Params, slot) -> Params:
+    """Extract one batch slot of the stacked caches (batch dim kept at 1).
+
+    Cache leaves are (n_groups, B, ...): batch is dim 1.  ``slot`` may be a
+    Python int or a traced scalar — the serving KVCacheManager jits this for
+    per-slot prefill and cold-slot spill."""
+    return jax.tree.map(
+        lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1), caches)
+
+
+def merge_slot_cache(caches: Params, one_cache: Params, slot) -> Params:
+    """Insert a single-slot cache (from :func:`slot_cache` or a spill-tier
+    fetch) back into batch position ``slot`` of the stacked caches."""
+    return jax.tree.map(
+        lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), slot, axis=1),
+        caches, one_cache)

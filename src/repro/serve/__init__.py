@@ -1,1 +1,9 @@
-"""Serving: batched engine over pooled KV caches."""
+"""Serving: Scheduler / KVCacheManager / Session behind the Engine facade,
+over pooled KV caches (DESIGN.md §6)."""
+from repro.serve.cache_manager import KVCacheManager        # noqa: F401
+from repro.serve.engine import Engine, Request              # noqa: F401
+from repro.serve.scheduler import (FairScheduler,           # noqa: F401
+                                   FCFSScheduler, PriorityScheduler,
+                                   Scheduler, build_scheduler,
+                                   register_scheduler)
+from repro.serve.session import Session, SessionState       # noqa: F401

@@ -1,0 +1,206 @@
+"""KVCacheManager: decode-slot allocation over the memory-tier hierarchy.
+
+One of the three serving APIs behind the ``Engine`` facade (DESIGN.md §6).
+The manager owns the stacked KV cache tree and everything about where a
+session's cache lives:
+
+* **sizing** — when the caller leaves ``batch``/``max_len`` unspecified,
+  :func:`~repro.serve.kv_cache.derive_cache_shape` sizes them from the
+  serving tier's ``cache_tier_report`` (the paper's capacity contract
+  answering "how much cache can one device address?").
+* **slot lifecycle** — allocate / bind / release of the fixed decode slots
+  (the hot, HBM-resident working set).
+* **spill** — a paused (preempted / waiting) session's KV leaves HBM
+  through a secondary :class:`~repro.core.runtime.MemoryRuntime` whose
+  tier defaults to ``spill`` (pooled HBM overflowing to host DRAM — the
+  Buddy-Compression cold-page pattern, arXiv:1903.02596) and is fetched
+  back into a fresh slot on resume.  Every leg is metered: the runtime's
+  ``traffic_report()`` shows ``kv_stash``/``kv_fetch`` byte counts.
+
+Per-slot cache surgery uses the models/transformer helpers
+(:func:`~repro.models.transformer.slot_cache` /
+:func:`~repro.models.transformer.merge_slot_cache`), jitted once here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Dict, List, Optional, Union
+
+import jax
+
+from repro.configs.base import MemoryPlan
+from repro.core.runtime import MemoryRuntime, fmt_bytes
+from repro.core.tiers import SpillTier, TransferHints
+from repro.models import transformer as tfm
+from repro.serve.kv_cache import (DEFAULT_HBM_FRAC, DEFAULT_MAX_BATCH,
+                                  DEFAULT_MAX_LEN, derive_cache_shape)
+from repro.serve.session import Session, SessionState
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class _SpilledSlot:
+    """One paused session's cache, parked in the secondary tier."""
+
+    session: Session                  # owner (for cancelled-entry sweeps)
+    treedef: Any                      # cache tree structure
+    payloads: List[Any]               # one tier payload per cache leaf
+    dtypes: List[Any]                 # restore dtypes on fetch
+
+
+class KVCacheManager:
+    """Slot allocation + tier placement for the serving KV cache."""
+
+    def __init__(self, model, batch: Optional[int] = None,
+                 max_len: Optional[int] = None, *,
+                 spill: Union[str, MemoryRuntime, None] = "spill",
+                 hbm_frac: float = DEFAULT_HBM_FRAC,
+                 max_batch: int = DEFAULT_MAX_BATCH,
+                 default_max_len: int = DEFAULT_MAX_LEN,
+                 dtype_bytes: int = 2):
+        self.model = model
+        sized = derive_cache_shape(
+            model.cfg, model.runtime, batch, max_len, hbm_frac=hbm_frac,
+            max_batch=max_batch, default_max_len=default_max_len,
+            dtype_bytes=dtype_bytes)
+        self.batch: int = sized["batch"]
+        self.max_len: int = sized["max_len"]
+        self.report: Dict[str, Any] = sized["report"]
+        self.auto_sized = batch is None or max_len is None
+
+        self.caches = model.init_cache(self.batch, self.max_len)
+        self.slots: List[Optional[Session]] = [None] * self.batch
+        self._spilled: Dict[int, _SpilledSlot] = {}
+
+        # secondary tier for cold slots (None: preemption unsupported)
+        if isinstance(spill, MemoryRuntime):
+            self.spill_runtime: Optional[MemoryRuntime] = spill
+        elif spill is None:
+            self.spill_runtime = None
+        else:
+            self.spill_runtime = MemoryRuntime(
+                model.plan,
+                MemoryPlan(policy=spill, placement=model.memory.placement),
+                model.mesh, planner=model.planner)
+
+        self._slot_get = jax.jit(tfm.slot_cache)
+        self._slot_put = jax.jit(tfm.merge_slot_cache)
+        log.info("kv cache [%s]: batch=%d max_len=%d (%s/device, fits=%s)%s",
+                 self.report["tier"], self.batch, self.max_len,
+                 fmt_bytes(self.report["per_device_bytes"]),
+                 self.report["fits"],
+                 " [auto-sized]" if self.auto_sized else "")
+
+    # ------------------------------------------------------------------
+    # slot lifecycle
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def num_free(self) -> int:
+        return sum(1 for s in self.slots if s is None)
+
+    def running(self) -> List[Session]:
+        return [s for s in self.slots if s is not None]
+
+    def fits_prompt(self, prompt_len: int) -> bool:
+        """A prompt must leave at least one cache row for decode writes."""
+        return prompt_len < self.max_len
+
+    def bind(self, slot: int, sess: Session, length: int) -> None:
+        assert self.slots[slot] is None, (slot, self.slots[slot])
+        self.slots[slot] = sess
+        sess.slot = slot
+        sess.length = length
+        sess.state = SessionState.RUNNING
+        sess.steps_since_admit = 0
+
+    def release(self, sess: Session) -> None:
+        """Retire a session's slot (its cache rows are dead)."""
+        if sess.slot is not None:
+            self.slots[sess.slot] = None
+            sess.slot = None
+        self.drop_spilled(sess)
+
+    # ------------------------------------------------------------------
+    # spill / resume (cold slots through the secondary tier)
+    def pause(self, sess: Session) -> None:
+        """Preempt: move the session's KV out of HBM into the spill tier."""
+        assert sess.slot is not None, sess
+        assert self.spill_runtime is not None, \
+            "KVCacheManager(spill=None) cannot preempt sessions"
+        one = self._slot_get(self.caches, sess.slot)
+        leaves, treedef = jax.tree_util.tree_flatten(one)
+        payloads, dtypes = [], []
+        for x in leaves:
+            payloads.append(self.spill_runtime.stash(
+                x, TransferHints(dtype=x.dtype, batch_dim=1,
+                                 name="kv_spill"),
+                direction="kv_stash"))
+            dtypes.append(x.dtype)
+        self._spilled[sess.uid] = _SpilledSlot(sess, treedef, payloads,
+                                               dtypes)
+        self.slots[sess.slot] = None
+        sess.slot = None
+        sess.state = SessionState.PAUSED
+        sess.steps_since_admit = 0
+        sess.preemptions += 1
+
+    def resume(self, sess: Session, slot: int) -> None:
+        """Fetch a paused session's KV back from the spill tier into
+        ``slot`` and make it resident again."""
+        entry = self._spilled.pop(sess.uid)
+        leaves = []
+        for payload, dt in zip(entry.payloads, entry.dtypes):
+            leaves.append(self.spill_runtime.fetch(
+                payload, TransferHints(dtype=dt, batch_dim=1,
+                                       name="kv_spill"),
+                direction="kv_fetch"))
+            self._discard(payload)
+        one = jax.tree_util.tree_unflatten(entry.treedef, leaves)
+        length = sess.length
+        self.caches = self._slot_put(self.caches, one, slot)
+        self.bind(slot, sess, length)
+
+    def drop_spilled(self, sess: Session) -> None:
+        """Discard a paused session's parked cache (cancel/retire)."""
+        entry = self._spilled.pop(sess.uid, None)
+        if entry is not None:
+            for payload in entry.payloads:
+                self._discard(payload)
+
+    def sweep_cancelled(self) -> None:
+        """Drop parked caches whose owner was cancelled while paused —
+        returns their SpillTier budget instead of leaking it."""
+        for entry in list(self._spilled.values()):
+            if entry.session.done:
+                self.drop_spilled(entry.session)
+
+    def _discard(self, payload) -> None:
+        """Return capacity-contract budget to a SpillTier leg, if any."""
+        tier = self.spill_runtime.tier if self.spill_runtime else None
+        while tier is not None:
+            if isinstance(tier, SpillTier):
+                tier.discard(payload)
+                return
+            tier = getattr(tier, "inner", None)
+
+    def spilled_uids(self) -> List[int]:
+        return sorted(self._spilled)
+
+    # ------------------------------------------------------------------
+    def traffic_report(self) -> Dict[str, Any]:
+        """Spill-tier byte accounting (kv_stash / kv_fetch directions)."""
+        if self.spill_runtime is None:
+            return {}
+        return self.spill_runtime.traffic_report()
+
+    def describe(self) -> str:
+        spill = (self.spill_runtime.tier.describe()
+                 if self.spill_runtime else "none")
+        return (f"kv[batch={self.batch} max_len={self.max_len} "
+                f"tier={self.report['tier']} spill={spill}]")

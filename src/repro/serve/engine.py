@@ -1,28 +1,43 @@
-"""Batched serving engine: continuous prefill/decode over pooled KV caches.
+"""Engine: thin facade over the Scheduler / KVCacheManager / Session APIs.
 
 The paper's technique applied to inference (DESIGN.md §6): the KV cache is
 sharded over the mesh's pooled HBM (sequence dim over 'model'), so a
 524k-token cache that exceeds one chip's memory serves from the pool with
-the decode attention executed *distributed* (flash-decode: partial softmax
-per shard + psum) — no cache migration, the compute goes to the data.
+the decode attention executed *distributed* — no cache migration, the
+compute goes to the data.
 
-The engine itself is a straightforward batched scheduler: fixed decode
-batch slots, prompt prefill into a free slot, greedy/temperature sampling,
-EOS / max-token retirement.  Designed to be driven step-by-step (tests) or
-via ``run()``.
+The serving stack is three composable APIs; the engine only wires them to
+the model's prefill/decode compute and the sampler:
+
+* :class:`~repro.serve.scheduler.Scheduler` — admission, continuous
+  batching, preemption (pluggable: fcfs / priority / fair).
+* :class:`~repro.serve.cache_manager.KVCacheManager` — slot allocation,
+  tier-report auto-sizing of ``batch``/``max_len``, cold-slot spill to a
+  secondary memory tier and fetch-back on resume.
+* :class:`~repro.serve.session.Session` — the streaming result API
+  (token stream + lifecycle + finish reason) returned by :meth:`submit`.
+
+Back-compat: the legacy ``Engine(model, params, batch, max_len)``
+constructor still works (sizes are simply explicit instead of derived),
+and ``Request.out_tokens`` stays populated — it aliases the session's
+token stream.
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.serve.kv_cache import cache_tier_report
+from repro.serve.cache_manager import KVCacheManager
+from repro.serve.scheduler import Scheduler, build_scheduler
+from repro.serve.session import (FINISH_CACHE_FULL, FINISH_EOS,
+                                 FINISH_LENGTH, FINISH_REJECTED, Session,
+                                 SessionState)
 
 log = logging.getLogger(__name__)
 
@@ -33,6 +48,7 @@ class Request:
     prompt: np.ndarray                 # (S_prompt,) int32
     max_new_tokens: int = 16
     eos_id: int = -1                   # -1: never
+    priority: int = 0                  # PriorityScheduler rank (higher first)
     out_tokens: Optional[List[int]] = None
 
     def __post_init__(self):
@@ -40,33 +56,34 @@ class Request:
             self.out_tokens = []
 
 
-@dataclasses.dataclass
-class SlotState:
-    req: Optional[Request] = None
-    length: int = 0                    # tokens currently in this slot's cache
-
-
 class Engine:
-    """Fixed-slot batched engine.  batch = number of concurrent sequences;
-    max_len = cache capacity per sequence."""
+    """Facade: scheduler + cache manager + sampler behind one object.
 
-    def __init__(self, model: Model, params, batch: int, max_len: int,
-                 temperature: float = 0.0, seed: int = 0):
+    ``batch`` / ``max_len`` may be omitted — the cache manager then sizes
+    them from the serving tier's ``cache_tier_report`` (how much cache the
+    tier lets one device address).  The legacy positional signature
+    ``Engine(model, params, batch, max_len)`` is unchanged.
+    """
+
+    def __init__(self, model: Model, params,
+                 batch: Optional[int] = None,
+                 max_len: Optional[int] = None,
+                 temperature: float = 0.0, seed: int = 0,
+                 scheduler: Union[str, Scheduler] = "fcfs",
+                 spill: Union[str, Any, None] = "spill",
+                 **cache_kwargs):
         self.model = model
         self.params = params
-        self.batch, self.max_len = batch, max_len
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        # pooled-KV sizing is queried per-tier (DESIGN.md §6): the serving
-        # runtime's tier decides what one device can address for the cache
-        self.kv_report = cache_tier_report(model.cfg, model.runtime,
-                                           batch, max_len)
-        from repro.core.runtime import fmt_bytes
-        log.info("kv cache [%s]: %s total, %s/device, fits=%s",
-                 self.kv_report["tier"],
-                 fmt_bytes(self.kv_report["total_bytes"]),
-                 fmt_bytes(self.kv_report["per_device_bytes"]),
-                 self.kv_report["fits"])
+
+        self.scheduler: Scheduler = (build_scheduler(scheduler)
+                                     if isinstance(scheduler, str)
+                                     else scheduler)
+        self.cache = KVCacheManager(model, batch, max_len, spill=spill,
+                                    **cache_kwargs)
+        self.batch, self.max_len = self.cache.batch, self.cache.max_len
+        self.kv_report = self.cache.report
         if not self.kv_report["fits"]:
             log.warning("kv cache exceeds per-device HBM: %.2f GB/device "
                         "(tier %s could address %.2f GB) — expect OOM at "
@@ -74,41 +91,39 @@ class Engine:
                         self.kv_report["per_device_bytes"] / 1e9,
                         self.kv_report["tier"],
                         self.kv_report["capacity_bytes"] / 1e9)
-        self.caches = model.init_cache(batch, max_len)
-        self.slots = [SlotState() for _ in range(batch)]
-        self.pending: List[Request] = []
-        self.finished: List[Request] = []
+
+        self.sessions: List[Session] = []      # every submission, in order
+        self.finished: List[Request] = []      # legacy result list
+        self._seq = 0
         self._decode = jax.jit(model.decode_step)
-        cfg = model.cfg
 
         def prefill_one(params, caches, tokens, positions, slot):
-            """Prefill one sequence into slot `slot` of the batched cache."""
+            """Prefill one sequence into slot ``slot`` of the batched cache."""
             ctx = model.ctx("prefill")
             from repro.models import transformer as tfm
-            one_cache = jax.tree.map(
-                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
-                caches)
+            one_cache = tfm.slot_cache(caches, slot)
             h, new_cache = tfm.forward_serve(
                 params, ctx, tokens, positions, one_cache,
                 cache_index=jnp.zeros((), jnp.int32))
             logits = tfm.unembed(params, ctx, h[:, -1:, :])[:, 0, :]
-            caches = jax.tree.map(
-                lambda c, n: jax.lax.dynamic_update_slice_in_dim(
-                    c, n.astype(c.dtype), slot, axis=1),
-                caches, new_cache)
+            caches = tfm.merge_slot_cache(caches, new_cache, slot)
             return logits[0], caches
 
         self._prefill = jax.jit(prefill_one)
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.pending.append(req)
+    def submit(self, req: Request, on_token=None) -> Session:
+        """Queue a request; returns its :class:`Session` (token stream)."""
+        sess = Session(request=req, seq=self._seq, on_token=on_token)
+        self._seq += 1
+        self.sessions.append(sess)
+        self.scheduler.submit(sess)
+        return sess
 
-    def _free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s.req is None:
-                return i
-        return None
+    @property
+    def pending(self) -> List[Request]:
+        """Legacy view: requests waiting for a slot (queued or paused)."""
+        return [s.request for s in self.scheduler.waiting()]
 
     def _sample(self, logits: jax.Array) -> int:
         if self.temperature <= 0:
@@ -116,44 +131,40 @@ class Engine:
         self.key, sub = jax.random.split(self.key)
         return int(jax.random.categorical(sub, logits / self.temperature))
 
+    def _retire(self, sess: Session, reason: str) -> None:
+        sess.finish(reason)
+        self.cache.release(sess)
+        self.scheduler.on_retire(sess)
+        self.finished.append(sess.request)
+
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine step: admit pending prompts, then one decode step for
-        every active slot.  Returns number of active slots."""
-        # admit
-        while self.pending:
-            slot = self._free_slot()
-            if slot is None:
-                break
-            req = self.pending.pop(0)
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            S = toks.shape[1]
-            pos = self._positions(S, 0, 1)
-            logits, self.caches = self._prefill(
-                self.params, self.caches, toks, pos, slot)
-            nxt = self._sample(logits)
-            req.out_tokens.append(nxt)
-            self.slots[slot] = SlotState(req=req, length=S)
+        """One engine step: sweep cancellations, preempt, admit, then one
+        decode step for every resident session.  Returns the number of
+        resident sessions."""
+        self._sweep_cancelled()
+        self._preempt()
+        self._admit()
 
-        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        slots = self.cache.slots
+        active = [i for i, s in enumerate(slots) if s is not None]
         if not active:
             return 0
 
-        # batched decode: every active slot advances by one token; idle
-        # slots decode a dummy token at index 0 (masked out).
+        # batched decode: every resident session advances by one token;
+        # idle slots decode a dummy token at index 0 (masked out).  Mixed
+        # cache lengths decode per unique-length group: the shared
+        # cache_index must match each slot's write position.
         tok = np.zeros((self.batch, 1), np.int32)
         for i in active:
-            tok[i, 0] = self.slots[i].req.out_tokens[-1]
-        # single shared index is the max length (cache updates per-slot use
-        # the same index; slots admitted together share it). For mixed
-        # lengths we decode per unique length group.
+            tok[i, 0] = slots[i].tokens[-1]
         groups: Dict[int, List[int]] = {}
         for i in active:
-            groups.setdefault(self.slots[i].length, []).append(i)
-        for length, idxs in groups.items():
+            groups.setdefault(slots[i].length, []).append(i)
+        for length, idxs in sorted(groups.items()):
             pos = self._positions(1, length, self.batch)
             logits, new_caches = self._decode(
-                self.params, jnp.asarray(tok), pos, self.caches,
+                self.params, jnp.asarray(tok), pos, self.cache.caches,
                 jnp.int32(length))
             # merge: only the slots of this length group take the new cache
             # (other slots' caches must not see the dummy write at `length`)
@@ -166,20 +177,88 @@ class Engine:
                 mm = m.reshape((1, self.batch) + (1,) * (old.ndim - 2))
                 return jnp.where(mm, new.astype(old.dtype), old)
 
-            self.caches = jax.tree.map(merge, self.caches, new_caches)
+            self.cache.caches = jax.tree.map(merge, self.cache.caches,
+                                             new_caches)
             for i in idxs:
-                s = self.slots[i]
+                sess = slots[i]
                 nxt = self._sample(logits[i])
-                s.req.out_tokens.append(nxt)
-                s.length += 1
-                done = (len(s.req.out_tokens) >= s.req.max_new_tokens
-                        or nxt == s.req.eos_id
-                        or s.length + 1 >= self.max_len)
-                if done:
-                    self.finished.append(s.req)
-                    self.slots[i] = SlotState()
+                sess.emit(nxt)
+                sess.length += 1
+                if sess.done:
+                    # cancelled from the on_token callback mid-stream
+                    self.cache.release(sess)
+                    self.scheduler.on_retire(sess)
+                elif nxt == sess.request.eos_id:
+                    self._retire(sess, FINISH_EOS)
+                elif len(sess.tokens) >= sess.request.max_new_tokens:
+                    self._retire(sess, FINISH_LENGTH)
+                elif sess.length >= self.max_len:
+                    # the NEXT decode would write past the last cache row;
+                    # this row itself is used (was an off-by-one retire)
+                    self._retire(sess, FINISH_CACHE_FULL)
         return len(active)
 
+    # ------------------------------------------------------------------
+    def _sweep_cancelled(self) -> None:
+        """Honour out-of-band Session.cancel(): free the slot of a
+        cancelled resident session and drop the parked cache (returning
+        its SpillTier budget) of one cancelled while paused.  Queued
+        cancellations are dropped lazily by the scheduler's next_ready."""
+        for sess in self.cache.running():
+            if sess.done:
+                self.cache.release(sess)
+                self.scheduler.on_retire(sess)
+        self.cache.sweep_cancelled()
+
+    def _preempt(self) -> None:
+        """Pause running sessions when the scheduler ranks waiting work
+        above them (their KV spills to the secondary tier)."""
+        if self.cache.spill_runtime is None:
+            return
+        want = len(self.scheduler.waiting())
+        freed = self.cache.num_free()
+        while freed < want:
+            victim = self.scheduler.preempt_victim(self.cache.running())
+            if victim is None:
+                break
+            self.cache.pause(victim)
+            self.scheduler.requeue(victim)
+            freed += 1
+
+    def _admit(self) -> None:
+        """Fill free slots in scheduler order: a popped session that was
+        paused resumes via a spill-tier fetch, a fresh one prefills."""
+        while True:
+            slot = self.cache.free_slot()
+            if slot is None:
+                return
+            sess = self.scheduler.next_ready()
+            if sess is None:
+                return
+            if sess.state is SessionState.PAUSED:
+                self.cache.resume(sess, slot)
+                continue
+            prompt = np.asarray(sess.request.prompt)
+            if not self.cache.fits_prompt(len(prompt)):
+                log.warning("req %d: prompt of %d tokens does not fit a "
+                            "%d-row cache slot — rejected",
+                            sess.uid, len(prompt), self.max_len)
+                self._retire(sess, FINISH_REJECTED)
+                continue
+            toks = jnp.asarray(prompt, jnp.int32)[None, :]
+            S = toks.shape[1]
+            pos = self._positions(S, 0, 1)
+            logits, self.cache.caches = self._prefill(
+                self.params, self.cache.caches, toks, pos, slot)
+            self.cache.bind(slot, sess, S)
+            nxt = self._sample(logits)
+            sess.emit(nxt)
+            if nxt == sess.request.eos_id:
+                self._retire(sess, FINISH_EOS)
+            elif len(sess.tokens) >= sess.request.max_new_tokens:
+                self._retire(sess, FINISH_LENGTH)
+
+    # ------------------------------------------------------------------
     def _positions(self, S: int, offset: int, batch: int):
         if self.model.cfg.mrope_sections:
             return jnp.broadcast_to(
@@ -191,6 +270,20 @@ class Engine:
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):
-            if self.step() == 0 and not self.pending:
+            if self.step() == 0 and not self.scheduler.has_waiting():
                 break
         return self.finished
+
+    # ------------------------------------------------------------------
+    @property
+    def caches(self):
+        """Legacy alias of the manager-owned cache tree."""
+        return self.cache.caches
+
+    def traffic_report(self) -> Dict[str, Any]:
+        """Spill-tier byte accounting (cold-slot kv_stash / kv_fetch)."""
+        return self.cache.traffic_report()
+
+    def describe(self) -> str:
+        return (f"engine[{self.cache.describe()} "
+                f"sched={self.scheduler.describe()}]")

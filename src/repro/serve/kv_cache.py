@@ -94,3 +94,51 @@ def cache_tier_report(cfg: ModelConfig, runtime, batch: int, seq: int,
         "pooling_gain": (fp.per_device_unpooled / per_dev) if per_dev else 1.0,
         "decode_read_s": per_dev / bw if bw > 0 else 0.0,
     }
+
+
+# ---------------------------------------------------------------------------
+#: auto-sizing defaults (KVCacheManager): bounded so a CPU smoke twin stays
+#: cheap; production callers raise them or pass sizes explicitly
+DEFAULT_MAX_LEN = 512
+DEFAULT_MAX_BATCH = 8
+DEFAULT_HBM_FRAC = 0.5          # fraction of addressable bytes given to KV
+
+
+def derive_cache_shape(cfg: ModelConfig, runtime, batch: int = None,
+                       max_len: int = None, *,
+                       hbm_frac: float = DEFAULT_HBM_FRAC,
+                       max_batch: int = DEFAULT_MAX_BATCH,
+                       default_max_len: int = DEFAULT_MAX_LEN,
+                       dtype_bytes: int = 2,
+                       chip: hw.Chip = None) -> Dict[str, Any]:
+    """Auto-size the decode batch / cache length from the tier report.
+
+    Fills in whichever of ``batch`` / ``max_len`` the caller left as None:
+    the serving tier's ``capacity_bytes`` (clamped to chip HBM — resident
+    slots still occupy device memory) funds ``hbm_frac`` worth of cache;
+    ``max_len`` halves from ``default_max_len`` until one slot fits, then
+    ``batch`` packs as many slots as the budget holds (capped so the jit'd
+    decode batch stays bounded).  Returns ``{"batch", "max_len", "report"}``
+    with the :func:`cache_tier_report` priced at the final shape.
+    """
+    chip = chip if chip is not None else runtime.chip
+    from repro.core.pool import PoolAccountant
+    acct = PoolAccountant(runtime.plan, runtime.memory)
+    capacity = runtime.tier.capacity(acct)
+    budget = hbm_frac * min(capacity, chip.hbm_bytes)
+
+    def slot_bytes(n_slots: int, L: int) -> float:
+        return kv_cache_footprint(cfg, runtime.plan, n_slots, L,
+                                  dtype_bytes).total_bytes
+
+    if max_len is None:
+        L = default_max_len
+        while L > 16 and slot_bytes(max(batch or 1, 1), L) > budget:
+            L //= 2
+        max_len = L
+    if batch is None:
+        one = max(slot_bytes(1, max_len), 1.0)
+        batch = int(max(1, min(max_batch, budget // one)))
+    report = cache_tier_report(cfg, runtime, batch, max_len, dtype_bytes,
+                               chip)
+    return {"batch": batch, "max_len": max_len, "report": report}

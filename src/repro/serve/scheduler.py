@@ -1,0 +1,207 @@
+"""Scheduler: admission, continuous batching and preemption policies.
+
+One of the three serving APIs behind the ``Engine`` facade (DESIGN.md §6).
+The scheduler owns every *waiting* session — freshly submitted and paused
+(preempted) alike — and answers three questions each engine step:
+
+  ``next_ready()``        which session takes the next free decode slot
+  ``preempt_victim()``    which running session to pause when waiting work
+                          outranks it (its KV spills to the secondary tier)
+  ``has_waiting()``       is there admission pressure at all
+
+Policies are registry-pluggable (:func:`register_scheduler` /
+:func:`build_scheduler`), mirroring the tier/codec registries in
+``core.tiers``:
+
+* :class:`FCFSScheduler`     — run-to-completion first-come-first-served
+  (the legacy engine behaviour; ``deque`` admission, no preemption).
+* :class:`PriorityScheduler` — highest ``Request.priority`` first; a
+  strictly higher-priority arrival preempts the lowest-priority running
+  session (strict inequality prevents equal-priority thrash).
+* :class:`FairScheduler`     — round-robin with a decode-token quantum:
+  once a session has decoded ``quantum`` tokens while others wait, it is
+  paused and requeued behind them.  This is the policy that keeps a
+  many-requests/few-slots workload live for everyone (cold sessions wait
+  in the spill tier, not in HBM).
+"""
+from __future__ import annotations
+
+import abc
+import heapq
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.serve.session import Session
+
+
+class Scheduler(abc.ABC):
+    """Admission + preemption policy over waiting sessions."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def submit(self, sess: Session) -> None:
+        """Enqueue a freshly submitted session."""
+
+    @abc.abstractmethod
+    def next_ready(self) -> Optional[Session]:
+        """Pop the session that should take the next free slot (or None)."""
+
+    @abc.abstractmethod
+    def requeue(self, sess: Session) -> None:
+        """Put a just-paused session back in the waiting set."""
+
+    @abc.abstractmethod
+    def has_waiting(self) -> bool:
+        """True when any session waits for a slot."""
+
+    @abc.abstractmethod
+    def waiting(self) -> Tuple[Session, ...]:
+        """Snapshot of the waiting set (admission order, for reporting)."""
+
+    def preempt_victim(self, running: List[Session]) -> Optional[Session]:
+        """Running session to pause in favour of waiting work (None: keep
+        all running sessions resident — run-to-completion)."""
+        return None
+
+    def on_retire(self, sess: Session) -> None:
+        """Hook: a session finished and left its slot."""
+
+    def describe(self) -> str:
+        return self.name
+
+
+# ---------------------------------------------------------------------------
+class FCFSScheduler(Scheduler):
+    """First-come-first-served, run-to-completion.
+
+    The legacy engine policy, minus its O(n²) ``list.pop(0)`` admission
+    queue — a deque pops the head in O(1), which matters at the
+    heavy-traffic queue depths the north star targets.
+    """
+
+    name = "fcfs"
+
+    def __init__(self):
+        self._queue: deque = deque()
+
+    def submit(self, sess: Session) -> None:
+        self._queue.append(sess)
+
+    def next_ready(self) -> Optional[Session]:
+        while self._queue:
+            sess = self._queue.popleft()
+            if not sess.done:           # cancelled-while-queued sessions drop
+                return sess
+        return None
+
+    def requeue(self, sess: Session) -> None:
+        # paused sessions resume ahead of fresh arrivals (they hold spilled
+        # state the fetch path should drain first)
+        self._queue.appendleft(sess)
+
+    def has_waiting(self) -> bool:
+        return any(not s.done for s in self._queue)
+
+    def waiting(self) -> Tuple[Session, ...]:
+        return tuple(s for s in self._queue if not s.done)
+
+
+# ---------------------------------------------------------------------------
+class PriorityScheduler(Scheduler):
+    """Highest ``Request.priority`` first; FCFS within a priority level.
+
+    A waiting session with *strictly* higher priority preempts the
+    lowest-priority running session — its KV moves to the spill tier and
+    the slot turns over immediately.
+    """
+
+    name = "priority"
+
+    def __init__(self):
+        self._heap: List[Tuple[int, int, Session]] = []
+
+    def submit(self, sess: Session) -> None:
+        heapq.heappush(self._heap, (-sess.priority, sess.seq, sess))
+
+    def next_ready(self) -> Optional[Session]:
+        while self._heap:
+            _, _, sess = heapq.heappop(self._heap)
+            if not sess.done:
+                return sess
+        return None
+
+    def requeue(self, sess: Session) -> None:
+        heapq.heappush(self._heap, (-sess.priority, sess.seq, sess))
+
+    def has_waiting(self) -> bool:
+        return any(not s.done for _, _, s in self._heap)
+
+    def waiting(self) -> Tuple[Session, ...]:
+        return tuple(s for _, _, s in sorted(self._heap, key=lambda t: t[:2])
+                     if not s.done)
+
+    def preempt_victim(self, running: List[Session]) -> Optional[Session]:
+        best_waiting = max((s.priority for _, _, s in self._heap
+                            if not s.done), default=None)
+        if best_waiting is None or not running:
+            return None
+        victim = min(running, key=lambda s: (s.priority, -s.seq))
+        return victim if victim.priority < best_waiting else None
+
+
+# ---------------------------------------------------------------------------
+class FairScheduler(FCFSScheduler):
+    """Round-robin over sessions with a decode-token quantum.
+
+    When sessions wait and a running session has decoded ``quantum``
+    tokens since admission/resume, it is paused (KV spilled) and requeued
+    *behind* the waiters — every session makes progress even when the
+    request count far exceeds the slot count.
+    """
+
+    name = "fair"
+
+    def __init__(self, quantum: int = 8):
+        super().__init__()
+        assert quantum >= 1, quantum
+        self.quantum = quantum
+
+    def requeue(self, sess: Session) -> None:
+        # round-robin: an expired quantum goes to the back of the line
+        self._queue.append(sess)
+
+    def preempt_victim(self, running: List[Session]) -> Optional[Session]:
+        expired = [s for s in running if s.steps_since_admit >= self.quantum]
+        if not expired:
+            return None
+        # the longest-over-quantum session yields first
+        return max(expired, key=lambda s: (s.steps_since_admit, -s.seq))
+
+    def describe(self) -> str:
+        return f"{self.name}[q={self.quantum}]"
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors core.tiers' policy/codec registries)
+_SCHEDULERS: Dict[str, Callable[..., Scheduler]] = {}
+
+
+def register_scheduler(name: str, factory: Callable[..., Scheduler]) -> None:
+    _SCHEDULERS[name] = factory
+
+
+def registered_schedulers() -> Tuple[str, ...]:
+    return tuple(sorted(_SCHEDULERS))
+
+
+def build_scheduler(name: str, **kwargs) -> Scheduler:
+    if name not in _SCHEDULERS:
+        raise KeyError(f"unknown scheduler {name!r}; "
+                       f"registered: {registered_schedulers()}")
+    return _SCHEDULERS[name](**kwargs)
+
+
+register_scheduler("fcfs", FCFSScheduler)
+register_scheduler("priority", PriorityScheduler)
+register_scheduler("fair", FairScheduler)

@@ -119,3 +119,21 @@ def test_fp8_pack_sweep(R, C, br):
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5)
     rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
     assert rel < 0.04       # blockwise scales beat the per-tensor bound
+
+
+@pytest.mark.parametrize("R,C,br", [(256, 64, 64), (128, 128, 128),
+                                    (512, 32, 64)])
+def test_int8_pack_sweep(R, C, br):
+    from repro.kernels.offload_pack import int8_pack, int8_unpack
+    x = jax.random.normal(KEY, (R, C)) * 5.0
+    q, s = int8_pack(x, block_rows=br, interpret=True)
+    qr, sr = ref.int8_pack_ref(x, br)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(q, np.int32),
+                                  np.asarray(qr, np.int32))
+    y = int8_unpack(q, s, block_rows=br, dtype=jnp.float32, interpret=True)
+    yr = ref.int8_unpack_ref(qr, sr, br, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5)
+    rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+    assert rel < 0.02       # int8 round-to-nearest, blockwise scale

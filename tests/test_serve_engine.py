@@ -92,3 +92,237 @@ def test_kv_footprint_ssm_tiny():
     fp = kv_cache_footprint(get_arch("mamba2-370m"), SINGLE_POD,
                             batch=1, seq=524_288)
     assert fp.total_bytes < 1e9         # O(1) state: no long-context blowup
+
+
+# ---------------------------------------------------------------------------
+# Scheduler / KVCacheManager / Session stack
+def _solo_tokens(m, params, prompt, n_new):
+    eng = Engine(m, params, batch=1, max_len=64)
+    eng.submit(Request(uid=0, prompt=np.asarray(prompt, np.int32),
+                       max_new_tokens=n_new))
+    return eng.run()[0].out_tokens
+
+
+def test_mixed_length_decode_groups(model_and_params):
+    """Three concurrent prompts of different lengths: the per-length decode
+    groups must not cross-contaminate each other's cache rows."""
+    m, params = model_and_params
+    prompts = [np.arange(3, dtype=np.int32) + 1,
+               np.arange(5, dtype=np.int32) + 2,
+               (np.arange(9, dtype=np.int32) * 5 + 1) % CFG.vocab_size]
+    solo = [_solo_tokens(m, params, p, 5) for p in prompts]
+    eng = Engine(m, params, batch=3, max_len=64)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    assert [r.out_tokens for r in done] == solo
+
+
+def test_slot_retire_readmit_reuse(model_and_params):
+    """A retired slot's cache rows are reused by the next admission without
+    leaking the previous occupant's KV."""
+    m, params = model_and_params
+    short = np.arange(4, dtype=np.int32) + 1
+    long_ = (np.arange(6, dtype=np.int32) * 7 + 2) % CFG.vocab_size
+    solo_long = _solo_tokens(m, params, long_, 4)
+    eng = Engine(m, params, batch=1, max_len=64)
+    eng.submit(Request(uid=0, prompt=short, max_new_tokens=2))
+    s1 = eng.submit(Request(uid=1, prompt=long_, max_new_tokens=4))
+    done = eng.run()
+    assert [r.uid for r in done] == [0, 1]
+    assert s1.result() == solo_long
+    # both sessions decoded through the same (only) slot
+    assert len(eng.cache.slots) == 1 and eng.cache.slots[0] is None
+
+
+def test_spill_roundtrip_cold_slot(model_and_params):
+    """Acceptance: more requests than slots completes with cold slots
+    spilled to the secondary tier (asserted via traffic_report()), and the
+    spill/fetch round-trip preserves every sequence's greedy decode."""
+    m, params = model_and_params
+    from repro.serve.scheduler import FairScheduler
+    prompts = [((np.arange(4 + i, dtype=np.int32) * (i + 2) + 1)
+                % CFG.vocab_size) for i in range(5)]
+    solo = [_solo_tokens(m, params, p, 6) for p in prompts]
+    eng = Engine(m, params, batch=2, max_len=64,
+                 scheduler=FairScheduler(quantum=2))
+    sessions = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+                for i, p in enumerate(prompts)]
+    done = eng.run()
+    assert len(done) == 5
+    assert [s.result() for s in sessions] == solo
+    assert all(s.finish_reason == "length" for s in sessions)
+    # at least one session was actually paused and resumed
+    assert sum(s.preemptions for s in sessions) > 0
+    report = eng.traffic_report()
+    assert report["kv_stash"]["calls"] > 0
+    assert report["kv_fetch"]["calls"] > 0
+    assert report["kv_stash"]["wire_bytes"] > 0
+    # everything parked in the spill tier was drained back
+    assert eng.cache.spilled_uids() == []
+
+
+def test_spill_overflow_leg_roundtrip(model_and_params):
+    """With a tiny primary budget the cold slots overflow to host DRAM —
+    decode results must be identical (the overflow leg is bit-exact)."""
+    m, params = model_and_params
+    from repro.configs.base import MemoryPlan
+    from repro.core.runtime import MemoryRuntime
+    from repro.core.tiers import SpillTier, build_tier
+    from repro.serve.scheduler import FairScheduler
+    prompts = [np.arange(4, dtype=np.int32) + i for i in range(4)]
+    solo = [_solo_tokens(m, params, p, 5) for p in prompts]
+    spill_rt = MemoryRuntime(m.plan, MemoryPlan(policy="spill"),
+                             planner=m.planner)
+    assert isinstance(spill_rt.tier, SpillTier)
+    spill_rt.tier.primary_budget = 1.0          # force the overflow leg
+    eng = Engine(m, params, batch=2, max_len=64,
+                 scheduler=FairScheduler(quantum=2), spill=spill_rt)
+    sessions = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+                for i, p in enumerate(prompts)]
+    eng.run()
+    assert [s.result() for s in sessions] == solo
+    assert sum(s.preemptions for s in sessions) > 0
+
+
+def test_auto_sized_engine_from_tier_report(model_and_params):
+    """Acceptance: Engine constructed without batch/max_len sizes itself
+    from the tier report."""
+    m, params = model_and_params
+    eng = Engine(m, params)             # no batch / max_len
+    assert eng.cache.auto_sized
+    assert eng.batch >= 1 and eng.max_len >= 16
+    # the sizing honours the tier's capacity contract: the resident cache
+    # fits inside the budget fraction it was given
+    from repro.serve.kv_cache import DEFAULT_HBM_FRAC, kv_cache_footprint
+    total = kv_cache_footprint(m.cfg, m.plan, eng.batch, eng.max_len).total_bytes
+    assert total <= DEFAULT_HBM_FRAC * eng.kv_report["capacity_bytes"]
+    # and it still serves correctly
+    p = np.arange(5, dtype=np.int32) + 1
+    sess = eng.submit(Request(uid=0, prompt=p, max_new_tokens=4))
+    eng.run()
+    assert sess.result() == _solo_tokens(m, params, p, 4)
+
+
+def test_auto_size_respects_caps(model_and_params):
+    m, _ = model_and_params
+    from repro.serve.kv_cache import derive_cache_shape
+    sized = derive_cache_shape(m.cfg, m.runtime, None, None,
+                               max_batch=3, default_max_len=128)
+    assert sized["batch"] <= 3 and sized["max_len"] <= 128
+    assert sized["report"]["capacity_bytes"] > 0
+    # explicit sizes pass through untouched
+    fixed = derive_cache_shape(m.cfg, m.runtime, 2, 64)
+    assert fixed["batch"] == 2 and fixed["max_len"] == 64
+
+
+def test_session_streaming_and_states(model_and_params):
+    m, params = model_and_params
+    from repro.serve.session import SessionState
+    streamed = []
+    eng = Engine(m, params, batch=1, max_len=64)
+    sess = eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32) + 2,
+                              max_new_tokens=3),
+                      on_token=lambda s, t: streamed.append(t))
+    assert sess.state is SessionState.QUEUED
+    eng.run()
+    assert sess.state is SessionState.FINISHED
+    assert sess.finish_reason == "length"
+    assert streamed == sess.result() and len(streamed) == 3
+    # legacy alias: Request.out_tokens is the same stream
+    assert sess.request.out_tokens == streamed
+
+
+def test_last_cache_row_not_wasted(model_and_params):
+    """Off-by-one fix: a slot decodes until length == max_len (the old
+    `length + 1 >= max_len` retired one row early)."""
+    m, params = model_and_params
+    max_len = 16
+    prompt = np.arange(4, dtype=np.int32) + 1
+    eng = Engine(m, params, batch=1, max_len=max_len)
+    sess = eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=100))
+    eng.run()
+    assert sess.finish_reason == "cache_full"
+    # prefill cached 4 rows; decode fills ALL remaining rows
+    assert sess.length == max_len
+    assert len(sess.result()) == max_len - len(prompt) + 1
+
+
+def test_priority_scheduler_preempts(model_and_params):
+    m, params = model_and_params
+    prompts = {0: np.arange(4, dtype=np.int32) + 1,
+               1: np.arange(5, dtype=np.int32) + 3,
+               2: np.arange(6, dtype=np.int32) + 5}
+    solo = {u: _solo_tokens(m, params, p, 5) for u, p in prompts.items()}
+    eng = Engine(m, params, batch=1, max_len=64, scheduler="priority")
+    low = eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=5,
+                             priority=0))
+    eng.step()                          # low-priority session is resident
+    hi = eng.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=5,
+                            priority=5))
+    mid = eng.submit(Request(uid=2, prompt=prompts[2], max_new_tokens=5,
+                             priority=1))
+    done = eng.run()
+    # the high-priority request preempted and finished first
+    assert [r.uid for r in done] == [1, 2, 0]
+    assert low.preemptions >= 1
+    for sess, uid in ((low, 0), (hi, 1), (mid, 2)):
+        assert sess.result() == solo[uid]
+
+
+def test_scheduler_registry():
+    from repro.serve.scheduler import build_scheduler, registered_schedulers
+    assert set(registered_schedulers()) == {"fcfs", "priority", "fair"}
+    assert build_scheduler("fair", quantum=4).quantum == 4
+    with pytest.raises(KeyError):
+        build_scheduler("srpt")
+
+
+def test_session_cancel_running_and_paused(model_and_params):
+    """cancel() stops a resident session's decode (no tokens after the
+    cancelling callback) and drops a paused session's parked cache,
+    returning its SpillTier budget instead of leaking it."""
+    m, params = model_and_params
+    from repro.serve.scheduler import FairScheduler
+    from repro.serve.session import SessionState
+
+    # cancel mid-stream from the on_token callback
+    eng = Engine(m, params, batch=1, max_len=64)
+    sess = eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32) + 1,
+                              max_new_tokens=10),
+                      on_token=lambda s, t: s.cancel() if len(s.tokens) >= 3
+                      else None)
+    done = eng.run()
+    assert sess.state is SessionState.CANCELLED
+    assert sess.finish_reason == "cancelled"
+    assert len(sess.result()) == 3           # nothing emitted after cancel
+    assert done == []                        # cancelled != finished
+    assert eng.cache.slots == [None]
+
+    # cancel while paused: the spilled entry is swept and budget returned
+    eng = Engine(m, params, batch=1, max_len=64,
+                 scheduler=FairScheduler(quantum=1))
+    s0 = eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32) + 1,
+                            max_new_tokens=8))
+    s1 = eng.submit(Request(uid=1, prompt=np.arange(5, dtype=np.int32) + 2,
+                            max_new_tokens=8))
+    eng.step()                               # s0 resident
+    eng.step()                               # s0 paused (quantum), s1 in
+    assert s0.state is SessionState.PAUSED
+    assert eng.cache.spilled_uids() == [0]
+    s0.cancel()
+    eng.run()
+    assert eng.cache.spilled_uids() == []    # swept, not leaked
+    assert s0.state is SessionState.CANCELLED
+    assert s1.state is SessionState.FINISHED
+    assert len(s1.result()) == 8
+
+
+def test_prompt_too_long_rejected(model_and_params):
+    m, params = model_and_params
+    eng = Engine(m, params, batch=1, max_len=8)
+    sess = eng.submit(Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                              max_new_tokens=4))
+    eng.run()
+    assert sess.finish_reason == "rejected"
+    assert sess.result() == []

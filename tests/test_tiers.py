@@ -23,9 +23,9 @@ PLANNER = ShardingPlanner(SINGLE)
 def _plans():
     """Every shipped MemoryPlan config combination the registry must serve."""
     plans = []
-    for policy in ("none", "host", "mcdla", "auto"):
+    for policy in ("none", "host", "mcdla", "auto", "spill"):
         for placement in ("bw_aware", "local"):
-            for compress in ("none", "fp8"):
+            for compress in ("none", "fp8", "int8"):
                 plans.append(MemoryPlan(policy=policy, placement=placement,
                                         compress=compress))
     return plans
@@ -34,7 +34,8 @@ def _plans():
 # ---------------------------------------------------------------------------
 # registry round-trip
 def test_registry_covers_all_shipped_policies():
-    assert set(registered_policies()) == {"none", "host", "mcdla", "auto"}
+    assert set(registered_policies()) == {"none", "host", "mcdla", "auto",
+                                          "spill"}
 
 
 @pytest.mark.parametrize("memory", _plans(),
@@ -52,7 +53,8 @@ def test_tier_registry_roundtrip(memory):
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 16), jnp.float32)
     hints = TransferHints(dtype=x.dtype)
     y = tier.fetch(tier.stash(x, hints), hints)
-    tol = 0.1 if (memory.compress == "fp8" and tier.offloads) else 0.0
+    tol = 0.1 if (memory.compress in ("fp8", "int8")
+                  and tier.offloads) else 0.0
     np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=tol,
                                rtol=tol)
 
@@ -149,6 +151,88 @@ def test_codec_registry():
     assert fp8.ratio == pytest.approx(0.5)
     with pytest.raises(KeyError):
         get_codec("zstd")
+
+
+def test_int8_codec_roundtrip():
+    int8 = get_codec("int8")
+    assert int8.ratio == pytest.approx(0.5)
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 32), jnp.float32)
+    q, scale = int8.compress(x)
+    assert q.dtype == jnp.int8
+    y = int8.decompress(q, scale, jnp.float32)
+    rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+    assert rel < 0.02                  # per-tensor int8: <2% relative error
+
+
+def test_compressed_int8_tier_composition():
+    tier = build_tier(MemoryPlan(policy="mcdla", compress="int8"), PLANNER)
+    assert isinstance(tier, CompressedTier)
+    assert tier.describe() == "pooled_hbm[bw_aware]+int8"
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 16), jnp.float32)
+    hints = TransferHints(dtype=jnp.float32)
+    y = tier.fetch(tier.stash(x, hints), hints)
+    rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+    assert rel < 0.02
+
+
+# ---------------------------------------------------------------------------
+# SpillTier: primary until the capacity contract is spent, then overflow
+def test_spill_tier_routes_primary_then_overflow():
+    from repro.core.tiers import SpillTier
+    memory = MemoryPlan(policy="spill")
+    primary = PooledHbmTier(PLANNER, None, memory)
+    overflow = HostTier(PLANNER, None, memory)
+    x = jnp.ones((4, 8), jnp.float32)              # 128 bytes
+    tier = SpillTier(primary, overflow, primary_budget=300.0)
+    hints = TransferHints(dtype=jnp.float32)
+
+    p1 = tier.stash(x, hints)
+    p2 = tier.stash(x, hints)
+    p3 = tier.stash(x, hints)                      # 384 > 300: overflows
+    assert tier.leg_for(p1) == "primary"
+    assert tier.leg_for(p2) == "primary"
+    assert tier.leg_for(p3) == "overflow"
+    for p in (p1, p2, p3):
+        np.testing.assert_array_equal(np.asarray(tier.fetch(p, hints)),
+                                      np.asarray(x))
+    # discard returns primary budget: the next stash goes primary again
+    tier.discard(p1)
+    assert tier.leg_for(tier.stash(x, hints)) == "primary"
+
+
+def test_spill_tier_prices_both_legs():
+    from repro.core.tiers import SpillTier
+    memory = MemoryPlan(policy="spill")
+    tier = build_tier(memory, PLANNER)
+    assert isinstance(tier, SpillTier)
+    assert tier.describe() == "spill[pooled_hbm[bw_aware]->host]"
+    acct = PoolAccountant(SINGLE, memory)
+    # capacity: both legs (pool + host DRAM)
+    pooled = build_tier(MemoryPlan(policy="mcdla"), PLANNER)
+    host = build_tier(MemoryPlan(policy="host"), PLANNER)
+    assert tier.capacity(acct) == pytest.approx(
+        pooled.capacity(acct) + host.capacity(acct))
+    # bandwidth: the primary leg while it has headroom, degraded toward
+    # the host leg once the budget is spent
+    assert tier.bandwidth(SINGLE) == pytest.approx(pooled.bandwidth(SINGLE))
+    small = SpillTier(PooledHbmTier(PLANNER, None, memory),
+                      HostTier(PLANNER, None, memory), primary_budget=64.0)
+    small.stash(jnp.ones((16, 16), jnp.float32),
+                TransferHints(dtype=jnp.float32))  # overflows immediately
+    small.stash(jnp.ones((16, 16), jnp.float32),
+                TransferHints(dtype=jnp.float32))
+    assert small.bandwidth(SINGLE) < pooled.bandwidth(SINGLE)
+    assert small.bandwidth(SINGLE) > 0.0
+
+
+def test_spill_payload_survives_pytree():
+    """The leg routing is static treedef data: jit residuals keep it."""
+    from repro.core.tiers import SpillPayload
+    p = SpillPayload("overflow", 128.0, (jnp.ones((2, 2)), None))
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    q = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert q.leg == "overflow" and q.nbytes == 128.0
+    np.testing.assert_array_equal(np.asarray(q.inner[0]), np.ones((2, 2)))
 
 
 # ---------------------------------------------------------------------------
