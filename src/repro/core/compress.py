@@ -3,9 +3,23 @@
 The paper's memory-node architecture (Fig. 6) reserves a slot for an ASIC
 "that handles encryption or compression".  On TPU the analogue is a fused
 quantize-and-pack executed *before* the stash collective, halving (fp8) the
-bytes that cross the ICI and that occupy the pool.  The Pallas kernel twin
-lives in ``kernels/offload_pack.py``; this module is the pure-jnp
-implementation used as the default path and as the kernel oracle.
+bytes that cross the ICI and that occupy the pool.
+
+This module owns the **codec registry**: every stash codec is a
+:class:`Codec` carrying four twins of the same transform —
+
+  ``compress``/``decompress``   pure-jnp per-tensor scale (the default data
+                                path and the kernel oracle)
+  ``pack``/``unpack``           blockwise Pallas kernel twins
+                                (``kernels/offload_pack.py``), plus their
+                                pure-jnp references ``pack_ref``/``unpack_ref``
+                                (``kernels/ref.py``)
+
+so a consumer (``CompressedTier``, the paged KV spill path, tests) can pick
+the granularity/backend it needs and the test suite can assert kernel ≡ ref
+for *every* registered codec without naming them.  New codecs are one
+:func:`register_codec` call; ``core.tiers`` re-exports the registry for
+back-compat.
 
 Also provides int8 error-feedback quantization for compressed gradient
 all-reduce (beyond-paper distributed-optimization trick; cf. the paper's
@@ -14,7 +28,8 @@ reduction technique).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +54,7 @@ def fp8_decompress(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Ar
 
 # ---------------------------------------------------------------------------
 # int8 stash compression (per-tensor scale; kernels/offload_pack has the
-# blockwise Pallas twin) — registered as a stash codec in core.tiers
+# blockwise Pallas twin) — registered as a stash codec below
 def int8_compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """x -> (int8 payload, fp32 scale).  Halves stash bytes vs bf16."""
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
@@ -74,6 +89,106 @@ def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
+# ---------------------------------------------------------------------------
+# codec registry — the memory-node's "optional compression ASIC" (§III-A)
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One stash codec: the ref transform plus its optional kernel twins.
+
+    ``pack``/``unpack`` take ``(x_2d, *, block_rows, interpret)`` /
+    ``(q_2d, scales, *, block_rows, dtype, interpret)`` — the
+    kernels/offload_pack signature; ``pack_ref``/``unpack_ref`` are the
+    pure-jnp blockwise twins the tests assert against.  Codecs without a
+    kernel twin leave them ``None``.
+    """
+
+    name: str
+    ratio: float                                   # stashed bytes per raw byte
+    compress: Callable[[jax.Array], Tuple[jax.Array, jax.Array]]
+    decompress: Callable[..., jax.Array]           # (q, scale, dtype) -> x
+    pack: Optional[Callable[..., Tuple[jax.Array, jax.Array]]] = None
+    unpack: Optional[Callable[..., jax.Array]] = None
+    pack_ref: Optional[Callable[..., Tuple[jax.Array, jax.Array]]] = None
+    unpack_ref: Optional[Callable[..., jax.Array]] = None
+
+    def applies_to(self, x: jax.Array) -> bool:
+        return jnp.issubdtype(x.dtype, jnp.floating)
+
+    @property
+    def has_kernel(self) -> bool:
+        return self.pack is not None and self.unpack is not None
+
+
+_CODECS: Dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec) -> None:
+    _CODECS[codec.name] = codec
+
+
+def get_codec(name: str) -> Codec:
+    if name not in _CODECS:
+        raise KeyError(f"unknown stash codec {name!r}; "
+                       f"registered: {sorted(_CODECS)}")
+    return _CODECS[name]
+
+
+def registered_codecs() -> Tuple[str, ...]:
+    return tuple(sorted(_CODECS))
+
+
+def _register_builtin_codecs() -> None:
+    # runs at import time; the function only keeps the module namespace
+    # clean.  Pulling in repro.kernels here is free of new dependencies —
+    # pallas ships inside jax — and pallas code is only *executed* when a
+    # kernel twin is actually called.
+    from repro.kernels import offload_pack as kp
+    from repro.kernels import ref as kref
+    register_codec(Codec("fp8", 0.5, fp8_compress, fp8_decompress,
+                         pack=kp.fp8_pack, unpack=kp.fp8_unpack,
+                         pack_ref=kref.fp8_pack_ref,
+                         unpack_ref=kref.fp8_unpack_ref))
+    register_codec(Codec("int8", 0.5, int8_compress, int8_decompress,
+                         pack=kp.int8_pack, unpack=kp.int8_unpack,
+                         pack_ref=kref.int8_pack_ref,
+                         unpack_ref=kref.int8_unpack_ref))
+
+
+_register_builtin_codecs()
+
+
+# ---------------------------------------------------------------------------
+# whole-tensor encode/decode through a codec — the per-page spill path.
+# kernel=True routes through the Pallas twin as ONE block (page-granular
+# scale, bit-identical to the ref per-tensor path by construction).
+def encode_tensor(codec: Codec, x: jax.Array, *, kernel: bool = False,
+                  interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Quantize ``x`` (any shape) with one per-tensor scale.
+
+    Returns ``(q, scale)`` with ``q.shape == x.shape``.  ``kernel=True``
+    uses the codec's Pallas pack twin on the flattened 2D view.
+    """
+    if kernel and codec.has_kernel:
+        x2 = x.reshape(-1, x.shape[-1])
+        q2, scales = codec.pack(x2, block_rows=x2.shape[0],
+                                interpret=interpret)
+        return q2.reshape(x.shape), scales[0]
+    return codec.compress(x)
+
+
+def decode_tensor(codec: Codec, q: jax.Array, scale: jax.Array,
+                  dtype=jnp.bfloat16, *, kernel: bool = False,
+                  interpret: bool = True) -> jax.Array:
+    if kernel and codec.has_kernel:
+        q2 = q.reshape(-1, q.shape[-1])
+        x2 = codec.unpack(q2, scale.reshape(1), block_rows=q2.shape[0],
+                          dtype=dtype, interpret=interpret)
+        return x2.reshape(q.shape)
+    return codec.decompress(q, scale, dtype)
+
+
 def compress_ratio(kind: str) -> float:
     """Bytes multiplier vs bf16 (used by the cost model and the simulator)."""
-    return {"none": 1.0, "fp8": 0.5, "int8": 0.5}[kind]
+    if kind == "none":
+        return 1.0
+    return get_codec(kind).ratio

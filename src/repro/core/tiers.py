@@ -280,40 +280,13 @@ class HostTier(MemoryTier):
 
 
 # ---------------------------------------------------------------------------
-# codec registry — the memory-node's "optional compression ASIC" (§III-A)
-@dataclasses.dataclass(frozen=True)
-class Codec:
-    name: str
-    ratio: float                                   # stashed bytes per raw byte
-    compress: Callable[[jax.Array], Tuple[jax.Array, jax.Array]]
-    decompress: Callable[..., jax.Array]           # (q, scale, dtype) -> x
-
-    def applies_to(self, x: jax.Array) -> bool:
-        return jnp.issubdtype(x.dtype, jnp.floating)
-
-
-_CODECS: Dict[str, Codec] = {}
-
-
-def register_codec(codec: Codec) -> None:
-    _CODECS[codec.name] = codec
-
-
-def get_codec(name: str) -> Codec:
-    if name not in _CODECS:
-        raise KeyError(f"unknown stash codec {name!r}; "
-                       f"registered: {sorted(_CODECS)}")
-    return _CODECS[name]
-
-
-def registered_codecs() -> Tuple[str, ...]:
-    return tuple(sorted(_CODECS))
-
-
-register_codec(Codec("fp8", comp.compress_ratio("fp8"),
-                     comp.fp8_compress, comp.fp8_decompress))
-register_codec(Codec("int8", comp.compress_ratio("int8"),
-                     comp.int8_compress, comp.int8_decompress))
+# codec registry — the memory-node's "optional compression ASIC" (§III-A).
+# The registry itself lives in core/compress.py (codecs carry Pallas kernel
+# twins there); these aliases keep the historical import path working.
+Codec = comp.Codec
+register_codec = comp.register_codec
+get_codec = comp.get_codec
+registered_codecs = comp.registered_codecs
 
 
 class CompressedTier(MemoryTier):

@@ -113,20 +113,6 @@ def int8_pack(x: jax.Array, *, block_rows: int = 128,
     return q, s[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "dtype",
-                                             "interpret"))
-def int8_unpack(q: jax.Array, scales: jax.Array, *, block_rows: int = 128,
-                dtype=jnp.bfloat16, interpret: bool = False) -> jax.Array:
-    R, C = q.shape
-    nb = R // block_rows
-    return pl.pallas_call(
-        _unpack_kernel,
-        grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, C), dtype),
-        interpret=interpret,
-    )(q, scales[:, None])
+#: dequantize-by-scale has no dtype-specific logic — the int8 unpack twin
+#: IS the fp8 one (kernels/ref.py delegates identically)
+int8_unpack = fp8_unpack

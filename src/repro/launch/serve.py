@@ -6,9 +6,16 @@ KVCacheManager / Session) over pooled KV caches.  On the CPU container use
 the production mesh with the cache striped across the pool.
 
 ``--batch`` / ``--max-len`` may be omitted: the cache manager then sizes
-the decode slots from the serving tier's ``cache_tier_report``.  Cold
-slots (preempted sessions under ``--scheduler fair/priority``) spill to
-the ``--spill`` tier; the run prints the spill traffic report.
+the decode slots from the serving tier's ``cache_tier_report``.  Cold KV
+(preempted sessions under ``--scheduler fair/priority/srpt/deadline``)
+goes to the ``--spill`` tier; with ``--page-size`` the cache is *paged* —
+cold pages spill lazily, per page, through the per-tenant ``--page-codec``
+— and ``--pages`` overcommits the pool below batch x pages_per_slot.
+``--tenant-quota`` caps what each tenant may hold (see
+serve/quota.parse_quota_spec for the grammar); ``--tenants N`` spreads the
+synthetic requests over N tenant names.  The run prints the spill/page
+traffic report, per-tenant usage and (for ``--scheduler deadline``, with
+``--deadline-slack`` steps of slack) the deadline-miss accounting.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from repro.configs.base import MeshPlan, ShapeConfig
 from repro.launch.mesh import make_host_mesh, make_production_mesh, plan_for
 from repro.models.model import build_model
 from repro.serve.engine import Engine, Request
+from repro.serve.quota import quota_from_cli
 from repro.serve.scheduler import build_scheduler, registered_schedulers
 
 
@@ -38,13 +46,32 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--stagger", type=int, default=0,
+                    help="request i decodes new-tokens + i*stagger tokens "
+                         "(unequal service times: lets srpt/deadline sort)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--scheduler", default="fcfs",
                     choices=registered_schedulers())
     ap.add_argument("--quantum", type=int, default=8,
                     help="fair-scheduler decode quantum")
     ap.add_argument("--spill", default="spill",
-                    help="secondary tier policy for cold KV slots")
+                    help="secondary tier policy for cold KV")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="page the KV cache (rows per page; default: "
+                         "monolithic slots)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size (default batch*max_len/page_size; "
+                         "smaller overcommits)")
+    ap.add_argument("--page-codec", default=None,
+                    help="default spill codec for cold pages (fp8/int8/...)")
+    ap.add_argument("--tenant-quota", default=None,
+                    help="per-tenant caps, e.g. 'pages=16,sessions=2' or "
+                         "'a:pages=8;b:sessions=1,codec=int8'")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="spread requests over N tenant names t0..tN-1")
+    ap.add_argument("--deadline-slack", type=int, default=None,
+                    help="per-request deadline = slack + (i+1)*new-tokens "
+                         "engine steps (with --scheduler deadline)")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
@@ -67,21 +94,28 @@ def main() -> None:
     model = build_model(run, mesh=mesh)
     params = model.init(jax.random.PRNGKey(0))
 
+    quota = quota_from_cli(args.tenant_quota, args.page_codec)
+
     sched = (build_scheduler("fair", quantum=args.quantum)
              if args.scheduler == "fair" else build_scheduler(args.scheduler))
     eng = Engine(model, params, batch=args.batch, max_len=args.max_len,
                  temperature=args.temperature, scheduler=sched,
-                 spill=args.spill)
+                 spill=args.spill, page_size=args.page_size,
+                 pages=args.pages, quota=quota)
     print(eng.describe())
     rng = np.random.default_rng(0)
     sessions = []
     for i in range(args.requests):
+        deadline = (args.deadline_slack + (i + 1) * args.new_tokens
+                    if args.deadline_slack is not None else None)
         sessions.append(eng.submit(Request(
             uid=i,
             prompt=rng.integers(0, cfg.vocab_size,
                                 size=(args.prompt_len,)).astype(np.int32),
-            max_new_tokens=args.new_tokens,
-            priority=i % 3 if args.scheduler == "priority" else 0)))
+            max_new_tokens=args.new_tokens + i * args.stagger,
+            priority=i % 3 if args.scheduler == "priority" else 0,
+            tenant=f"t{i % max(1, args.tenants)}",
+            deadline=deadline)))
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -100,6 +134,15 @@ def main() -> None:
               f"/{report['kv_stash']['calls']}x, "
               f"fetch {fmt_bytes(fetch['wire_bytes'])}"
               f"/{fetch['calls']}x")
+    if report.get("pages"):
+        p = report["pages"]
+        print(f"pages[{p['num_pages']}x{p['page_size']}]: "
+              f"{p['evictions']} evicted, {p['refetches']} refetched, "
+              f"{p['readmits_free']} readmitted copy-free")
+    if quota is not None:
+        print("tenants:", {t: u for t, u in eng.quota_report().items()})
+    if hasattr(eng.scheduler, "miss_report"):
+        print("deadlines:", eng.scheduler.miss_report())
 
 
 if __name__ == "__main__":

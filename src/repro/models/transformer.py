@@ -521,3 +521,135 @@ def merge_slot_cache(caches: Params, one_cache: Params, slot) -> Params:
         lambda c, n: jax.lax.dynamic_update_slice_in_dim(
             c, n.astype(c.dtype), slot, axis=1),
         caches, one_cache)
+
+
+# ---------------------------------------------------------------------------
+# paged KV: the contiguous per-slot sequence axis becomes a pool of
+# fixed-size pages — the paper's unit of pool placement applied to serving.
+# Self-attention K/V leaves (batch dim 1, sequence dim 2) are paged; SSM
+# state and cross-attention caches have no growing sequence axis and stay
+# slot-shaped (one row per decode slot, spilled whole on preemption).
+PAGED_KEYS = ("k", "v")
+
+
+def split_paged(caches: Params) -> Tuple[Params, Params]:
+    """Split a stacked cache tree into (paged kv leaves, slot-shaped rest).
+
+    Both halves keep the ``sub_j`` group structure so
+    :func:`gather_pages` can zip them back into the exact tree
+    ``forward_serve`` scans over."""
+    paged = {g: {k: v for k, v in sub.items() if k in PAGED_KEYS}
+             for g, sub in caches.items()}
+    rest = {g: {k: v for k, v in sub.items() if k not in PAGED_KEYS}
+            for g, sub in caches.items()}
+    return paged, rest
+
+
+def paged_pool(caches: Params, page_size: int) -> Tuple[Params, Params]:
+    """Rebuild the kv leaves of a freshly-initialised stacked cache as a
+    page pool.
+
+    Each (n_groups, B, S, K, hd) kv leaf becomes
+    (n_groups, B*S/page_size + 1, page_size, K, hd): ``B * pages_per_slot``
+    real pages plus ONE trailing scratch page (id ``num_pages``) that
+    absorbs writes routed away by the slot mask — unowned page-map entries
+    point there, so a scatter never needs dynamic shapes.
+
+    Returns ``(pool_tree, slot_tree)``; raises ``ValueError`` when the
+    architecture has no pageable KV (pure-SSM caches are O(1)/session and
+    gain nothing from paging).
+    """
+    paged, rest = split_paged(caches)
+    leaves = jax.tree_util.tree_leaves(paged)
+    if not leaves:
+        raise ValueError("paged KV needs attention k/v caches; this "
+                         "architecture's cache has none (pure SSM?)")
+    S = leaves[0].shape[2]
+    if page_size < 1 or S % page_size != 0:
+        raise ValueError(f"page_size {page_size} must divide max_len {S}")
+
+    def to_pool(c):
+        G, B, S_, K, hd = c.shape
+        pages = c.reshape(G, B * (S_ // page_size), page_size, K, hd)
+        scratch = jnp.zeros((G, 1, page_size, K, hd), c.dtype)
+        return jnp.concatenate([pages, scratch], axis=1)
+
+    return jax.tree.map(to_pool, paged), rest
+
+
+def gather_pages(pool: Params, slot_tree: Params,
+                 page_map: jax.Array) -> Params:
+    """Materialise the contiguous decode view from the page pool.
+
+    ``page_map``: (B, pages_per_slot) int32 page ids, logical page order
+    per slot; unowned positions point at the scratch page (their rows are
+    garbage, masked out of attention by ``cache_index``).  The result
+    merges back with the slot-shaped leaves into the stacked tree shape
+    ``forward_serve`` expects.
+    """
+    B, pp = page_map.shape
+    flat = page_map.reshape(-1)
+
+    def one(c):
+        g = jnp.take(c, flat, axis=1)            # (G, B*pp, page, K, hd)
+        G, _, page, K, hd = g.shape
+        return g.reshape(G, B, pp * page, K, hd)
+
+    gathered = jax.tree.map(one, pool)
+    return {g: {**slot_tree.get(g, {}), **gathered.get(g, {})}
+            for g in set(pool) | set(slot_tree)}
+
+
+def scatter_pages(pool: Params, caches: Params,
+                  page_map: jax.Array) -> Params:
+    """Write a decode view's kv rows back into the pool.
+
+    The caller routes every non-writable position of ``page_map`` (unowned
+    pages, slots outside the current decode group) to the scratch page id —
+    duplicate scratch indices overwrite each other, which is exactly the
+    masked-dummy-write semantics of the unpaged merge."""
+    paged, _ = split_paged(caches)
+    B, pp = page_map.shape
+    flat = page_map.reshape(-1)
+
+    def one(p, c):
+        G, B_, S, K, hd = c.shape
+        pages = c.reshape(G, B_ * pp, S // pp, K, hd).astype(p.dtype)
+        return p.at[:, flat].set(pages)
+
+    return jax.tree.map(one, pool, paged)
+
+
+def scatter_one_page(pool: Params, caches: Params, target: jax.Array,
+                     row_start, page_size: int) -> Params:
+    """Write back only the page a decode step touched.
+
+    A decode step writes exactly one cache row (at ``cache_index``), so
+    per slot only the page containing it changes: ``target`` is its (B,)
+    pool ids (scratch for slots outside the decode group) and
+    ``row_start`` the page-aligned row offset — shared by the whole
+    length group.  A pages_per_slot-times smaller writeback than
+    :func:`scatter_pages` (which prefill still uses: it fills many pages).
+    """
+    paged, _ = split_paged(caches)
+
+    def one(p, c):
+        w = jax.lax.dynamic_slice_in_dim(c, row_start, page_size, axis=2)
+        return p.at[:, target].set(w.astype(p.dtype))
+
+    return jax.tree.map(one, pool, paged)
+
+
+def page_slice(pool: Params, pid) -> Params:
+    """Extract one page (all groups) from the pool — the spill unit."""
+    return jax.tree.map(
+        lambda c: jax.lax.dynamic_slice_in_dim(c, pid, 1, axis=1)[:, 0],
+        pool)
+
+
+def page_insert(pool: Params, page: Params, pid) -> Params:
+    """Write a fetched page back into pool position ``pid``."""
+    return jax.tree.map(
+        lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype)[:, None], pid, axis=1),
+        pool, page)

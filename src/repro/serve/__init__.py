@@ -1,9 +1,14 @@
 """Serving: Scheduler / KVCacheManager / Session behind the Engine facade,
-over pooled KV caches (DESIGN.md §6)."""
-from repro.serve.cache_manager import KVCacheManager        # noqa: F401
+over pooled (optionally paged) KV caches (DESIGN.md §6)."""
+from repro.serve.cache_manager import (KVCacheManager,      # noqa: F401
+                                       PagedKVCacheManager)
 from repro.serve.engine import Engine, Request              # noqa: F401
-from repro.serve.scheduler import (FairScheduler,           # noqa: F401
-                                   FCFSScheduler, PriorityScheduler,
-                                   Scheduler, build_scheduler,
+from repro.serve.paging import PageError, PageTable         # noqa: F401
+from repro.serve.quota import (QuotaManager, TenantQuota,   # noqa: F401
+                               parse_quota_spec, quota_from_cli)
+from repro.serve.scheduler import (DeadlineScheduler,       # noqa: F401
+                                   FairScheduler, FCFSScheduler,
+                                   PriorityScheduler, Scheduler,
+                                   SRPTScheduler, build_scheduler,
                                    register_scheduler)
 from repro.serve.session import Session, SessionState       # noqa: F401

@@ -1,7 +1,7 @@
-"""KVCacheManager: decode-slot allocation over the memory-tier hierarchy.
+"""KVCacheManager: decode-slot / page allocation over the memory tiers.
 
 One of the three serving APIs behind the ``Engine`` facade (DESIGN.md §6).
-The manager owns the stacked KV cache tree and everything about where a
+The manager owns the KV cache storage and everything about where a
 session's cache lives:
 
 * **sizing** — when the caller leaves ``batch``/``max_len`` unspecified,
@@ -14,8 +14,21 @@ session's cache lives:
   through a secondary :class:`~repro.core.runtime.MemoryRuntime` whose
   tier defaults to ``spill`` (pooled HBM overflowing to host DRAM — the
   Buddy-Compression cold-page pattern, arXiv:1903.02596) and is fetched
-  back into a fresh slot on resume.  Every leg is metered: the runtime's
+  back on resume.  Every leg is metered: the runtime's
   ``traffic_report()`` shows ``kv_stash``/``kv_fetch`` byte counts.
+
+Two storage models share that contract:
+
+* :class:`KVCacheManager` — the monolithic slot: one contiguous
+  ``max_len``-row region per session, spilled/fetched whole.
+* :class:`PagedKVCacheManager` — the paper's pooled-memory model applied
+  to serving: KV lives in a pool of fixed-size **pages**
+  (``models/transformer.paged_pool``/``gather_pages``), a session holds a
+  page list (:class:`~repro.serve.paging.PageTable`), pausing merely marks
+  pages *cold*, and spill happens **lazily per page** — through the spill
+  tier with a per-tenant codec from the ``core/compress.py`` registry —
+  only when an allocation actually needs the frame.  A session resumed
+  before its pages were reclaimed re-binds with zero copies.
 
 Per-slot cache surgery uses the models/transformer helpers
 (:func:`~repro.models.transformer.slot_cache` /
@@ -25,16 +38,20 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import Any, Dict, List, Optional, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
+import numpy as np
 
 from repro.configs.base import MemoryPlan
+from repro.core.compress import (Codec, decode_tensor, encode_tensor,
+                                 get_codec)
 from repro.core.runtime import MemoryRuntime, fmt_bytes
 from repro.core.tiers import SpillTier, TransferHints
 from repro.models import transformer as tfm
 from repro.serve.kv_cache import (DEFAULT_HBM_FRAC, DEFAULT_MAX_BATCH,
                                   DEFAULT_MAX_LEN, derive_cache_shape)
+from repro.serve.paging import PageTable
 from repro.serve.session import Session, SessionState
 
 log = logging.getLogger(__name__)
@@ -42,7 +59,7 @@ log = logging.getLogger(__name__)
 
 @dataclasses.dataclass
 class _SpilledSlot:
-    """One paused session's cache, parked in the secondary tier."""
+    """One paused session's slot-shaped cache, parked in the secondary tier."""
 
     session: Session                  # owner (for cancelled-entry sweeps)
     treedef: Any                      # cache tree structure
@@ -50,8 +67,22 @@ class _SpilledSlot:
     dtypes: List[Any]                 # restore dtypes on fetch
 
 
+@dataclasses.dataclass
+class _SpilledPage:
+    """One evicted page, parked in the secondary tier (paged manager)."""
+
+    treedef: Any                      # page tree structure
+    items: List[Tuple[Any, Any, Any]]  # (tier payload, codec scale, dtype)
+    codec: Optional[str]              # codec name ('' semantics: None=raw)
+
+
 class KVCacheManager:
     """Slot allocation + tier placement for the serving KV cache."""
+
+    #: storage model marker (the Engine branches its jitted paths on this)
+    paged: bool = False
+    #: page size in cache rows (None: monolithic slots)
+    page_size: Optional[int] = None
 
     def __init__(self, model, batch: Optional[int] = None,
                  max_len: Optional[int] = None, *,
@@ -62,19 +93,20 @@ class KVCacheManager:
                  dtype_bytes: int = 2):
         self.model = model
         sized = derive_cache_shape(
-            model.cfg, model.runtime, batch, max_len, hbm_frac=hbm_frac,
+            model.cfg, model.runtime, batch, max_len,
+            page_size=self.page_size, hbm_frac=hbm_frac,
             max_batch=max_batch, default_max_len=default_max_len,
             dtype_bytes=dtype_bytes)
         self.batch: int = sized["batch"]
         self.max_len: int = sized["max_len"]
         self.report: Dict[str, Any] = sized["report"]
-        self.auto_sized = batch is None or max_len is None
+        self.auto_sized = not batch or not max_len
 
-        self.caches = model.init_cache(self.batch, self.max_len)
         self.slots: List[Optional[Session]] = [None] * self.batch
         self._spilled: Dict[int, _SpilledSlot] = {}
+        self._init_storage()
 
-        # secondary tier for cold slots (None: preemption unsupported)
+        # secondary tier for cold slots/pages (None: preemption unsupported)
         if isinstance(spill, MemoryRuntime):
             self.spill_runtime: Optional[MemoryRuntime] = spill
         elif spill is None:
@@ -87,11 +119,16 @@ class KVCacheManager:
 
         self._slot_get = jax.jit(tfm.slot_cache)
         self._slot_put = jax.jit(tfm.merge_slot_cache)
-        log.info("kv cache [%s]: batch=%d max_len=%d (%s/device, fits=%s)%s",
+        log.info("kv cache [%s]: batch=%d max_len=%d (%s/device, fits=%s)%s%s",
                  self.report["tier"], self.batch, self.max_len,
                  fmt_bytes(self.report["per_device_bytes"]),
                  self.report["fits"],
-                 " [auto-sized]" if self.auto_sized else "")
+                 " [auto-sized]" if self.auto_sized else "",
+                 f" [pages={self.report['num_pages']}"
+                 f"x{self.page_size}]" if self.paged else "")
+
+    def _init_storage(self) -> None:
+        self.caches = self.model.init_cache(self.batch, self.max_len)
 
     # ------------------------------------------------------------------
     # slot lifecycle
@@ -111,6 +148,24 @@ class KVCacheManager:
         """A prompt must leave at least one cache row for decode writes."""
         return prompt_len < self.max_len
 
+    def session_pages(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case page reservation for one session (0: unpaged — page
+        budgets only bind in paged mode)."""
+        return 0
+
+    def prepare_slot(self, slot: int, sess: Session, rows: int) -> None:
+        """Hook: back ``rows`` cache rows for a fresh admission (paged:
+        allocate the prompt's pages before the prefill gather)."""
+
+    def abort_prepare(self, sess: Session) -> None:
+        """Hook: undo a failed :meth:`prepare_slot` (paged: return the
+        partially-allocated pages — a deferred queued session must not
+        pin hot, unevictable pages while it waits)."""
+
+    def ensure_rows(self, sess: Session, rows: int) -> None:
+        """Hook: grow a resident session to ``rows`` cache rows (paged:
+        demand page allocation, evicting cold pages as needed)."""
+
     def bind(self, slot: int, sess: Session, length: int) -> None:
         assert self.slots[slot] is None, (slot, self.slots[slot])
         self.slots[slot] = sess
@@ -126,6 +181,10 @@ class KVCacheManager:
             sess.slot = None
         self.drop_spilled(sess)
 
+    @property
+    def can_preempt(self) -> bool:
+        return self.spill_runtime is not None
+
     # ------------------------------------------------------------------
     # spill / resume (cold slots through the secondary tier)
     def pause(self, sess: Session) -> None:
@@ -133,7 +192,19 @@ class KVCacheManager:
         assert sess.slot is not None, sess
         assert self.spill_runtime is not None, \
             "KVCacheManager(spill=None) cannot preempt sessions"
-        one = self._slot_get(self.caches, sess.slot)
+        self._park_slot(self.caches, sess)
+        self._clear_slot(sess)
+
+    def resume(self, sess: Session, slot: int) -> None:
+        """Fetch a paused session's KV back from the spill tier into
+        ``slot`` and make it resident again."""
+        one = self._unpark_slot(sess)
+        self.caches = self._slot_put(self.caches, one, slot)
+        self.bind(slot, sess, sess.length)
+
+    def _park_slot(self, tree, sess: Session) -> None:
+        """Stash one slot of ``tree`` (leaf-wise) into the spill tier."""
+        one = self._slot_get(tree, sess.slot)
         leaves, treedef = jax.tree_util.tree_flatten(one)
         payloads, dtypes = [], []
         for x in leaves:
@@ -144,15 +215,8 @@ class KVCacheManager:
             dtypes.append(x.dtype)
         self._spilled[sess.uid] = _SpilledSlot(sess, treedef, payloads,
                                                dtypes)
-        self.slots[sess.slot] = None
-        sess.slot = None
-        sess.state = SessionState.PAUSED
-        sess.steps_since_admit = 0
-        sess.preemptions += 1
 
-    def resume(self, sess: Session, slot: int) -> None:
-        """Fetch a paused session's KV back from the spill tier into
-        ``slot`` and make it resident again."""
+    def _unpark_slot(self, sess: Session):
         entry = self._spilled.pop(sess.uid)
         leaves = []
         for payload, dt in zip(entry.payloads, entry.dtypes):
@@ -161,10 +225,14 @@ class KVCacheManager:
                                        name="kv_spill"),
                 direction="kv_fetch"))
             self._discard(payload)
-        one = jax.tree_util.tree_unflatten(entry.treedef, leaves)
-        length = sess.length
-        self.caches = self._slot_put(self.caches, one, slot)
-        self.bind(slot, sess, length)
+        return jax.tree_util.tree_unflatten(entry.treedef, leaves)
+
+    def _clear_slot(self, sess: Session) -> None:
+        self.slots[sess.slot] = None
+        sess.slot = None
+        sess.state = SessionState.PAUSED
+        sess.steps_since_admit = 0
+        sess.preemptions += 1
 
     def drop_spilled(self, sess: Session) -> None:
         """Discard a paused session's parked cache (cancel/retire)."""
@@ -204,3 +272,248 @@ class KVCacheManager:
                  if self.spill_runtime else "none")
         return (f"kv[batch={self.batch} max_len={self.max_len} "
                 f"tier={self.report['tier']} spill={spill}]")
+
+
+# ---------------------------------------------------------------------------
+class PagedKVCacheManager(KVCacheManager):
+    """Paged KV: sessions hold page lists over a shared pool.
+
+    Storage is the (pool, slot_tree) pair from
+    :func:`~repro.models.transformer.paged_pool`: self-attention K/V rows
+    live in ``num_pages`` fixed-size pages (+1 scratch page absorbing
+    masked writes); SSM / cross-attention state stays slot-shaped and is
+    parked whole on preemption, exactly like the base manager.
+
+    * ``pages`` < batch x pages_per_slot **overcommits** the pool —
+      admission is funded by typical usage instead of the worst case,
+      which is the paper's pooled-capacity argument; pool pressure then
+      evicts cold pages or, at the limit, preempts (Engine policy).
+    * ``codec_for(tenant)`` picks the spill codec per tenant from the
+      ``core/compress.py`` registry (None: raw pages).  ``codec_kernel``
+      routes the quantize/pack through the Pallas kernel twin
+      (``kernels/offload_pack.py``) instead of the jnp reference.
+    """
+
+    paged = True
+
+    def __init__(self, model, batch: Optional[int] = None,
+                 max_len: Optional[int] = None, *,
+                 page_size: int = 64,
+                 pages: Optional[int] = None,
+                 codec_for: Optional[Callable[[str], Optional[str]]] = None,
+                 codec_kernel: bool = False,
+                 **kwargs):
+        self.page_size = int(page_size)
+        self._pages_override = pages
+        self.codec_for = codec_for or (lambda tenant: None)
+        self.codec_kernel = codec_kernel
+        self._sessions: Dict[int, Session] = {}       # uid -> owner
+        self._codec_by_uid: Dict[int, Optional[str]] = {}
+        super().__init__(model, batch, max_len, **kwargs)
+
+    def _init_storage(self) -> None:
+        caches = self.model.init_cache(self.batch, self.max_len)
+        self.pool, self.slot_tree = tfm.paged_pool(caches, self.page_size)
+        self.pages_per_slot = self.max_len // self.page_size
+        full = self.batch * self.pages_per_slot
+        num = self._pages_override if self._pages_override else full
+        if not 1 <= num <= full:
+            raise ValueError(f"pages must be in [1, {full}]: {num}")
+        if num < full:
+            # overcommit REALLY shrinks the resident pool: keep num frames
+            # plus the trailing scratch frame — the capacity saving is
+            # physical, not just simulated eviction pressure
+            import jax.numpy as jnp
+            self.pool = jax.tree.map(
+                lambda c: jnp.concatenate([c[:, :num], c[:, -1:]], axis=1),
+                self.pool)
+        self.table = PageTable(num, self.page_size)
+        self.scratch_id = num                     # pool holds num+1 frames
+        self._pmap_cache = None
+        self.report["num_pages"] = num
+        self._has_slot_leaves = bool(jax.tree_util.tree_leaves(self.slot_tree))
+
+    # ------------------------------------------------------------------
+    # page-backed rows
+    def session_pages(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case reservation: rows the session can ever occupy."""
+        return self.table.pages_for(min(self.max_len, prompt_len + max_new))
+
+    def prepare_slot(self, slot: int, sess: Session, rows: int) -> None:
+        """Back the prompt's rows with pages before the prefill gather.
+
+        Raises :class:`~repro.serve.paging.PageError` when the pool cannot
+        cover them (every page hot) — the Engine then defers admission."""
+        self._sessions[sess.uid] = sess
+        self._codec_by_uid[sess.uid] = self.codec_for(sess.tenant)
+        self.table.ensure(sess.uid, rows, self._evict_cb)
+
+    def abort_prepare(self, sess: Session) -> None:
+        for entry in self.table.free_session(sess.uid):
+            self._discard_page(entry)
+        self._sessions.pop(sess.uid, None)
+        self._codec_by_uid.pop(sess.uid, None)
+
+    def bind(self, slot: int, sess: Session, length: int) -> None:
+        # a session entering a slot changes the gather map — a stale cache
+        # here silently routes its decode through the scratch page
+        super().bind(slot, sess, length)
+        self._pmap_cache = None
+
+    def ensure_rows(self, sess: Session, rows: int) -> None:
+        """Demand paging for decode growth (may evict cold pages)."""
+        if self.table.ensure(sess.uid, rows, self._evict_cb):
+            self._pmap_cache = None
+
+    def page_map(self) -> jax.Array:
+        """(batch, pages_per_slot) int32 pool indices for the decode
+        gather; unowned positions point at the scratch page.  Cached on
+        device — the map only changes on admission/growth/preemption, not
+        per decode step — and invalidated by every mutating path."""
+        if self._pmap_cache is None:
+            self._pmap_cache = jax.numpy.asarray(self._build_map())
+        return self._pmap_cache
+
+    def _build_map(self) -> np.ndarray:
+        m = np.full((self.batch, self.pages_per_slot), self.scratch_id,
+                    np.int32)
+        for slot, sess in enumerate(self.slots):
+            if sess is not None:
+                self._fill_row(m, slot, sess)
+        return m
+
+    def page_map_for(self, slot: int, sess: Session) -> np.ndarray:
+        """Page map with a *pending* admission's pages already in ``slot``
+        (the prefill gather runs before :meth:`bind`)."""
+        m = self._build_map()
+        self._fill_row(m, slot, sess)
+        return m
+
+    def _fill_row(self, m: np.ndarray, slot: int, sess: Session) -> None:
+        for pos, pid in enumerate(self.table.resident_pids(sess.uid)):
+            assert pid is not None, \
+                f"resident session {sess.uid} has a spilled page {pos}"
+            m[slot, pos] = pid
+
+    # ------------------------------------------------------------------
+    # per-page spill path (lazy: only on real pool pressure)
+    def _evict_cb(self, uid: int, pos: int, pid: int):
+        assert self.spill_runtime is not None, \
+            "page eviction needs a spill tier " \
+            "(PagedKVCacheManager(spill=None) cannot overcommit)"
+        page = tfm.page_slice(self.pool, pid)
+        leaves, treedef = jax.tree_util.tree_flatten(page)
+        codec_name = self._codec_by_uid.get(uid)
+        codec = get_codec(codec_name) if codec_name else None
+        interpret = jax.default_backend() != "tpu"
+        items = []
+        for x in leaves:
+            dtype = x.dtype
+            if codec is not None and codec.applies_to(x):
+                q, scale = encode_tensor(codec, x, kernel=self.codec_kernel,
+                                         interpret=interpret)
+            else:
+                q, scale = x, None
+            payload = self.spill_runtime.stash(
+                q, TransferHints(dtype=q.dtype, batch_dim=0,
+                                 allow_compress=False, name="kv_page"),
+                direction="kv_stash")
+            items.append((payload, scale, dtype))
+        return _SpilledPage(treedef, items, codec_name)
+
+    def _unstash_page(self, entry: _SpilledPage):
+        codec = get_codec(entry.codec) if entry.codec else None
+        interpret = jax.default_backend() != "tpu"
+        leaves = []
+        for payload, scale, dtype in entry.items:
+            q = self.spill_runtime.fetch(
+                payload, TransferHints(dtype=dtype, batch_dim=0,
+                                       allow_compress=False, name="kv_page"),
+                direction="kv_fetch")
+            if scale is not None:
+                q = decode_tensor(codec, q, scale, dtype,
+                                  kernel=self.codec_kernel,
+                                  interpret=interpret)
+            leaves.append(q)
+            self._discard(payload)
+        return jax.tree_util.tree_unflatten(entry.treedef, leaves)
+
+    def _discard_page(self, entry: _SpilledPage) -> None:
+        for payload, _, _ in entry.items:
+            self._discard(payload)
+
+    # ------------------------------------------------------------------
+    # pause / resume: pages go cold in place; slot-shaped leaves park whole
+    def pause(self, sess: Session) -> None:
+        assert sess.slot is not None, sess
+        assert self.spill_runtime is not None, \
+            "PagedKVCacheManager(spill=None) cannot preempt sessions"
+        if self._has_slot_leaves:
+            self._park_slot(self.slot_tree, sess)
+        self.table.mark_cold(sess.uid)
+        self._clear_slot(sess)
+        self._pmap_cache = None
+
+    def resume(self, sess: Session, slot: int) -> None:
+        """Re-bind a paused session: surviving pages readmit copy-free,
+        evicted ones are fetched (and decoded) into fresh frames."""
+        uid = sess.uid
+        self.table.mark_hot(uid)
+        try:
+            for pos, entry in enumerate(self.table.entries(uid)):
+                if entry.resident:
+                    continue
+                parked = entry.payload
+                pid = self.table.set_resident(uid, pos, self._evict_cb)
+                self.pool = tfm.page_insert(self.pool,
+                                            self._unstash_page(parked), pid)
+        except Exception:
+            # pool too hot to re-home every page: stay paused, pages
+            # return to the eviction queue, the Engine retries later
+            # (readmits are only counted by note_resumed on success)
+            self.table.mark_cold(uid)
+            raise
+        if uid in self._spilled:
+            one = self._unpark_slot(sess)
+            self.slot_tree = self._slot_put(self.slot_tree, one, slot)
+        self.table.note_resumed(uid)
+        self.bind(slot, sess, sess.length)
+
+    def release(self, sess: Session) -> None:
+        super().release(sess)          # slot + parked slot-shaped leaves
+        self._pmap_cache = None
+        for entry in self.table.free_session(sess.uid):
+            self._discard_page(entry)
+        self._sessions.pop(sess.uid, None)
+        self._codec_by_uid.pop(sess.uid, None)
+
+    def sweep_cancelled(self) -> None:
+        super().sweep_cancelled()
+        for uid in list(self.table.sessions()):
+            sess = self._sessions.get(uid)
+            if sess is not None and sess.done and sess.slot is None:
+                self.release(sess)
+
+    @property
+    def caches(self):
+        """Debug/legacy view: the contiguous cache tree gathered from the
+        page pool at the current page map (a copy, not the storage)."""
+        import jax.numpy as jnp
+        pm = jnp.asarray(self.page_map())
+        return tfm.gather_pages(self.pool, self.slot_tree, pm)
+
+    # ------------------------------------------------------------------
+    def traffic_report(self) -> Dict[str, Any]:
+        report = dict(super().traffic_report())
+        report["pages"] = {
+            "page_size": self.page_size,
+            "num_pages": self.table.num_pages,
+            "evictions": self.table.evictions,
+            "refetches": self.table.refetches,
+            "readmits_free": self.table.readmits_free,
+        }
+        return report
+
+    def describe(self) -> str:
+        return (f"{super().describe()[:-1]} "
+                f"{self.table.describe()}]")

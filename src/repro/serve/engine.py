@@ -10,12 +10,22 @@ The serving stack is three composable APIs; the engine only wires them to
 the model's prefill/decode compute and the sampler:
 
 * :class:`~repro.serve.scheduler.Scheduler` — admission, continuous
-  batching, preemption (pluggable: fcfs / priority / fair).
+  batching, preemption (pluggable: fcfs / priority / fair / srpt /
+  deadline).
 * :class:`~repro.serve.cache_manager.KVCacheManager` — slot allocation,
-  tier-report auto-sizing of ``batch``/``max_len``, cold-slot spill to a
-  secondary memory tier and fetch-back on resume.
+  tier-report auto-sizing of ``batch``/``max_len``, cold-KV spill to a
+  secondary memory tier.  ``page_size`` switches the storage model to the
+  :class:`~repro.serve.cache_manager.PagedKVCacheManager`: sessions hold
+  fixed-size pages of a shared pool, preemption marks them cold in place,
+  and spill happens lazily per page through a per-tenant codec.
 * :class:`~repro.serve.session.Session` — the streaming result API
   (token stream + lifecycle + finish reason) returned by :meth:`submit`.
+
+Multi-tenant admission (``quota=``) is enforced here, at the facade: a
+session is charged its worst-case page reservation against its tenant's
+:class:`~repro.serve.quota.TenantQuota` before it may take a slot —
+transiently over-budget tenants are deferred (other tenants admit past
+them), impossible requests are rejected with finish reason ``"quota"``.
 
 Back-compat: the legacy ``Engine(model, params, batch, max_len)``
 constructor still works (sizes are simply explicit instead of derived),
@@ -32,12 +42,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import transformer as tfm
 from repro.models.model import Model
-from repro.serve.cache_manager import KVCacheManager
+from repro.serve.cache_manager import KVCacheManager, PagedKVCacheManager
+from repro.serve.paging import PageError
+from repro.serve.quota import QuotaManager, TenantQuota
 from repro.serve.scheduler import Scheduler, build_scheduler
 from repro.serve.session import (FINISH_CACHE_FULL, FINISH_EOS,
-                                 FINISH_LENGTH, FINISH_REJECTED, Session,
-                                 SessionState)
+                                 FINISH_LENGTH, FINISH_QUOTA,
+                                 FINISH_REJECTED, Session, SessionState)
 
 log = logging.getLogger(__name__)
 
@@ -49,6 +62,8 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = -1                   # -1: never
     priority: int = 0                  # PriorityScheduler rank (higher first)
+    tenant: str = "default"            # quota / codec bucket
+    deadline: Optional[float] = None   # DeadlineScheduler: absolute step
     out_tokens: Optional[List[int]] = None
 
     def __post_init__(self):
@@ -56,8 +71,18 @@ class Request:
             self.out_tokens = []
 
 
+def _masked_merge(mask: jax.Array):
+    """Leaf merge taking ``new`` on masked batch rows (cache batch dim 1)."""
+
+    def merge(old, new):
+        mm = mask.reshape((1, mask.shape[0]) + (1,) * (old.ndim - 2))
+        return jnp.where(mm, new.astype(old.dtype), old)
+
+    return merge
+
+
 class Engine:
-    """Facade: scheduler + cache manager + sampler behind one object.
+    """Facade: scheduler + cache manager + quotas + sampler in one object.
 
     ``batch`` / ``max_len`` may be omitted — the cache manager then sizes
     them from the serving tier's ``cache_tier_report`` (how much cache the
@@ -71,6 +96,11 @@ class Engine:
                  temperature: float = 0.0, seed: int = 0,
                  scheduler: Union[str, Scheduler] = "fcfs",
                  spill: Union[str, Any, None] = "spill",
+                 page_size: Optional[int] = None,
+                 pages: Optional[int] = None,
+                 codec_kernel: bool = False,
+                 quota: Union[QuotaManager, TenantQuota,
+                              Dict[str, TenantQuota], None] = None,
                  **cache_kwargs):
         self.model = model
         self.params = params
@@ -80,8 +110,22 @@ class Engine:
         self.scheduler: Scheduler = (build_scheduler(scheduler)
                                      if isinstance(scheduler, str)
                                      else scheduler)
-        self.cache = KVCacheManager(model, batch, max_len, spill=spill,
-                                    **cache_kwargs)
+        if quota is None or isinstance(quota, QuotaManager):
+            self.quota: Optional[QuotaManager] = quota
+        elif isinstance(quota, TenantQuota):
+            self.quota = QuotaManager(default_quota=quota)
+        else:
+            self.quota = QuotaManager(dict(quota))
+
+        if page_size:
+            codec_for = self.quota.codec_for if self.quota else None
+            self.cache: KVCacheManager = PagedKVCacheManager(
+                model, batch, max_len, spill=spill, page_size=page_size,
+                pages=pages, codec_for=codec_for,
+                codec_kernel=codec_kernel, **cache_kwargs)
+        else:
+            self.cache = KVCacheManager(model, batch, max_len, spill=spill,
+                                        **cache_kwargs)
         self.batch, self.max_len = self.cache.batch, self.cache.max_len
         self.kv_report = self.cache.report
         if not self.kv_report["fits"]:
@@ -95,12 +139,19 @@ class Engine:
         self.sessions: List[Session] = []      # every submission, in order
         self.finished: List[Request] = []      # legacy result list
         self._seq = 0
+        self._by_uid: Dict[int, Session] = {}
+        self._quota_charged: Dict[int, tuple] = {}
+        self._build_compute()
+
+    # ------------------------------------------------------------------
+    def _build_compute(self) -> None:
+        """jit the decode/prefill paths against the manager's storage."""
+        model = self.model
         self._decode = jax.jit(model.decode_step)
 
         def prefill_one(params, caches, tokens, positions, slot):
             """Prefill one sequence into slot ``slot`` of the batched cache."""
             ctx = model.ctx("prefill")
-            from repro.models import transformer as tfm
             one_cache = tfm.slot_cache(caches, slot)
             h, new_cache = tfm.forward_serve(
                 params, ctx, tokens, positions, one_cache,
@@ -110,6 +161,50 @@ class Engine:
             return logits[0], caches
 
         self._prefill = jax.jit(prefill_one)
+        if not self.cache.paged:
+            return
+
+        # paged twins: gather the contiguous view from the page pool, run
+        # the same compute, scatter written pages back (non-group slots
+        # route to the scratch page — the masked-dummy-write semantics)
+        scratch = self.cache.scratch_id
+
+        page = self.cache.page_size
+
+        def decode_paged(params, pool, slot_tree, page_map, tok, pos, idx,
+                         mask):
+            view = tfm.gather_pages(pool, slot_tree, page_map)
+            logits, new = model.decode_step(params, tok, pos, view, idx)
+            # one row written per slot -> write back only its page
+            wp = idx // page
+            target = jnp.where(mask, jnp.take(page_map, wp, axis=1), scratch)
+            pool = tfm.scatter_one_page(pool, new, target, wp * page, page)
+            _, new_slot = tfm.split_paged(new)
+            slot_tree = jax.tree.map(_masked_merge(mask), slot_tree,
+                                     new_slot)
+            return logits, pool, slot_tree
+
+        def prefill_paged(params, pool, slot_tree, page_map, tokens,
+                          positions, slot, mask):
+            ctx = model.ctx("prefill")
+            view = tfm.gather_pages(pool, slot_tree, page_map)
+            one = tfm.slot_cache(view, slot)
+            h, new_one = tfm.forward_serve(
+                params, ctx, tokens, positions, one,
+                cache_index=jnp.zeros((), jnp.int32))
+            logits = tfm.unembed(params, ctx, h[:, -1:, :])[:, 0, :]
+            view = tfm.merge_slot_cache(view, new_one, slot)
+            eff = jnp.where(mask[:, None], page_map, scratch)
+            pool = tfm.scatter_pages(pool, view, eff)
+            _, new_slot = tfm.split_paged(view)
+            slot_tree = jax.tree.map(_masked_merge(mask), slot_tree,
+                                     new_slot)
+            return logits[0], pool, slot_tree
+
+        # donate the pool/slot storage: the scatter then updates the page
+        # frames in place instead of copying the whole pool every step
+        self._decode_paged = jax.jit(decode_paged, donate_argnums=(1, 2))
+        self._prefill_paged = jax.jit(prefill_paged, donate_argnums=(1, 2))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request, on_token=None) -> Session:
@@ -117,6 +212,7 @@ class Engine:
         sess = Session(request=req, seq=self._seq, on_token=on_token)
         self._seq += 1
         self.sessions.append(sess)
+        self._by_uid[sess.uid] = sess
         self.scheduler.submit(sess)
         return sess
 
@@ -135,16 +231,25 @@ class Engine:
         sess.finish(reason)
         self.cache.release(sess)
         self.scheduler.on_retire(sess)
+        self._release_quota(sess)
         self.finished.append(sess.request)
+
+    def _release_quota(self, sess: Session) -> None:
+        charge = self._quota_charged.pop(sess.uid, None)
+        if charge is not None and self.quota is not None:
+            self.quota.release(*charge)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine step: sweep cancellations, preempt, admit, then one
-        decode step for every resident session.  Returns the number of
-        resident sessions."""
+        """One engine step: advance the scheduler clock, sweep
+        cancellations, preempt, admit, back the next decode row with
+        pages, then one decode step for every resident session.  Returns
+        the number of resident sessions."""
+        self.scheduler.on_step()
         self._sweep_cancelled()
         self._preempt()
         self._admit()
+        self._grow_pages()
 
         slots = self.cache.slots
         active = [i for i, s in enumerate(slots) if s is not None]
@@ -163,22 +268,23 @@ class Engine:
             groups.setdefault(slots[i].length, []).append(i)
         for length, idxs in sorted(groups.items()):
             pos = self._positions(1, length, self.batch)
-            logits, new_caches = self._decode(
-                self.params, jnp.asarray(tok), pos, self.cache.caches,
-                jnp.int32(length))
-            # merge: only the slots of this length group take the new cache
-            # (other slots' caches must not see the dummy write at `length`)
             mask = np.zeros((self.batch,), bool)
             mask[idxs] = True
             m = jnp.asarray(mask)
-
-            def merge(old, new):
-                # cache leaves are (n_groups, B, ...): batch is dim 1
-                mm = m.reshape((1, self.batch) + (1,) * (old.ndim - 2))
-                return jnp.where(mm, new.astype(old.dtype), old)
-
-            self.cache.caches = jax.tree.map(merge, self.cache.caches,
-                                             new_caches)
+            if self.cache.paged:
+                pm = jnp.asarray(self.cache.page_map())
+                logits, self.cache.pool, self.cache.slot_tree = \
+                    self._decode_paged(
+                        self.params, self.cache.pool, self.cache.slot_tree,
+                        pm, jnp.asarray(tok), pos, jnp.int32(length), m)
+            else:
+                logits, new_caches = self._decode(
+                    self.params, jnp.asarray(tok), pos, self.cache.caches,
+                    jnp.int32(length))
+                # merge: only this length group takes the new cache (other
+                # slots' caches must not see the dummy write at `length`)
+                self.cache.caches = jax.tree.map(
+                    _masked_merge(m), self.cache.caches, new_caches)
             for i in idxs:
                 sess = slots[i]
                 nxt = self._sample(logits[i])
@@ -188,6 +294,7 @@ class Engine:
                     # cancelled from the on_token callback mid-stream
                     self.cache.release(sess)
                     self.scheduler.on_retire(sess)
+                    self._release_quota(sess)
                 elif nxt == sess.request.eos_id:
                     self._retire(sess, FINISH_EOS)
                 elif len(sess.tokens) >= sess.request.max_new_tokens:
@@ -201,19 +308,24 @@ class Engine:
     # ------------------------------------------------------------------
     def _sweep_cancelled(self) -> None:
         """Honour out-of-band Session.cancel(): free the slot of a
-        cancelled resident session and drop the parked cache (returning
-        its SpillTier budget) of one cancelled while paused.  Queued
+        cancelled resident session, drop the parked cache / pages
+        (returning their SpillTier budget) of one cancelled while paused
+        or queued, and return the tenant-quota charge.  Queued
         cancellations are dropped lazily by the scheduler's next_ready."""
         for sess in self.cache.running():
             if sess.done:
                 self.cache.release(sess)
                 self.scheduler.on_retire(sess)
         self.cache.sweep_cancelled()
+        for uid in list(self._quota_charged):
+            sess = self._by_uid.get(uid)
+            if sess is not None and sess.done:
+                self._release_quota(sess)
 
     def _preempt(self) -> None:
         """Pause running sessions when the scheduler ranks waiting work
-        above them (their KV spills to the secondary tier)."""
-        if self.cache.spill_runtime is None:
+        above them (their KV goes cold: pages lazily, slots eagerly)."""
+        if not self.cache.can_preempt:
             return
         want = len(self.scheduler.waiting())
         freed = self.cache.num_free()
@@ -226,17 +338,29 @@ class Engine:
             freed += 1
 
     def _admit(self) -> None:
-        """Fill free slots in scheduler order: a popped session that was
-        paused resumes via a spill-tier fetch, a fresh one prefills."""
+        """Fill free slots in scheduler order.
+
+        A popped paused session resumes (copy-free for pages never
+        evicted); a fresh one is quota-checked, page-backed and prefilled.
+        Quota-blocked sessions are *deferred* — later arrivals (other
+        tenants) admit past them — unless their demand could never fit the
+        tenant's quota, which rejects with finish reason ``"quota"``.
+        Pool-pressure failures (every page hot) stop admission for this
+        step."""
+        deferred: List[Session] = []
         while True:
             slot = self.cache.free_slot()
             if slot is None:
-                return
+                break
             sess = self.scheduler.next_ready()
             if sess is None:
-                return
+                break
             if sess.state is SessionState.PAUSED:
-                self.cache.resume(sess, slot)
+                try:
+                    self.cache.resume(sess, slot)
+                except PageError:
+                    deferred.append(sess)
+                    break               # pool too hot; retry next step
                 continue
             prompt = np.asarray(sess.request.prompt)
             if not self.cache.fits_prompt(len(prompt)):
@@ -245,11 +369,41 @@ class Engine:
                             sess.uid, len(prompt), self.max_len)
                 self._retire(sess, FINISH_REJECTED)
                 continue
+            pages_needed = self.cache.session_pages(
+                len(prompt), sess.request.max_new_tokens)
+            if self.quota is not None:
+                if not self.quota.admissible(sess.tenant, pages_needed):
+                    log.warning("req %d: demand (%d pages) can never fit "
+                                "tenant %r quota — rejected",
+                                sess.uid, pages_needed, sess.tenant)
+                    self._retire(sess, FINISH_QUOTA)
+                    continue
+                if not self.quota.can_admit(sess.tenant, pages_needed):
+                    deferred.append(sess)
+                    continue
+            try:
+                self.cache.prepare_slot(slot, sess, max(1, len(prompt)))
+            except PageError:
+                self.cache.abort_prepare(sess)
+                deferred.append(sess)
+                break                   # pool too hot; retry next step
+            if self.quota is not None:
+                self.quota.admit(sess.tenant, pages_needed)
+                self._quota_charged[sess.uid] = (sess.tenant, pages_needed)
             toks = jnp.asarray(prompt, jnp.int32)[None, :]
             S = toks.shape[1]
             pos = self._positions(S, 0, 1)
-            logits, self.cache.caches = self._prefill(
-                self.params, self.cache.caches, toks, pos, slot)
+            if self.cache.paged:
+                hot = np.zeros((self.batch,), bool)
+                hot[slot] = True
+                pm = jnp.asarray(self.cache.page_map_for(slot, sess))
+                logits, self.cache.pool, self.cache.slot_tree = \
+                    self._prefill_paged(
+                        self.params, self.cache.pool, self.cache.slot_tree,
+                        pm, toks, pos, slot, jnp.asarray(hot))
+            else:
+                logits, self.cache.caches = self._prefill(
+                    self.params, self.cache.caches, toks, pos, slot)
             self.cache.bind(slot, sess, S)
             nxt = self._sample(logits)
             sess.emit(nxt)
@@ -257,6 +411,40 @@ class Engine:
                 self._retire(sess, FINISH_EOS)
             elif len(sess.tokens) >= sess.request.max_new_tokens:
                 self._retire(sess, FINISH_LENGTH)
+        for sess in reversed(deferred):
+            self.scheduler.requeue(sess)
+
+    def _grow_pages(self) -> None:
+        """Back every resident session's next decode row with a page.
+
+        Under pool overcommit the allocation may find every page hot; the
+        engine then pauses the longest other running session (making its
+        pages evictable) and retries — at the limit a session alone in
+        the pool retires ``cache_full``."""
+        if not self.cache.paged:
+            return
+        for sess in list(self.cache.running()):
+            if sess.slot is None or sess.done:
+                continue    # paused by an earlier iteration's pressure
+                            # relief: allocating to it now would pin a hot
+                            # page to a non-resident owner
+            while True:
+                try:
+                    self.cache.ensure_rows(sess, sess.length + 1)
+                    break
+                except PageError:
+                    if not self._relieve_pressure(sess):
+                        self._retire(sess, FINISH_CACHE_FULL)
+                        break
+
+    def _relieve_pressure(self, needy: Session) -> bool:
+        others = [s for s in self.cache.running() if s is not needy]
+        if not others or not self.cache.can_preempt:
+            return False
+        victim = max(others, key=lambda s: (s.length, s.seq))
+        self.cache.pause(victim)
+        self.scheduler.requeue(victim)
+        return True
 
     # ------------------------------------------------------------------
     def _positions(self, S: int, offset: int, batch: int):
@@ -281,9 +469,15 @@ class Engine:
         return self.cache.caches
 
     def traffic_report(self) -> Dict[str, Any]:
-        """Spill-tier byte accounting (cold-slot kv_stash / kv_fetch)."""
+        """Spill-tier byte accounting (cold-KV kv_stash / kv_fetch) plus,
+        in paged mode, the page-level transfer counters."""
         return self.cache.traffic_report()
 
+    def quota_report(self) -> Dict[str, Any]:
+        """Per-tenant session/page usage (empty without quotas)."""
+        return self.quota.usage() if self.quota is not None else {}
+
     def describe(self) -> str:
+        quota = f" {self.quota.describe()}" if self.quota else ""
         return (f"engine[{self.cache.describe()} "
-                f"sched={self.scheduler.describe()}]")
+                f"sched={self.scheduler.describe()}{quota}]")

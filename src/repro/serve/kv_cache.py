@@ -106,6 +106,7 @@ DEFAULT_HBM_FRAC = 0.5          # fraction of addressable bytes given to KV
 
 def derive_cache_shape(cfg: ModelConfig, runtime, batch: int = None,
                        max_len: int = None, *,
+                       page_size: int = None,
                        hbm_frac: float = DEFAULT_HBM_FRAC,
                        max_batch: int = DEFAULT_MAX_BATCH,
                        default_max_len: int = DEFAULT_MAX_LEN,
@@ -113,15 +114,34 @@ def derive_cache_shape(cfg: ModelConfig, runtime, batch: int = None,
                        chip: hw.Chip = None) -> Dict[str, Any]:
     """Auto-size the decode batch / cache length from the tier report.
 
-    Fills in whichever of ``batch`` / ``max_len`` the caller left as None:
-    the serving tier's ``capacity_bytes`` (clamped to chip HBM — resident
+    Fills in whichever of ``batch`` / ``max_len`` the caller left
+    unspecified — ``None`` and ``0`` both mean "solve for it", so an
+    explicit 0 can no longer leak through the ``max_len`` halving loop as
+    a phantom one-slot cache while the returned batch stays 0.  The
+    serving tier's ``capacity_bytes`` (clamped to chip HBM — resident
     slots still occupy device memory) funds ``hbm_frac`` worth of cache;
     ``max_len`` halves from ``default_max_len`` until one slot fits, then
     ``batch`` packs as many slots as the budget holds (capped so the jit'd
-    decode batch stays bounded).  Returns ``{"batch", "max_len", "report"}``
-    with the :func:`cache_tier_report` priced at the final shape.
+    decode batch stays bounded).
+
+    With ``page_size`` the cache is sized in **pages** instead of slots:
+    ``max_len`` is rounded to a multiple of the page size (explicit values
+    round up — the caller asked to fit that many rows; derived values
+    round down into the budget, floored at ONE page: a sub-page cache is
+    unusable, so a starvation budget combined with a large ``page_size``
+    can exceed the budget — visible as ``fits=False`` in the report) and
+    the report gains ``page_size``, ``pages_per_slot`` and ``num_pages``
+    (= batch x pages_per_slot, the page-pool population before
+    overcommit).
+
+    Returns ``{"batch", "max_len", "report"}`` with the
+    :func:`cache_tier_report` priced at the final shape.
     """
     chip = chip if chip is not None else runtime.chip
+    batch = batch or None           # explicit 0 == None == solve for it
+    max_len = max_len or None
+    if page_size is not None and page_size < 1:
+        raise ValueError(f"page_size must be >= 1: {page_size}")
     from repro.core.pool import PoolAccountant
     acct = PoolAccountant(runtime.plan, runtime.memory)
     capacity = runtime.tier.capacity(acct)
@@ -131,14 +151,27 @@ def derive_cache_shape(cfg: ModelConfig, runtime, batch: int = None,
         return kv_cache_footprint(cfg, runtime.plan, n_slots, L,
                                   dtype_bytes).total_bytes
 
+    def round_pages(L: int, up: bool) -> int:
+        if page_size is None:
+            return L
+        if up:
+            return page_size * -(-L // page_size)
+        return max(page_size, page_size * (L // page_size))
+
     if max_len is None:
         L = default_max_len
-        while L > 16 and slot_bytes(max(batch or 1, 1), L) > budget:
+        while L > 16 and slot_bytes(batch or 1, L) > budget:
             L //= 2
-        max_len = L
+        max_len = round_pages(L, up=False)
+    else:
+        max_len = round_pages(max_len, up=True)
     if batch is None:
         one = max(slot_bytes(1, max_len), 1.0)
         batch = int(max(1, min(max_batch, budget // one)))
     report = cache_tier_report(cfg, runtime, batch, max_len, dtype_bytes,
                                chip)
+    if page_size is not None:
+        pages_per_slot = max_len // page_size
+        report.update(page_size=page_size, pages_per_slot=pages_per_slot,
+                      num_pages=batch * pages_per_slot)
     return {"batch": batch, "max_len": max_len, "report": report}

@@ -1,0 +1,235 @@
+"""PageTable: free-list page allocation for the paged KV cache.
+
+The paper's pooled-memory thesis says capacity management must be
+transparent to the algorithm while the runtime decides placement; the page
+is the unit of that placement for serving.  This module is the pure-Python
+bookkeeping half (no jax): which session owns which fixed-size page, which
+pages are *cold* (owner paused) and therefore evictable, and which logical
+positions of a session currently live in the spill tier.  The array
+surgery — extracting/inserting page contents, codecs, the spill-tier
+stash/fetch — stays in :class:`~repro.serve.cache_manager.PagedKVCacheManager`,
+which drives this table and hands it an eviction callback.
+
+Lifecycle of one page position of one session:
+
+          alloc                    mark_cold        (demand) evict_cb
+  FREE ─────────► RESIDENT+hot ───────────► RESIDENT+cold ───────────► SPILLED
+                      ▲                          │ mark_hot                │
+                      └──────────────────────────┘ (copy-free readmit)     │
+                      ▲                                 set_resident       │
+                      └────────────────────────────────────────────────────┘
+
+Pausing a session costs nothing: its pages merely become eviction
+candidates (LRU by pause order).  They are spilled *lazily*, one page at a
+time, only when an allocation finds the free list empty — and a session
+resumed before that happens re-binds with **zero copies** (the
+Buddy-Compression cold-page pattern, arXiv:1903.02596).  Every invariant
+the property suite drives is checked by :meth:`check`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class PageError(RuntimeError):
+    """Allocation failure: every page is hot (resident running sessions)."""
+
+
+#: evict_cb(owner_sid, position, page_id) -> payload
+#: Called while the page is still resident; must copy the page's contents
+#: out (spill-tier stash) and return an opaque payload the table stores in
+#: the owner's entry.  Raising aborts the allocation.
+EvictFn = Callable[[int, int, int], Any]
+
+
+@dataclasses.dataclass
+class PageEntry:
+    """One logical page position of one session."""
+
+    pid: Optional[int] = None          # resident page id (None: spilled)
+    payload: Any = None                # spill payload when not resident
+    refetched: bool = False            # copied back through the spill tier
+    #                                    during the current pause/resume
+    #                                    cycle (NOT a copy-free readmit)
+
+    @property
+    def resident(self) -> bool:
+        return self.pid is not None
+
+
+class PageTable:
+    """Session → ordered pages over a fixed pool, with lazy cold eviction."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 1 and page_size >= 1, (num_pages, page_size)
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list: a just-freed (warm) page is reused first
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._owner: Dict[int, Tuple[int, int]] = {}   # pid -> (sid, pos)
+        self._entries: Dict[int, List[PageEntry]] = {}
+        self._cold: "OrderedDict[int, None]" = OrderedDict()  # pid, LRU order
+        # counters (the metering the property suite cross-checks)
+        self.evictions = 0
+        self.refetches = 0
+        self.readmits_free = 0         # pages re-bound without a copy
+
+    # ------------------------------------------------------------------
+    # queries
+    def pages_for(self, rows: int) -> int:
+        """Pages needed to hold ``rows`` cache rows."""
+        return max(1, -(-rows // self.page_size))
+
+    def sessions(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._entries))
+
+    def entries(self, sid: int) -> List[PageEntry]:
+        return self._entries.get(sid, [])
+
+    def resident_pids(self, sid: int) -> List[Optional[int]]:
+        """Page ids in logical order (None where the position is spilled)."""
+        return [e.pid for e in self.entries(sid)]
+
+    def spilled_positions(self, sid: int) -> List[int]:
+        return [i for i, e in enumerate(self.entries(sid)) if not e.resident]
+
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def num_cold(self) -> int:
+        return len(self._cold)
+
+    def holds(self, sid: int) -> int:
+        """Total pages charged to a session (resident + spilled)."""
+        return len(self.entries(sid))
+
+    # ------------------------------------------------------------------
+    # allocation
+    def _take_page(self, evict: Optional[EvictFn]) -> int:
+        if self._free:
+            return self._free.pop()
+        if not self._cold:
+            raise PageError(f"page pool exhausted: all {self.num_pages} "
+                            f"pages are hot")
+        if evict is None:
+            raise PageError("free list empty and no eviction callback "
+                            "(cache manager built with spill=None?)")
+        vpid = next(iter(self._cold))                  # LRU victim (peek)
+        v_sid, v_pos = self._owner[vpid]
+        payload = evict(v_sid, v_pos, vpid)   # may raise: table untouched
+        self._cold.pop(vpid)
+        self._owner.pop(vpid)
+        entry = self._entries[v_sid][v_pos]
+        entry.pid, entry.payload = None, payload
+        self.evictions += 1
+        return vpid
+
+    def alloc(self, sid: int, evict: Optional[EvictFn] = None) -> int:
+        """Append one fresh page to ``sid``'s logical sequence."""
+        pid = self._take_page(evict)
+        self._owner[pid] = (sid, len(self._entries.setdefault(sid, [])))
+        self._entries[sid].append(PageEntry(pid=pid))
+        return pid
+
+    def ensure(self, sid: int, rows: int,
+               evict: Optional[EvictFn] = None) -> List[int]:
+        """Grow ``sid`` to cover ``rows`` cache rows; returns new page ids."""
+        new = []
+        while self.holds(sid) < self.pages_for(rows):
+            new.append(self.alloc(sid, evict))
+        return new
+
+    def set_resident(self, sid: int, pos: int,
+                     evict: Optional[EvictFn] = None) -> int:
+        """Give a *spilled* position a fresh page to be re-fetched into."""
+        entry = self._entries[sid][pos]
+        assert not entry.resident, (sid, pos, entry)
+        pid = self._take_page(evict)
+        self._owner[pid] = (sid, pos)
+        entry.pid, entry.payload = pid, None
+        entry.refetched = True
+        self.refetches += 1
+        return pid
+
+    # ------------------------------------------------------------------
+    # temperature (pause / resume)
+    def mark_cold(self, sid: int) -> None:
+        """Owner paused: its resident pages become eviction candidates."""
+        for e in self.entries(sid):
+            if e.resident and e.pid not in self._cold:
+                self._cold[e.pid] = None
+
+    def mark_hot(self, sid: int) -> int:
+        """Owner resuming: pull surviving pages off the eviction queue.
+
+        Returns how many pages are still resident.  Counting them as
+        copy-free readmits is deferred to :meth:`note_resumed` — a resume
+        attempt can still fail (pool too hot to re-home spilled pages),
+        and pages refetched through the spill tier were copied, not kept."""
+        kept = 0
+        for e in self.entries(sid):
+            if e.resident:
+                self._cold.pop(e.pid, None)
+                kept += 1
+        return kept
+
+    def note_resumed(self, sid: int) -> int:
+        """Commit a SUCCESSFUL resume: count (and return) the pages that
+        survived the whole pause in place — resident and never refetched —
+        and start a fresh cycle for the next pause."""
+        kept = 0
+        for e in self.entries(sid):
+            if e.resident and not e.refetched:
+                kept += 1
+            e.refetched = False
+        self.readmits_free += kept
+        return kept
+
+    # ------------------------------------------------------------------
+    # release
+    def free_session(self, sid: int) -> List[Any]:
+        """Return a retired/cancelled session's pages to the free list.
+
+        Returns the spill payloads of its non-resident positions so the
+        caller can discard them (SpillTier budget).  Double-free safe:
+        freeing an unknown sid is a no-op returning []."""
+        payloads = []
+        for e in self._entries.pop(sid, []):
+            if e.resident:
+                assert e.pid not in self._free, f"double free of page {e.pid}"
+                self._owner.pop(e.pid)
+                self._cold.pop(e.pid, None)
+                self._free.append(e.pid)
+            elif e.payload is not None:
+                payloads.append(e.payload)
+        return payloads
+
+    # ------------------------------------------------------------------
+    def check(self) -> None:
+        """Internal-consistency audit (the property suite calls this after
+        every step): no page aliased across sessions, free list duplicate-
+        free and disjoint from owned pages, cold ⊆ owned."""
+        assert len(set(self._free)) == len(self._free), "free-list duplicates"
+        owned = set(self._owner)
+        assert not (owned & set(self._free)), "page both free and owned"
+        seen = {}
+        for sid, entries in self._entries.items():
+            for pos, e in enumerate(entries):
+                if e.resident:
+                    assert e.pid not in seen, \
+                        f"page {e.pid} aliased: {seen[e.pid]} and {sid}"
+                    seen[e.pid] = sid
+                    assert self._owner.get(e.pid) == (sid, pos), \
+                        (e.pid, self._owner.get(e.pid), sid, pos)
+        assert seen.keys() == owned, "owner map out of sync"
+        assert set(self._cold) <= owned, "cold page not owned"
+        assert len(self._free) + len(owned) == self.num_pages, \
+            "pages leaked or invented"
+
+    def describe(self) -> str:
+        return (f"pages[{self.num_pages}x{self.page_size} "
+                f"free={self.num_free()} cold={self.num_cold()} "
+                f"evict={self.evictions} refetch={self.refetches} "
+                f"readmit_free={self.readmits_free}]")

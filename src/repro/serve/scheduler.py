@@ -23,6 +23,13 @@ Policies are registry-pluggable (:func:`register_scheduler` /
   paused and requeued behind them.  This is the policy that keeps a
   many-requests/few-slots workload live for everyone (cold sessions wait
   in the spill tier, not in HBM).
+* :class:`SRPTScheduler`     — shortest-remaining-processing-time first
+  (``Session.remaining`` from ``max_new_tokens``), the mean-latency-
+  optimal policy; strictly shorter waiting work preempts the longest
+  running session.
+* :class:`DeadlineScheduler` — earliest-deadline-first over
+  ``Request.deadline`` (absolute engine steps via the :meth:`on_step`
+  clock) with met/missed accounting at retirement.
 """
 from __future__ import annotations
 
@@ -66,6 +73,9 @@ class Scheduler(abc.ABC):
 
     def on_retire(self, sess: Session) -> None:
         """Hook: a session finished and left its slot."""
+
+    def on_step(self) -> None:
+        """Hook: the engine completed one decode step (scheduler clock)."""
 
     def describe(self) -> str:
         return self.name
@@ -183,6 +193,139 @@ class FairScheduler(FCFSScheduler):
 
 
 # ---------------------------------------------------------------------------
+class SRPTScheduler(Scheduler):
+    """Shortest-remaining-processing-time first.
+
+    The remaining time of a session is the decode tokens it is still owed
+    (``Session.remaining``, from ``Request.max_new_tokens``) — the classic
+    mean-latency-optimal policy when service times are known, which they
+    are here up to early EOS.  A waiting session with *strictly* less
+    remaining work preempts the longest-remaining running session; ties
+    break FCFS by admission ticket so equal-length jobs never thrash.
+
+    Remaining work only changes while a session runs, so heap keys frozen
+    at push time stay correct for every *waiting* session.
+    """
+
+    name = "srpt"
+
+    def __init__(self):
+        self._heap: List[Tuple[int, int, Session]] = []
+
+    def submit(self, sess: Session) -> None:
+        heapq.heappush(self._heap, (sess.remaining, sess.seq, sess))
+
+    def next_ready(self) -> Optional[Session]:
+        while self._heap:
+            _, _, sess = heapq.heappop(self._heap)
+            if not sess.done:
+                return sess
+        return None
+
+    def requeue(self, sess: Session) -> None:
+        heapq.heappush(self._heap, (sess.remaining, sess.seq, sess))
+
+    def has_waiting(self) -> bool:
+        return any(not s.done for _, _, s in self._heap)
+
+    def waiting(self) -> Tuple[Session, ...]:
+        return tuple(s for _, _, s in sorted(self._heap, key=lambda t: t[:2])
+                     if not s.done)
+
+    def preempt_victim(self, running: List[Session]) -> Optional[Session]:
+        shortest = min((s.remaining for _, _, s in self._heap if not s.done),
+                       default=None)
+        if shortest is None or not running:
+            return None
+        victim = max(running, key=lambda s: (s.remaining, -s.seq))
+        return victim if victim.remaining > shortest else None
+
+
+# ---------------------------------------------------------------------------
+class DeadlineScheduler(Scheduler):
+    """Earliest-deadline-first with deadline-miss accounting.
+
+    ``Request.deadline`` is an absolute engine-step number (the scheduler's
+    clock advances by one per :meth:`on_step`); deadline-less requests rank
+    last (+inf) and can never miss.  EDF never idles while an unmet
+    deadline waits: ``next_ready`` always yields the earliest-deadline
+    waiting session.  A strictly earlier waiting deadline preempts the
+    latest-deadline running session.  Misses are counted at retirement
+    (``now > deadline``) and per-tenant in :attr:`misses_by_tenant`.
+    """
+
+    name = "deadline"
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, Session]] = []
+        self.now = 0
+        self.misses = 0
+        self.met = 0
+        self.misses_by_tenant: Dict[str, int] = {}
+        self.met_by_tenant: Dict[str, int] = {}
+
+    def submit(self, sess: Session) -> None:
+        heapq.heappush(self._heap, (sess.deadline, sess.seq, sess))
+
+    def next_ready(self) -> Optional[Session]:
+        while self._heap:
+            _, _, sess = heapq.heappop(self._heap)
+            if not sess.done:
+                return sess
+        return None
+
+    def requeue(self, sess: Session) -> None:
+        heapq.heappush(self._heap, (sess.deadline, sess.seq, sess))
+
+    def has_waiting(self) -> bool:
+        return any(not s.done for _, _, s in self._heap)
+
+    def waiting(self) -> Tuple[Session, ...]:
+        return tuple(s for _, _, s in sorted(self._heap, key=lambda t: t[:2])
+                     if not s.done)
+
+    def preempt_victim(self, running: List[Session]) -> Optional[Session]:
+        earliest = min((s.deadline for _, _, s in self._heap if not s.done),
+                       default=None)
+        if earliest is None or not running:
+            return None
+        victim = max(running, key=lambda s: (s.deadline, -s.seq))
+        return victim if victim.deadline > earliest else None
+
+    def on_step(self) -> None:
+        self.now += 1
+
+    #: terminal reasons outside the SLO: the request was never served
+    #: (rejected / over-quota) or the client walked away — counting them
+    #: as met/missed would skew the deadline accounting either way
+    _UNSERVED = ("rejected", "quota", "cancelled")
+
+    def on_retire(self, sess: Session) -> None:
+        if sess.deadline == float("inf") or \
+                sess.finish_reason in self._UNSERVED:
+            return
+        if self.now > sess.deadline:
+            self.misses += 1
+            self.misses_by_tenant[sess.tenant] = \
+                self.misses_by_tenant.get(sess.tenant, 0) + 1
+        else:
+            self.met += 1
+            self.met_by_tenant[sess.tenant] = \
+                self.met_by_tenant.get(sess.tenant, 0) + 1
+
+    def miss_report(self) -> Dict[str, object]:
+        """Per-tenant SLO ledger: both sides of the met/missed split."""
+        tenants = set(self.misses_by_tenant) | set(self.met_by_tenant)
+        return {"now": self.now, "met": self.met, "missed": self.misses,
+                "by_tenant": {t: {"met": self.met_by_tenant.get(t, 0),
+                                  "missed": self.misses_by_tenant.get(t, 0)}
+                              for t in sorted(tenants)}}
+
+    def describe(self) -> str:
+        return f"{self.name}[met={self.met} missed={self.misses}]"
+
+
+# ---------------------------------------------------------------------------
 # registry (mirrors core.tiers' policy/codec registries)
 _SCHEDULERS: Dict[str, Callable[..., Scheduler]] = {}
 
@@ -205,3 +348,5 @@ def build_scheduler(name: str, **kwargs) -> Scheduler:
 register_scheduler("fcfs", FCFSScheduler)
 register_scheduler("priority", PriorityScheduler)
 register_scheduler("fair", FairScheduler)
+register_scheduler("srpt", SRPTScheduler)
+register_scheduler("deadline", DeadlineScheduler)

@@ -33,6 +33,7 @@ FINISH_EOS = "eos"                  # sampled the request's eos_id
 FINISH_LENGTH = "length"            # hit max_new_tokens
 FINISH_CACHE_FULL = "cache_full"    # cache slot exhausted (max_len rows)
 FINISH_REJECTED = "rejected"        # prompt does not fit a cache slot
+FINISH_QUOTA = "quota"              # exceeds the tenant quota outright
 FINISH_CANCELLED = "cancelled"
 
 
@@ -67,6 +68,21 @@ class Session:
     @property
     def priority(self) -> int:
         return getattr(self.request, "priority", 0)
+
+    @property
+    def tenant(self) -> str:
+        return getattr(self.request, "tenant", "default")
+
+    @property
+    def deadline(self) -> float:
+        """EDF rank: the request's deadline in engine steps (inf: none)."""
+        d = getattr(self.request, "deadline", None)
+        return float("inf") if d is None else float(d)
+
+    @property
+    def remaining(self) -> int:
+        """SRPT rank: decode tokens still owed (never negative)."""
+        return max(0, self.request.max_new_tokens - len(self.tokens))
 
     @property
     def done(self) -> bool:

@@ -10,6 +10,21 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+try:
+    # deterministic hypothesis profile for CI (HYPOTHESIS_PROFILE=ci):
+    # derandomized with a fixed example budget so the property suite gives
+    # the same verdict on every run of the same tree.  Loaded explicitly —
+    # registering alone does nothing, and not every hypothesis version
+    # honors the env var by itself.
+    from hypothesis import settings as _hyp_settings
+    _hyp_settings.register_profile(
+        "ci", derandomize=True, max_examples=60, deadline=None,
+        print_blob=True)
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        _hyp_settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
+except ImportError:                     # property tests importorskip anyway
+    pass
+
 
 def run_multidev(script: str, devices: int = 8, timeout: int = 600):
     """Run tests/multidev/<script> in a child python with N host devices."""

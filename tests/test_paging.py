@@ -1,0 +1,766 @@
+"""Paged KV cache: PageTable bookkeeping, paged==unpaged decode streams,
+per-page spill metering, tenant quotas, SRPT/deadline scheduling, and the
+derive_cache_shape page/0-batch fixes.
+
+The trace drivers (`run_table_trace` / `run_scheduler_trace`) are shared
+with the hypothesis property suite (tests/test_serve_properties.py); here
+they run on seeded-random traces so the machinery is exercised even when
+hypothesis is not installed.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, MemoryPlan, MeshPlan, RunConfig
+from repro.configs.base import ShapeConfig
+from repro.models import transformer as tfm
+from repro.models.model import build_model
+from repro.serve.engine import Engine, Request
+from repro.serve.paging import PageError, PageTable
+from repro.serve.quota import (QuotaManager, TenantQuota, parse_quota_spec)
+from repro.serve.scheduler import FairScheduler, build_scheduler
+from repro.serve.session import Session
+
+CFG = ARCHS["smollm-135m"].reduced()
+PLAN1 = MeshPlan((1,), ("data",))
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    run = RunConfig(model=CFG, shape=ShapeConfig("t", 64, 2, "decode"),
+                    mesh=PLAN1, memory=MemoryPlan(policy="none"))
+    m = build_model(run)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# PageTable unit behaviour
+def test_page_table_alloc_free_cycle():
+    t = PageTable(num_pages=4, page_size=8)
+    pids = [t.alloc(1) for _ in range(3)]
+    assert len(set(pids)) == 3 and t.num_free() == 1
+    assert t.resident_pids(1) == pids
+    t.check()
+    assert t.free_session(1) == []          # nothing spilled -> no payloads
+    assert t.num_free() == 4
+    t.check()
+    assert t.free_session(1) == []          # double free is a no-op
+
+
+def test_page_table_exhaustion_and_lazy_evict():
+    t = PageTable(num_pages=2, page_size=4)
+    t.alloc(1), t.alloc(2)
+    with pytest.raises(PageError):          # both pages hot
+        t.alloc(3)
+    log = []
+    t.mark_cold(1)                          # owner 1 paused
+    pid = t.alloc(3, evict=lambda sid, pos, p: log.append((sid, pos, p))
+                  or f"payload{p}")
+    assert log == [(1, 0, pid)]             # LRU cold page was reclaimed
+    assert t.evictions == 1
+    assert t.resident_pids(1) == [None]     # spilled marker
+    assert t.spilled_positions(1) == [0]
+    t.check()
+    # resume owner 1: its page must come back via set_resident (refetch)
+    t.mark_hot(1)
+    assert t.readmits_free == 0             # the page was gone
+    with pytest.raises(PageError):          # everything hot again
+        t.set_resident(1, 0)
+    t.free_session(3)
+    new_pid = t.set_resident(1, 0)
+    assert t.refetches == 1 and t.resident_pids(1) == [new_pid]
+    t.check()
+
+
+def test_page_table_copy_free_readmit():
+    t = PageTable(num_pages=4, page_size=4)
+    t.ensure(7, rows=9)                     # 3 pages
+    t.mark_cold(7)
+    assert t.num_cold() == 3
+    assert t.mark_hot(7) == 3               # nothing was evicted
+    assert t.readmits_free == 0             # counted only on commit...
+    assert t.note_resumed(7) == 3           # ...of a successful resume
+    assert t.readmits_free == 3 and t.evictions == 0
+    t.check()
+
+
+def test_page_table_ensure_is_idempotent():
+    t = PageTable(num_pages=8, page_size=4)
+    assert len(t.ensure(1, rows=10)) == 3
+    assert t.ensure(1, rows=10) == []
+    assert t.ensure(1, rows=12) == []       # still 3 pages
+    assert len(t.ensure(1, rows=13)) == 1
+    assert t.pages_for(1) == 1 and t.pages_for(4) == 1 and t.pages_for(5) == 2
+
+
+# ---------------------------------------------------------------------------
+# trace drivers (shared with tests/test_serve_properties.py)
+def run_table_trace(ops, num_pages=6, page_size=4):
+    """Drive a PageTable through (op, sid) steps with a fake spill ledger.
+
+    Model: sessions own rows; 'pause' marks cold, 'resume' re-homes
+    spilled positions, 'free' retires.  After every step the table's
+    internal invariants are checked and the spill ledger is cross-checked:
+    a page fetched on resume must return exactly the payload its eviction
+    stored, and metered transfers must equal the table's counters.
+    """
+    t = PageTable(num_pages=num_pages, page_size=page_size)
+    ledger = {}                             # (sid, pos) -> payload
+    stashes, fetches = [], []
+
+    def evict_cb(sid, pos, pid):
+        payload = ("page", sid, pos, pid)
+        ledger[(sid, pos)] = payload
+        stashes.append(payload)
+        return payload
+
+    state = {}                              # sid -> "live" | "paused"
+    for op, sid in ops:
+        if op == "grow" and state.get(sid) == "live":
+            rows = (t.holds(sid) * page_size) + 1
+            try:
+                t.ensure(sid, rows, evict_cb)
+            except PageError:
+                pass                        # all hot: legal, nothing changed
+        elif op == "pause" and state.get(sid) == "live":
+            t.mark_cold(sid)
+            state[sid] = "paused"
+        elif op == "resume" and state.get(sid) == "paused":
+            t.mark_hot(sid)
+            try:
+                for pos in t.spilled_positions(sid):
+                    want = ledger[(sid, pos)]
+                    entry = t.entries(sid)[pos]
+                    assert entry.payload == want, "payload mixed up"
+                    t.set_resident(sid, pos, evict_cb)
+                    ledger.pop((sid, pos))
+                    fetches.append(want)
+                t.note_resumed(sid)
+                state[sid] = "live"
+            except PageError:
+                t.mark_cold(sid)            # stay paused (engine retries)
+                state[sid] = "paused"
+        elif op == "free" and sid in state:
+            for payload in t.free_session(sid):
+                ledger.pop((payload[1], payload[2]))
+            state.pop(sid)
+        elif op == "new" and sid not in state:
+            try:
+                t.ensure(sid, 1, evict_cb)
+                state[sid] = "live"
+            except PageError:
+                pass
+        t.check()
+    assert t.evictions == len(stashes)
+    assert t.refetches == len(fetches)
+    # bytes invariant: every transfer moved exactly one page
+    assert t.evictions * page_size == sum(page_size for _ in stashes)
+    return t, state
+
+
+def test_page_table_random_traces_seeded():
+    rng = random.Random(1234)
+    for _ in range(25):
+        ops = [(rng.choice(["new", "grow", "pause", "resume", "free"]),
+                rng.randrange(5)) for _ in range(120)]
+        t, state = run_table_trace(ops)
+        for sid in list(state):             # drain THE trace's table
+            t.free_session(sid)
+            t.check()
+        assert t.num_free() == t.num_pages  # whole pool recovered
+
+
+def run_scheduler_trace(name, ops, slots=2, **kwargs):
+    """Drive a scheduler through submit/admit/tick/pause/retire/cancel ops,
+    asserting the policy invariants the ISSUE names:
+
+    * no session is lost or double-scheduled,
+    * FCFS pops fresh sessions in arrival order,
+    * SRPT never runs a longer job while a shorter one waits,
+    * EDF never idles while an unmet deadline waits and always picks the
+      earliest deadline.
+    """
+    sched = build_scheduler(name, **kwargs)
+    sessions, running, waiting = [], [], set()
+    fresh_pops = []
+
+    def submit(max_new, deadline):
+        req = Request(uid=len(sessions), prompt=np.zeros(2, np.int32),
+                      max_new_tokens=max_new, deadline=deadline)
+        s = Session(request=req, seq=len(sessions))
+        sessions.append(s)
+        waiting.add(s.uid)
+        sched.submit(s)
+        return s
+
+    for op, a, b in ops:
+        if op == "submit":
+            submit(a, b)
+        elif op == "admit" and len(running) < slots:
+            s = sched.next_ready()
+            if s is None:
+                assert not any(not sessions[u].done for u in waiting), \
+                    f"{name} idles while work waits"
+                continue
+            assert s.uid in waiting, f"double-scheduled {s.uid}"
+            assert not s.done, "scheduled a finished session"
+            waiting.discard(s.uid)
+            live = [sessions[u] for u in waiting if not sessions[u].done]
+            if name == "srpt":
+                assert all(s.remaining <= w.remaining for w in live), \
+                    "SRPT ran a longer job while a shorter one waited"
+            if name == "deadline":
+                assert all(s.deadline <= w.deadline for w in live), \
+                    "EDF skipped an earlier deadline"
+            if name == "fcfs" and s.preemptions == 0:
+                fresh_pops.append(s.seq)
+            running.append(s)
+        elif op == "tick":
+            sched.on_step()
+            for s in running:
+                s.emit(0)
+        elif op == "pause" and running:
+            s = running.pop(a % len(running))
+            s.preemptions += 1
+            waiting.add(s.uid)
+            sched.requeue(s)
+        elif op == "retire" and running:
+            s = running.pop(a % len(running))
+            s.finish("length")
+            sched.on_retire(s)
+        elif op == "cancel" and sessions:
+            s = sessions[a % len(sessions)]
+            if not s.done:
+                s.cancel()
+                waiting.discard(s.uid)
+    # drain: every surviving session comes out exactly once — none lost
+    while True:
+        s = sched.next_ready()
+        if s is None:
+            break
+        assert s.uid in waiting, f"lost or duplicated session {s.uid}"
+        waiting.discard(s.uid)
+    assert not any(not sessions[u].done for u in waiting), \
+        f"{name} lost sessions: {waiting}"
+    if name == "fcfs":
+        assert fresh_pops == sorted(fresh_pops), \
+            "FCFS broke arrival order for fresh sessions"
+    return sched, sessions
+
+
+SCHED_NAMES = ("fcfs", "priority", "fair", "srpt", "deadline")
+
+
+@pytest.mark.parametrize("name", SCHED_NAMES)
+def test_scheduler_random_traces_seeded(name):
+    rng = random.Random(99)
+    for _ in range(20):
+        ops = []
+        for _ in range(80):
+            kind = rng.choice(["submit", "admit", "tick", "pause",
+                               "retire", "cancel"])
+            ops.append((kind, rng.randrange(8),
+                        rng.choice([None, rng.randrange(1, 30)])))
+        run_scheduler_trace(name, ops)
+
+
+def test_deadline_miss_accounting_in_trace():
+    ops = ([("submit", 3, 1)] +                   # deadline 1: must miss
+           [("admit", 0, None)] +
+           [("tick", 0, None)] * 5 +
+           [("retire", 0, None)])
+    sched, sessions = run_scheduler_trace("deadline", ops)
+    assert sched.miss_report()["missed"] == 1
+    assert sched.misses_by_tenant == {"default": 1}
+
+
+# ---------------------------------------------------------------------------
+# transformer paged helpers
+def test_paged_pool_gather_scatter_roundtrip():
+    caches = tfm.init_caches(CFG, 3, 32, jnp.float32)
+    caches = jax.tree.map(
+        lambda c: jax.random.normal(jax.random.PRNGKey(c.size % 89), c.shape),
+        caches)
+    pool, slot_tree = tfm.paged_pool(caches, 8)
+    pmap = jnp.arange(12, dtype=jnp.int32).reshape(3, 4)
+    view = tfm.gather_pages(pool, slot_tree, pmap)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), caches, view)
+    # shuffled map still round-trips through scatter
+    perm = jnp.asarray(np.random.default_rng(0).permutation(12)
+                       .reshape(3, 4).astype(np.int32))
+    pool2 = tfm.scatter_pages(pool, view, perm)
+    view2 = tfm.gather_pages(pool2, slot_tree, perm)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)),
+        tfm.split_paged(caches)[0], tfm.split_paged(view2)[0])
+
+
+def test_paged_pool_rejects_bad_shapes():
+    caches = tfm.init_caches(CFG, 2, 32, jnp.float32)
+    with pytest.raises(ValueError):
+        tfm.paged_pool(caches, 7)           # does not divide max_len
+    ssm = tfm.init_caches(ARCHS["mamba2-370m"].reduced(), 2, 32, jnp.float32)
+    with pytest.raises(ValueError):
+        tfm.paged_pool(ssm, 8)              # pure SSM: nothing to page
+
+
+# ---------------------------------------------------------------------------
+# paged engine end-to-end
+def _solo(m, params, prompt, n_new):
+    eng = Engine(m, params, batch=1, max_len=64)
+    s = eng.submit(Request(uid=0, prompt=np.asarray(prompt, np.int32),
+                           max_new_tokens=n_new))
+    eng.run()
+    return s.result()
+
+
+def test_paged_streams_identical_to_unpaged(model_and_params):
+    """Acceptance: the paged path is a pure storage change — same tokens."""
+    m, params = model_and_params
+    prompts = [((np.arange(4 + i, dtype=np.int32) * (i + 2) + 1)
+                % CFG.vocab_size) for i in range(5)]
+    want = [_solo(m, params, p, 6) for p in prompts]
+
+    def drive(**kw):
+        eng = Engine(m, params, batch=2, max_len=64, **kw)
+        ss = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+              for i, p in enumerate(prompts)]
+        eng.run()
+        return eng, [s.result() for s in ss]
+
+    for kw in ({"page_size": 64, "spill": "host", "scheduler": "srpt"},
+               {"page_size": 16, "spill": "host"},
+               {"page_size": 16, "pages": 3, "spill": "host",
+                "scheduler": FairScheduler(quantum=2)}):
+        eng, got = drive(**kw)
+        assert got == want, kw
+    # the last (overcommitted) run actually moved pages through the tier
+    pages = eng.traffic_report()["pages"]
+    assert pages["evictions"] > 0 and pages["refetches"] > 0
+
+
+def test_paged_streams_identical_with_staggered_retires(model_and_params):
+    """Regression: with unequal max_new_tokens a session retires mid-step
+    and a queued one admits into the freed slot WITHOUT crossing a page
+    boundary — a stale cached page map then gathered the newcomer's decode
+    from the scratch page (silent stream corruption)."""
+    m, params = model_and_params
+    prompts = [((np.arange(4, dtype=np.int32) * (i + 2) + 1)
+                % CFG.vocab_size) for i in range(4)]
+    new_tokens = [3, 9, 4, 6]
+    want = [_solo(m, params, p, n) for p, n in zip(prompts, new_tokens)]
+
+    def drive(**kw):
+        eng = Engine(m, params, batch=2, max_len=64, **kw)
+        ss = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=n))
+              for i, (p, n) in enumerate(zip(prompts, new_tokens))]
+        eng.run()
+        return [s.result() for s in ss]
+
+    assert drive(page_size=16, spill="host") == want
+    assert drive(page_size=16, pages=3, spill="host",
+                 scheduler=FairScheduler(quantum=2)) == want
+
+
+def test_deadline_ignores_unserved_sessions(model_and_params):
+    """Rejected / cancelled-in-queue requests are outside the SLO — they
+    must not inflate the met/missed deadline accounting."""
+    m, params = model_and_params
+    eng = Engine(m, params, batch=1, max_len=8, scheduler="deadline")
+    rejected = eng.submit(Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                                  max_new_tokens=4, deadline=100))
+    served = eng.submit(Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                                max_new_tokens=3, deadline=100))
+    cancelled = eng.submit(Request(uid=2, prompt=np.arange(4, dtype=np.int32),
+                                   max_new_tokens=3, deadline=100))
+    cancelled.cancel()
+    eng.run()
+    assert rejected.finish_reason == "rejected"
+    rep = eng.scheduler.miss_report()
+    assert rep["met"] + rep["missed"] == 1  # only the served session counts
+
+
+def test_quota_from_cli_codec_is_fleet_wide_default():
+    """Regression: --page-codec must also fill named --tenant-quota
+    clauses that don't pick their own codec."""
+    from repro.serve.quota import quota_from_cli
+    q = quota_from_cli("a:pages=8;b:codec=fp8", "int8")
+    assert q.codec_for("a") == "int8"       # filled by the default
+    assert q.codec_for("b") == "fp8"        # explicit choice wins
+    assert q.codec_for("anyone-else") == "int8"
+    assert q.quota_for("a").max_pages == 8  # caps preserved
+    assert quota_from_cli(None, None) is None
+    assert quota_from_cli(None, "fp8").codec_for("x") == "fp8"
+
+
+def test_paged_lazy_spill_is_copy_free_without_pressure(model_and_params):
+    """A full-size pool never moves a byte even under heavy preemption —
+    pausing marks pages cold, resuming readmits them in place."""
+    m, params = model_and_params
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16,
+                 scheduler=FairScheduler(quantum=2), spill="host")
+    ss = [eng.submit(Request(uid=i, prompt=np.arange(4, dtype=np.int32) + i,
+                             max_new_tokens=6)) for i in range(5)]
+    eng.run()
+    assert sum(s.preemptions for s in ss) > 0
+    rep = eng.traffic_report()
+    assert rep["pages"]["evictions"] == 0
+    assert rep["pages"]["readmits_free"] > 0
+    assert "kv_stash" not in rep            # zero spill traffic
+
+
+def test_paged_spill_bytes_metering(model_and_params):
+    """kv_stash bytes == evictions x (bytes of one page across the kv
+    leaves) — the per-page metering invariant, end to end."""
+    m, params = model_and_params
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16, pages=3,
+                 scheduler=FairScheduler(quantum=2), spill="host")
+    for i in range(5):
+        eng.submit(Request(uid=i, prompt=np.arange(5, dtype=np.int32) + i,
+                           max_new_tokens=6))
+    eng.run()
+    rep = eng.traffic_report()
+    ev, rf = rep["pages"]["evictions"], rep["pages"]["refetches"]
+    assert ev > 0 and rf > 0
+    page_leaves = jax.tree_util.tree_leaves(
+        tfm.page_slice(eng.cache.pool, 0))
+    page_bytes = sum(x.size * x.dtype.itemsize for x in page_leaves)
+    assert rep["kv_stash"]["calls"] == ev * len(page_leaves)
+    assert rep["kv_stash"]["wire_bytes"] == ev * page_bytes
+    assert rep["kv_fetch"]["wire_bytes"] == rf * page_bytes
+    # drained: every page either free or owned by nothing
+    assert eng.cache.table.sessions() == ()
+    assert eng.cache.table.num_free() == eng.cache.table.num_pages
+
+
+def test_paged_tenant_codec_halves_spill_bytes(model_and_params):
+    m, params = model_and_params
+
+    def spill_bytes(quota):
+        eng = Engine(m, params, batch=2, max_len=64, page_size=16, pages=3,
+                     scheduler=FairScheduler(quantum=2), spill="host",
+                     quota=quota)
+        for i in range(5):
+            eng.submit(Request(uid=i,
+                               prompt=np.arange(5, dtype=np.int32) + i,
+                               max_new_tokens=6))
+        eng.run()
+        rep = eng.traffic_report()
+        return (rep["kv_stash"]["wire_bytes"] / rep["pages"]["evictions"],
+                [r.out_tokens for r in sorted(eng.finished,
+                                              key=lambda r: r.uid)])
+
+    raw, out_raw = spill_bytes(None)
+    int8, out_int8 = spill_bytes(TenantQuota(codec="int8"))
+    # int8 page payloads are half the bf16/f32 wire bytes... the reduced
+    # config serves f32 caches: int8 is 1/4 of f32 (+ tiny scale overhead)
+    assert int8 < raw / 1.9, (raw, int8)
+    assert len(out_int8) == len(out_raw) == 5   # lossy but completes
+
+
+def test_quota_sessions_defer_and_release(model_and_params):
+    m, params = model_and_params
+    q = QuotaManager({"A": TenantQuota(max_sessions=1)})
+    eng = Engine(m, params, batch=2, max_len=64, quota=q)
+    sa = [eng.submit(Request(uid=i, prompt=np.arange(4, dtype=np.int32),
+                             max_new_tokens=4, tenant="A"))
+          for i in range(3)]
+    sb = eng.submit(Request(uid=9, prompt=np.arange(5, dtype=np.int32),
+                            max_new_tokens=4, tenant="B"))
+    eng.step()
+    assert sorted(s.tenant for s in eng.cache.running()) == ["A", "B"]
+    assert eng.quota_report()["A"]["sessions"] == 1
+    eng.run()
+    assert all(s.finish_reason == "length" for s in sa + [sb])
+    assert eng.quota_report()["A"]["sessions"] == 0     # released
+
+
+def test_quota_page_budget_rejects_impossible(model_and_params):
+    m, params = model_and_params
+    q = QuotaManager({"Z": TenantQuota(max_pages=1)})
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16, quota=q,
+                 spill="host")
+    big = eng.submit(Request(uid=0, prompt=np.arange(20, dtype=np.int32),
+                             max_new_tokens=40, tenant="Z"))
+    ok = eng.submit(Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=4, tenant="Z"))
+    eng.run()
+    assert big.finish_reason == "quota"     # needs 4 pages, quota is 1
+    assert ok.finish_reason == "length"     # fits: admitted normally
+
+
+def test_quota_page_budget_serializes_tenant(model_and_params):
+    """Two sessions of 2 pages each under a 2-page budget run one after
+    the other; a second tenant is unaffected."""
+    m, params = model_and_params
+    q = QuotaManager({"A": TenantQuota(max_pages=2)})
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16, quota=q,
+                 spill="host")
+    a = [eng.submit(Request(uid=i, prompt=np.arange(20, dtype=np.int32),
+                            max_new_tokens=10, tenant="A"))  # 30 rows: 2 pages
+         for i in range(2)]
+    b = eng.submit(Request(uid=5, prompt=np.arange(20, dtype=np.int32),
+                           max_new_tokens=10, tenant="B"))
+    eng.step()
+    tenants = sorted(s.tenant for s in eng.cache.running())
+    assert tenants == ["A", "B"]            # A's 2nd waits on the budget
+    eng.run()
+    assert all(s.finish_reason == "length" for s in a + [b])
+
+
+def test_srpt_prefers_short_jobs(model_and_params):
+    m, params = model_and_params
+    eng = Engine(m, params, batch=1, max_len=64, scheduler="srpt")
+    long_ = eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                               max_new_tokens=12))
+    eng.step()                              # the long job is resident
+    short = eng.submit(Request(uid=1, prompt=np.arange(5, dtype=np.int32),
+                               max_new_tokens=3))
+    eng.run()
+    # the short job finished first even though it arrived second
+    assert [r.uid for r in eng.finished] == [1, 0]
+    assert long_.preemptions >= 1           # SRPT preempted the long job
+
+
+def test_deadline_scheduler_orders_and_accounts(model_and_params):
+    m, params = model_and_params
+    eng = Engine(m, params, batch=1, max_len=64, scheduler="deadline")
+    late = eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                              max_new_tokens=4, deadline=100))
+    tight = eng.submit(Request(uid=1, prompt=np.arange(5, dtype=np.int32),
+                               max_new_tokens=4, deadline=2))
+    eng.run()
+    assert eng.finished[0].uid == 1         # EDF ran the tight deadline first
+    rep = eng.scheduler.miss_report()
+    assert rep["missed"] >= 1 and rep["met"] >= 1
+
+
+def test_paged_cancel_while_paused_frees_pages(model_and_params):
+    m, params = model_and_params
+    eng = Engine(m, params, batch=1, max_len=64, page_size=16,
+                 scheduler=FairScheduler(quantum=1), spill="host")
+    s0 = eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32) + 1,
+                            max_new_tokens=8))
+    s1 = eng.submit(Request(uid=1, prompt=np.arange(5, dtype=np.int32) + 2,
+                            max_new_tokens=8))
+    eng.step()                              # s0 resident
+    eng.step()                              # s0 paused (quantum), s1 in
+    assert s0.slot is None and eng.cache.table.holds(0) > 0
+    s0.cancel()
+    eng.run()
+    assert eng.cache.table.sessions() == () # pages swept, not leaked
+    assert len(s1.result()) == 8
+
+
+def test_paged_pool_pressure_retires_or_preempts(model_and_params):
+    """A 1-page pool with a growing session: once the page is full and no
+    cold page exists, the engine retires the session cache_full instead of
+    deadlocking; a queued session then gets the pool."""
+    m, params = model_and_params
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16, pages=1,
+                 spill="host")
+    a = eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=40))
+    b = eng.submit(Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=4))
+    eng.run()
+    assert a.finish_reason == "cache_full"
+    assert a.length <= 16                   # confined to the single page
+    assert b.finish_reason == "length"      # admitted after a's retire
+    assert eng.cache.table.num_free() == 1
+
+
+def _assert_parked_sessions_hold_no_hot_pages(eng):
+    """Invariant: every page owned by a non-running session is cold (in
+    the eviction queue) or spilled — never hot, which would make it
+    unevictable while its owner cannot use it."""
+    t = eng.cache.table
+    cold = set(t._cold)
+    for sess in eng.sessions:
+        if sess.slot is not None:
+            continue
+        for pid in (t.resident_pids(sess.uid)
+                    if sess.uid in t._entries else []):
+            if pid is not None:
+                assert pid in cold, \
+                    f"parked session {sess.uid} owns hot page {pid}"
+
+
+def test_grow_pages_never_allocates_to_freshly_paused(model_and_params):
+    """Regression: _grow_pages used to iterate a stale running() snapshot,
+    so a session paused mid-loop by pressure relief still got a page
+    allocated — hot, with a parked owner, hence unevictable forever."""
+    m, params = model_and_params
+    eng = Engine(m, params, batch=2, max_len=16, page_size=4, pages=5,
+                 spill="host")
+    ss = [eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                             max_new_tokens=10)),
+          eng.submit(Request(uid=1, prompt=np.arange(8, dtype=np.int32),
+                             max_new_tokens=10))]
+    for _ in range(200):
+        n = eng.step()
+        _assert_parked_sessions_hold_no_hot_pages(eng)
+        eng.cache.table.check()
+        if n == 0 and not eng.scheduler.has_waiting():
+            break
+    assert all(s.done for s in ss)
+    assert eng.cache.table.sessions() == ()
+
+
+def test_failed_admission_rolls_back_partial_pages(model_and_params):
+    """Regression: a PageError mid-prepare_slot used to leave the still-
+    queued session pinning hot pages it could never use or release."""
+    m, params = model_and_params
+    eng = Engine(m, params, batch=2, max_len=16, page_size=4, pages=4,
+                 spill="host")
+    a = eng.submit(Request(uid=0, prompt=np.arange(12, dtype=np.int32),
+                           max_new_tokens=4))
+    eng.step()                              # a resident: 3-4 hot pages
+    b = eng.submit(Request(uid=1, prompt=np.arange(12, dtype=np.int32),
+                           max_new_tokens=4))
+    for _ in range(200):
+        # while b waits it must hold zero pages (prepare rolled back)
+        if not b.done and b.slot is None:
+            assert eng.cache.table.holds(1) == 0
+        _assert_parked_sessions_hold_no_hot_pages(eng)
+        if eng.step() == 0 and not eng.scheduler.has_waiting():
+            break
+    assert a.finish_reason == "length"
+    assert b.finish_reason == "length"      # admitted once a released
+
+
+def test_failed_resume_does_not_inflate_readmit_count(model_and_params):
+    """Regression: each failed resume attempt used to re-count the
+    session's surviving pages as copy-free readmits."""
+    m, params = model_and_params
+    from repro.serve.cache_manager import PagedKVCacheManager
+    mgr = PagedKVCacheManager(m, 2, 32, page_size=16, pages=3,
+                              spill="spill")
+    mk = lambda uid: Session(request=Request(
+        uid=uid, prompt=np.zeros(2, np.int32)), seq=uid)
+    a, b = mk(0), mk(1)
+    mgr.prepare_slot(0, a, rows=32)         # a: 2 pages
+    mgr.bind(0, a, 32)
+    mgr.pause(a)                            # both pages cold
+    mgr.prepare_slot(1, b, rows=16)         # evicts a's LRU page
+    mgr.bind(1, b, 16)
+    assert mgr.table.evictions == 0         # 1 free page absorbed it...
+    mgr.prepare_slot(1, b, rows=32)         # ...now b's growth evicts
+    assert mgr.table.evictions == 1
+    assert mgr.table.spilled_positions(0) == [0]
+    # resume a: its surviving page readmits, the spilled one cannot be
+    # re-homed (b holds every other frame hot) -> PageError, undone count
+    before = mgr.table.readmits_free
+    for _ in range(3):                      # retries must not inflate
+        with pytest.raises(PageError):
+            mgr.resume(a, 0)
+    assert mgr.table.readmits_free == before
+    mgr.release(b)                          # frees b's frames
+    mgr.resume(a, 0)
+    assert mgr.table.readmits_free == before + 1    # one true readmit
+    assert mgr.table.refetches == 1
+    mgr.table.check()
+
+
+def test_overcommitted_pool_is_physically_smaller(model_and_params):
+    """pages=N must shrink the resident pool itself (the paper's pooled-
+    capacity saving), not just simulate eviction pressure."""
+    m, _ = model_and_params
+    from repro.serve.cache_manager import PagedKVCacheManager
+    full = PagedKVCacheManager(m, 2, 64, page_size=16, spill=None)
+    small = PagedKVCacheManager(m, 2, 64, page_size=16, pages=3,
+                                spill=None)
+    fb = sum(x.size for x in jax.tree_util.tree_leaves(full.pool))
+    sb = sum(x.size for x in jax.tree_util.tree_leaves(small.pool))
+    assert fb * 4 == sb * 9             # 8+1 frames vs 3+1 frames
+    assert small.scratch_id == 3 and full.scratch_id == 8
+    with pytest.raises(ValueError):
+        PagedKVCacheManager(m, 2, 64, page_size=16, pages=9, spill=None)
+
+
+def test_paged_engine_with_temperature_sampling(model_and_params):
+    """Non-greedy sampling through the paged path exercises the PRNG
+    branch; the stream stays inside the vocab and completes."""
+    m, params = model_and_params
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16,
+                 temperature=0.8, seed=7, spill="host")
+    s = eng.submit(Request(uid=0, prompt=np.arange(6, dtype=np.int32),
+                           max_new_tokens=5))
+    eng.run()
+    assert len(s.result()) == 5
+    assert all(0 <= t < CFG.vocab_size for t in s.result())
+
+
+# ---------------------------------------------------------------------------
+# derive_cache_shape: page sizing + the explicit-0/None regression
+def test_derive_cache_shape_batch_zero_means_auto(model_and_params):
+    m, _ = model_and_params
+    from repro.serve.kv_cache import derive_cache_shape
+    auto = derive_cache_shape(m.cfg, m.runtime, None, None)
+    zero = derive_cache_shape(m.cfg, m.runtime, 0, 0)
+    assert zero == auto                     # 0 no longer leaks through
+    assert zero["batch"] >= 1 and zero["max_len"] >= 16
+
+
+def test_derive_cache_shape_joint_solve_tiny_budget(model_and_params):
+    """batch=None, max_len=None at a starvation budget: the halving loop
+    floors at 16 rows and the packer still returns a sane >=1 slot."""
+    m, _ = model_and_params
+    from repro.serve.kv_cache import derive_cache_shape
+    sized = derive_cache_shape(m.cfg, m.runtime, None, None,
+                               hbm_frac=1e-12)
+    assert sized["batch"] == 1 and sized["max_len"] == 16
+    assert sized["report"]["capacity_bytes"] > 0
+    # paged twin: the floor rounds to whole pages
+    paged = derive_cache_shape(m.cfg, m.runtime, None, None,
+                               hbm_frac=1e-12, page_size=8)
+    assert paged["max_len"] % 8 == 0 and paged["max_len"] >= 8
+    assert paged["report"]["num_pages"] == \
+        paged["batch"] * paged["report"]["pages_per_slot"]
+
+
+def test_derive_cache_shape_page_rounding(model_and_params):
+    m, _ = model_and_params
+    from repro.serve.kv_cache import derive_cache_shape
+    up = derive_cache_shape(m.cfg, m.runtime, 2, 50, page_size=16)
+    assert up["max_len"] == 64              # explicit max_len rounds UP
+    assert up["report"]["pages_per_slot"] == 4
+    with pytest.raises(ValueError):
+        derive_cache_shape(m.cfg, m.runtime, 2, 64, page_size=0)
+
+
+# ---------------------------------------------------------------------------
+# quota plumbing
+def test_parse_quota_spec_grammar():
+    per, default = parse_quota_spec("pages=16,sessions=2")
+    assert per == {} and default == TenantQuota(16, 2, None)
+    per, default = parse_quota_spec(
+        "interactive:sessions=4;batch:pages=8,codec=int8")
+    assert per["interactive"] == TenantQuota(None, 4, None)
+    assert per["batch"] == TenantQuota(8, None, "int8")
+    assert default == TenantQuota()
+    with pytest.raises(ValueError):
+        parse_quota_spec("pages")
+    with pytest.raises(ValueError):
+        parse_quota_spec("rows=4")
+    with pytest.raises(KeyError):
+        parse_quota_spec("codec=zstd")      # unknown codec fails fast
+
+
+def test_quota_manager_ledger():
+    q = QuotaManager({"a": TenantQuota(max_pages=4, max_sessions=2)})
+    assert q.can_admit("a", 3) and q.admissible("a", 4)
+    assert not q.admissible("a", 5)
+    q.admit("a", 3)
+    assert not q.can_admit("a", 2)          # page budget
+    q.admit("a", 1)
+    assert not q.can_admit("a", 0)          # session cap
+    q.release("a", 3)
+    q.release("a", 1)
+    assert q.usage()["a"] == {"sessions": 0, "pages": 0}
+    assert q.can_admit("other", 10**6)      # default quota is unlimited
+    assert "quota[" in q.describe()

@@ -272,10 +272,13 @@ def test_priority_scheduler_preempts(model_and_params):
 
 def test_scheduler_registry():
     from repro.serve.scheduler import build_scheduler, registered_schedulers
-    assert set(registered_schedulers()) == {"fcfs", "priority", "fair"}
+    assert set(registered_schedulers()) == {"fcfs", "priority", "fair",
+                                            "srpt", "deadline"}
     assert build_scheduler("fair", quantum=4).quantum == 4
+    assert build_scheduler("srpt").name == "srpt"
+    assert build_scheduler("deadline").misses == 0
     with pytest.raises(KeyError):
-        build_scheduler("srpt")
+        build_scheduler("lifo")
 
 
 def test_session_cancel_running_and_paused(model_and_params):

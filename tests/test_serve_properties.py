@@ -1,0 +1,73 @@
+"""Property-based serving invariants (hypothesis).
+
+Random submit/requeue/cancel/retire traces against every scheduler policy
+and random alloc/spill/fetch/free traces against the PageTable, reusing
+the trace drivers from tests/test_paging.py (which also runs them on
+seeded traces so the machinery is covered without hypothesis).
+
+Invariants (the ISSUE's list):
+* no session is lost or double-scheduled, for every policy;
+* FCFS preserves arrival order of fresh (never-preempted) sessions;
+* SRPT never runs a longer job while a shorter one waits;
+* EDF never idles past an unmet deadline and always picks the earliest;
+* pages are never aliased across sessions, the free list never
+  double-frees, and metered transfers equal page_size x transfer count.
+
+CI pins determinism via the "ci" profile registered in conftest.py
+(HYPOTHESIS_PROFILE=ci: derandomized, fixed example budget).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_paging import (SCHED_NAMES, run_scheduler_trace,  # noqa: E402
+                         run_table_trace)
+
+# ---------------------------------------------------------------------------
+# PageTable traces
+table_ops = st.lists(
+    st.tuples(st.sampled_from(["new", "grow", "pause", "resume", "free"]),
+              st.integers(min_value=0, max_value=6)),
+    max_size=200)
+
+
+@given(ops=table_ops,
+       num_pages=st.integers(min_value=1, max_value=10),
+       page_size=st.sampled_from([1, 4, 16]))
+@settings(max_examples=120, deadline=None)
+def test_page_table_traces(ops, num_pages, page_size):
+    table, state = run_table_trace(ops, num_pages=num_pages,
+                                   page_size=page_size)
+    # drain every survivor: the pool must come back whole
+    for sid in list(state):
+        for payload in table.free_session(sid):
+            assert payload[0] == "page"
+        table.check()
+    assert table.num_free() + sum(
+        1 for s in table.sessions() for e in table.entries(s)
+        if e.resident) == table.num_pages
+
+
+# ---------------------------------------------------------------------------
+# scheduler traces
+sched_ops = st.lists(
+    st.tuples(st.sampled_from(["submit", "admit", "tick", "pause",
+                               "retire", "cancel"]),
+              st.integers(min_value=0, max_value=7),
+              st.one_of(st.none(), st.integers(min_value=1, max_value=40))),
+    max_size=150)
+
+
+@pytest.mark.parametrize("name", SCHED_NAMES)
+@given(ops=sched_ops, slots=st.integers(min_value=1, max_value=3))
+@settings(max_examples=60, deadline=None)
+def test_scheduler_traces(name, ops, slots):
+    run_scheduler_trace(name, ops, slots=slots)
+
+
+@given(ops=sched_ops)
+@settings(max_examples=40, deadline=None)
+def test_fair_scheduler_traces_with_quantum(ops):
+    run_scheduler_trace("fair", ops, quantum=2)
