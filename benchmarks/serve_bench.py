@@ -38,19 +38,32 @@ def _build(arch: str = "smollm-135m"):
 
 def _drive(model, params, cfg, *, scheduler, n_requests: int,
            new_tokens: int, batch: int, max_len: int,
-           **engine_kwargs) -> Tuple[float, int]:
+           engine=None, on_measure_start=None,
+           **engine_kwargs) -> Tuple[float, int, List[float]]:
+    """Run one measured batch through an Engine (or a ready DisaggPair).
+
+    Returns ``(wall seconds, tokens decoded, per-request TTFT seconds)``
+    — TTFT measured from the measured batch's submission to each
+    request's first streamed token.  ``on_measure_start`` fires after the
+    warm-up batch drains, so callers can snapshot cumulative counters
+    (e.g. transfer-queue pages) and report the measured batch alone.
+    """
     from repro.serve.engine import Engine, Request
 
-    eng = Engine(model, params, batch=batch, max_len=max_len,
-                 scheduler=scheduler, **engine_kwargs)
+    eng = engine if engine is not None else Engine(
+        model, params, batch=batch, max_len=max_len,
+        scheduler=scheduler, **engine_kwargs)
     rng = np.random.default_rng(0)
+    first_token = {}
 
     def submit(uid, toks):
-        return eng.submit(Request(
-            uid=uid,
-            prompt=rng.integers(0, cfg.vocab_size, size=(8,)).astype(
-                np.int32),
-            max_new_tokens=toks))
+        return eng.submit(
+            Request(uid=uid,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=(8,)).astype(np.int32),
+                    max_new_tokens=toks),
+            on_token=lambda s, t: first_token.setdefault(
+                s.uid, time.perf_counter()))
 
     # warm THIS engine's jitted paths (each storage model compiles its own
     # decode/prefill graphs), then time the measured batch — the row is
@@ -60,11 +73,16 @@ def _drive(model, params, cfg, *, scheduler, n_requests: int,
     for i in range(batch + 1):
         submit(1000 + i, 6)
     eng.run()
+    first_token.clear()
+    if on_measure_start is not None:
+        on_measure_start()
     sessions = [submit(i, new_tokens) for i in range(n_requests)]
     t0 = time.perf_counter()
     eng.run()
     dt = time.perf_counter() - t0
-    return dt, sum(len(s.result()) for s in sessions)
+    ttft = [first_token[s.uid] - t0 for s in sessions
+            if s.uid in first_token]
+    return dt, sum(len(s.result()) for s in sessions), ttft
 
 
 def serve_bench(n_requests: int = 6, batch: int = 2, max_len: int = 64,
@@ -97,12 +115,78 @@ def serve_bench(n_requests: int = 6, batch: int = 2, max_len: int = 64,
         ("srpt_paged", "srpt", 24, {"page_size": page_size}),
     )
     for name, sched, new_tokens, kwargs in cases:
-        dt, total = _drive(model, params, cfg, scheduler=sched,
-                           n_requests=n_requests, new_tokens=new_tokens,
-                           batch=batch, max_len=max_len, **kwargs)
+        dt, total, ttft = _drive(model, params, cfg, scheduler=sched,
+                                 n_requests=n_requests,
+                                 new_tokens=new_tokens,
+                                 batch=batch, max_len=max_len, **kwargs)
         rows.append((f"serve.{name}_{n_requests}req.tok_per_s",
                      round(total / dt, 1),
                      f"{total} tokens, batch={batch} (CPU wall-clock)"))
+        if name == "fcfs_paged":
+            # this run IS the colocated twin of the disagg rows below —
+            # emit its TTFT instead of measuring the same config twice
+            rows.append((f"serve.{name}_{n_requests}req.ttft_ms",
+                         round(1e3 * sum(ttft) / max(len(ttft), 1), 1),
+                         "mean time-to-first-token (colocated)"))
+    rows += disagg_bench(n_requests=n_requests, batch=batch, max_len=max_len,
+                         page_size=page_size, prebuilt=(cfg, model, params),
+                         colocated=False)
+    return rows
+
+
+def disagg_bench(n_requests: int = 6, batch: int = 2, max_len: int = 64,
+                 page_size: int = 16, new_tokens: int = 24,
+                 prebuilt=None, colocated: bool = True) -> List[Row]:
+    """Disaggregated vs colocated: steady-state tok/s AND time-to-first-
+    token (the number the split is bought for).
+
+    Both drivers serve the same paged storage model; the disagg rows run
+    the in-process loopback pair (serve/disagg.py) — prompts prefill on a
+    dedicated prefill-role engine and never queue behind decode slots, so
+    under a slot-saturating burst the mean TTFT drops even though the
+    lockstep loop adds a one-step handoff latency.  Transfer-tier cost is
+    honest: every shipped page moves through the tier (metered bytes, CPU
+    dispatch per page), which bounds the tok/s delta.
+
+    ``colocated=False`` skips the colocated twin (serve_bench already
+    measured that exact config as its ``fcfs_paged`` case).
+    """
+    from repro.serve.disagg import build_disagg
+
+    cfg, model, params = prebuilt if prebuilt else _build()
+    rows: List[Row] = []
+
+    def ms(vals):
+        return round(1e3 * sum(vals) / max(len(vals), 1), 1)
+
+    if colocated:
+        dt, total, ttft = _drive(model, params, cfg, scheduler="fcfs",
+                                 n_requests=n_requests,
+                                 new_tokens=new_tokens,
+                                 batch=batch, max_len=max_len,
+                                 page_size=page_size)
+        rows.append((f"serve.colocated_paged_{n_requests}req.tok_per_s",
+                     round(total / dt, 1),
+                     f"{total} tokens, batch={batch} (CPU wall-clock)"))
+        rows.append((f"serve.colocated_paged_{n_requests}req.ttft_ms",
+                     ms(ttft), "mean time-to-first-token (colocated)"))
+
+    pair = build_disagg(model, params, batch=batch, max_len=max_len,
+                        page_size=page_size, transfer="host", spill="host")
+    warm_pages = []
+    dt, total, ttft = _drive(
+        model, params, cfg, scheduler="fcfs",
+        n_requests=n_requests, new_tokens=new_tokens,
+        batch=batch, max_len=max_len, engine=pair,
+        on_measure_start=lambda: warm_pages.append(
+            pair.transfer.shipped_pages))
+    shipped = pair.transfer.shipped_pages - warm_pages[0]
+    rows.append((f"serve.disagg_{n_requests}req.tok_per_s",
+                 round(total / dt, 1),
+                 f"{total} tokens, batch={batch}, "
+                 f"{shipped} pages shipped (CPU wall-clock)"))
+    rows.append((f"serve.disagg_{n_requests}req.ttft_ms",
+                 ms(ttft), "mean time-to-first-token (dedicated prefill)"))
     return rows
 
 

@@ -69,6 +69,32 @@ def int8_decompress(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.A
 
 
 # ---------------------------------------------------------------------------
+# block-sparse stash compression: int8 quantization + magnitude pruning.
+# Entries below absmax/BLOCKSPARSE_TAU become EXACT zeros, so the payload
+# is dense-shaped but zero-run-rich — what a wire-side run-length/entropy
+# stage (the memory node's compression ASIC slot, §III-A) feeds on.
+# Decode needs no sparsity metadata: zeros dequantize to zero.
+# Must equal kernels/offload_pack.BLOCKSPARSE_TAU (mirrored here, like
+# FP8_MAX/INT8_MAX, to keep pallas out of core's import path; the codec
+# tests pin the two constants together).
+BLOCKSPARSE_TAU = 32.0
+
+
+def blocksparse_compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x -> (magnitude-pruned int8 payload, fp32 scale)."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(absmax / INT8_MAX, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX)
+    keep = jnp.abs(xf) >= absmax / BLOCKSPARSE_TAU
+    return jnp.where(keep, q, 0.0).astype(jnp.int8), scale
+
+
+#: pruned zeros dequantize to zero — decode IS the int8 decode
+blocksparse_decompress = int8_decompress
+
+
+# ---------------------------------------------------------------------------
 # int8 error-feedback gradient compression
 def int8_ef_quantize(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Quantize gradient+carried error to int8 with a per-tensor scale.
@@ -152,6 +178,12 @@ def _register_builtin_codecs() -> None:
                          pack=kp.int8_pack, unpack=kp.int8_unpack,
                          pack_ref=kref.int8_pack_ref,
                          unpack_ref=kref.int8_unpack_ref))
+    register_codec(Codec("blocksparse", 0.5,
+                         blocksparse_compress, blocksparse_decompress,
+                         pack=kp.blocksparse_pack,
+                         unpack=kp.blocksparse_unpack,
+                         pack_ref=kref.blocksparse_pack_ref,
+                         unpack_ref=kref.blocksparse_unpack_ref))
 
 
 _register_builtin_codecs()

@@ -179,6 +179,21 @@ class MemoryRuntime:
             self._meter(direction, x, hints)
         return x
 
+    def discard(self, payload) -> None:
+        """Release a parked payload's capacity-contract charge.
+
+        Serving paths (cold-KV slots, spilled pages, disaggregated KV
+        handoffs) park payloads in the tier and drop them out of band; a
+        :class:`~repro.core.tiers.SpillTier` leg in the stack gets its
+        budget back here.  No-op for tiers without a byte ledger."""
+        from repro.core.tiers import SpillTier
+        tier = self.tier
+        while tier is not None:
+            if isinstance(tier, SpillTier):
+                tier.discard(payload)
+                return
+            tier = getattr(tier, "inner", None)
+
     # ------------------------------------------------------------------
     # the one wrapper
     def wrap_layer(self, layer_fn: Callable,

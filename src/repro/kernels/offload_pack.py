@@ -18,6 +18,7 @@ from jax.experimental import pallas as pl
 
 FP8_MAX = 448.0
 INT8_MAX = 127.0
+BLOCKSPARSE_TAU = 32.0   # prune |x| < block_absmax / TAU to exact zero
 
 
 def _pack_kernel(x_ref, q_ref, s_ref):
@@ -34,6 +35,16 @@ def _int8_pack_kernel(x_ref, q_ref, s_ref):
     scale = jnp.maximum(absmax / INT8_MAX, 1e-30)
     q_ref[...] = jnp.clip(jnp.round(x / scale),
                           -INT8_MAX, INT8_MAX).astype(q_ref.dtype)
+    s_ref[0, 0] = scale
+
+
+def _blocksparse_pack_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax / INT8_MAX, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX)
+    keep = jnp.abs(x) >= absmax / BLOCKSPARSE_TAU
+    q_ref[...] = jnp.where(keep, q, 0.0).astype(q_ref.dtype)
     s_ref[0, 0] = scale
 
 
@@ -113,6 +124,41 @@ def int8_pack(x: jax.Array, *, block_rows: int = 128,
     return q, s[:, 0]
 
 
-#: dequantize-by-scale has no dtype-specific logic — the int8 unpack twin
-#: IS the fp8 one (kernels/ref.py delegates identically)
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def blocksparse_pack(x: jax.Array, *, block_rows: int = 128,
+                     interpret: bool = False
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """x: (R, C) -> (q: int8 (R, C) with small entries pruned, scales f32).
+
+    The block-sparse codec twin: per-row-block int8 quantization (as
+    :func:`int8_pack`) plus in-block magnitude pruning — entries below
+    ``absmax / BLOCKSPARSE_TAU`` become *exact* zeros, so a run-length /
+    entropy stage on the wire (the memory node's compression ASIC,
+    §III-A) sees dense zero runs.  Decode needs no sparsity metadata: the
+    zeros dequantize to zero through the shared unpack twin.
+    """
+    R, C = x.shape
+    assert R % block_rows == 0, (R, block_rows)
+    nb = R // block_rows
+    q, s = pl.pallas_call(
+        _blocksparse_pack_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s[:, 0]
+
+
+#: dequantize-by-scale has no dtype-specific logic — the int8 and
+#: blocksparse unpack twins ARE the fp8 one (kernels/ref.py delegates
+#: identically; pruned zeros dequantize to zero by construction)
 int8_unpack = fp8_unpack
+blocksparse_unpack = fp8_unpack

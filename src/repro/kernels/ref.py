@@ -103,3 +103,26 @@ def int8_pack_ref(x: jax.Array, block_rows: int
 def int8_unpack_ref(q: jax.Array, scale: jax.Array, block_rows: int,
                     dtype=jnp.bfloat16) -> jax.Array:
     return fp8_unpack_ref(q, scale, block_rows, dtype)
+
+
+def blocksparse_pack_ref(x: jax.Array, block_rows: int
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise int8 quantize + in-block magnitude pruning: entries with
+    |x| < block_absmax / BLOCKSPARSE_TAU become exact zeros (the
+    block-sparse stash codec; offload_pack.blocksparse_pack is the Pallas
+    twin and owns the threshold constant)."""
+    from repro.kernels.offload_pack import BLOCKSPARSE_TAU
+    R, C = x.shape
+    nb = R // block_rows
+    xb = x.reshape(nb, block_rows, C).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xb), axis=(1, 2))
+    scale = jnp.maximum(absmax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(xb / scale[:, None, None]), -127.0, 127.0)
+    keep = jnp.abs(xb) >= (absmax / BLOCKSPARSE_TAU)[:, None, None]
+    q = jnp.where(keep, q, 0.0).astype(jnp.int8)
+    return q.reshape(R, C), scale
+
+
+def blocksparse_unpack_ref(q: jax.Array, scale: jax.Array, block_rows: int,
+                           dtype=jnp.bfloat16) -> jax.Array:
+    return fp8_unpack_ref(q, scale, block_rows, dtype)

@@ -16,6 +16,16 @@ serve/quota.parse_quota_spec for the grammar); ``--tenants N`` spreads the
 synthetic requests over N tenant names.  The run prints the spill/page
 traffic report, per-tenant usage and (for ``--scheduler deadline``, with
 ``--deadline-slack`` steps of slack) the deadline-miss accounting.
+
+``--role`` disaggregates prefill from decode (serve/disagg.py):
+``both`` runs the two-engine loopback in this process — prompts prefill
+on a prefill-role engine, KV pages ship through the ``--transfer-tier``
+(metered, printed as the transfer report with time-to-first-token), and
+a decode-role engine adopts them; ``prefill`` runs the prefill worker
+alone (publishes into a local queue and reports what shipped — useful to
+price the transfer path); ``decode`` needs a peer feeding the queue, so
+standalone it is rejected with a pointer at ``--role both``.  Omit
+``--role`` for the classic colocated engine.
 """
 from __future__ import annotations
 
@@ -28,8 +38,10 @@ import numpy as np
 
 from repro.configs import MemoryPlan, RunConfig, TrainConfig, get_arch
 from repro.configs.base import MeshPlan, ShapeConfig
+from repro.core.runtime import MemoryRuntime
 from repro.launch.mesh import make_host_mesh, make_production_mesh, plan_for
 from repro.models.model import build_model
+from repro.serve.disagg import TransferQueue, build_disagg
 from repro.serve.engine import Engine, Request
 from repro.serve.quota import quota_from_cli
 from repro.serve.scheduler import build_scheduler, registered_schedulers
@@ -72,8 +84,23 @@ def main() -> None:
     ap.add_argument("--deadline-slack", type=int, default=None,
                     help="per-request deadline = slack + (i+1)*new-tokens "
                          "engine steps (with --scheduler deadline)")
+    ap.add_argument("--role", default=None,
+                    choices=("prefill", "decode", "both"),
+                    help="disaggregate prefill/decode (both: in-process "
+                         "two-engine loopback; default: colocated engine)")
+    ap.add_argument("--transfer-tier", default="spill",
+                    help="tier policy carrying KV handoffs between roles "
+                         "(spill: pooled HBM->host; host: PCIe DRAM)")
+    ap.add_argument("--transfer-depth", type=int, default=None,
+                    help="max handoffs parked in the transfer queue "
+                         "(prefill admission stalls past it)")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
+    if args.role == "decode":
+        ap.error("--role decode needs a peer feeding the transfer queue; "
+                 "use --role both for the in-process loopback")
+    if args.role is not None and not args.page_size:
+        ap.error("--role ships page-shaped KV: pass --page-size")
     logging.basicConfig(level=logging.INFO)
 
     cfg = get_arch(args.arch)
@@ -98,12 +125,35 @@ def main() -> None:
 
     sched = (build_scheduler("fair", quantum=args.quantum)
              if args.scheduler == "fair" else build_scheduler(args.scheduler))
-    eng = Engine(model, params, batch=args.batch, max_len=args.max_len,
-                 temperature=args.temperature, scheduler=sched,
-                 spill=args.spill, page_size=args.page_size,
-                 pages=args.pages, quota=quota)
+    if args.role == "both":
+        eng = build_disagg(model, params, batch=args.batch,
+                           max_len=args.max_len, page_size=args.page_size,
+                           pages=args.pages, transfer=args.transfer_tier,
+                           max_depth=args.transfer_depth,
+                           scheduler=args.scheduler,
+                           decode_scheduler=sched, spill=args.spill,
+                           quota=quota, temperature=args.temperature)
+    elif args.role == "prefill":
+        runtime = MemoryRuntime(
+            model.plan,
+            MemoryPlan(policy=args.transfer_tier,
+                       placement=model.memory.placement),
+            model.mesh, planner=model.planner)
+        eng = Engine(model, params, batch=args.batch, max_len=args.max_len,
+                     temperature=args.temperature, scheduler=sched,
+                     spill=None, page_size=args.page_size, quota=quota,
+                     role="prefill",
+                     transfer=TransferQueue(runtime,
+                                            max_depth=args.transfer_depth))
+    else:
+        eng = Engine(model, params, batch=args.batch, max_len=args.max_len,
+                     temperature=args.temperature, scheduler=sched,
+                     spill=args.spill, page_size=args.page_size,
+                     pages=args.pages, quota=quota)
     print(eng.describe())
     rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    first_token_at = {}
     sessions = []
     for i in range(args.requests):
         deadline = (args.deadline_slack + (i + 1) * args.new_tokens
@@ -115,17 +165,36 @@ def main() -> None:
             max_new_tokens=args.new_tokens + i * args.stagger,
             priority=i % 3 if args.scheduler == "priority" else 0,
             tenant=f"t{i % max(1, args.tenants)}",
-            deadline=deadline)))
-    t0 = time.perf_counter()
+            deadline=deadline),
+            on_token=lambda s, t: first_token_at.setdefault(
+                s.uid, time.perf_counter())))
     done = eng.run()
     dt = time.perf_counter() - t0
     total_new = sum(len(s.result()) for s in sessions)
     print(f"served {len(done)} requests, {total_new} tokens "
           f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+    if first_token_at:
+        ttft = [first_token_at[s.uid] - t0 for s in sessions
+                if s.uid in first_token_at]
+        print(f"ttft: mean {1e3 * sum(ttft) / len(ttft):.1f}ms, "
+              f"max {1e3 * max(ttft):.1f}ms")
     for s in sessions[:3]:
         print(f"  req {s.uid}: {s.finish_reason}, "
               f"preempted {s.preemptions}x, {s.result()[:8]}...")
-    report = eng.traffic_report()
+    if args.role in ("both", "prefill"):
+        trep = eng.transfer.traffic_report()
+        tq = trep["transfer"]
+        from repro.core.runtime import fmt_bytes
+        pub = trep.get("kv_publish", {"wire_bytes": 0.0, "calls": 0})
+        print(f"transfer[{eng.transfer.runtime.tier.describe()}]: "
+              f"{tq['shipped_pages']} pages shipped "
+              f"({fmt_bytes(pub['wire_bytes'])}), "
+              f"{tq['requeued']} requeued, depth {tq['depth']}")
+        if args.role == "prefill":
+            return
+        report = eng.decode.traffic_report()
+    else:
+        report = eng.traffic_report()
     if report.get("kv_stash"):
         from repro.core.runtime import fmt_bytes
         fetch = report.get("kv_fetch", {"wire_bytes": 0.0, "calls": 0})
@@ -138,11 +207,13 @@ def main() -> None:
         p = report["pages"]
         print(f"pages[{p['num_pages']}x{p['page_size']}]: "
               f"{p['evictions']} evicted, {p['refetches']} refetched, "
-              f"{p['readmits_free']} readmitted copy-free")
+              f"{p['readmits_free']} readmitted copy-free, "
+              f"{p['adoptions']} adopted")
     if quota is not None:
         print("tenants:", {t: u for t, u in eng.quota_report().items()})
-    if hasattr(eng.scheduler, "miss_report"):
-        print("deadlines:", eng.scheduler.miss_report())
+    sched_obj = eng.decode.scheduler if args.role == "both" else eng.scheduler
+    if hasattr(sched_obj, "miss_report"):
+        print("deadlines:", sched_obj.miss_report())
 
 
 if __name__ == "__main__":

@@ -640,6 +640,36 @@ def scatter_one_page(pool: Params, caches: Params, target: jax.Array,
     return jax.tree.map(one, pool, paged)
 
 
+def slot_pages(one_cache: Params, page_size: int, num_pages: int
+               ) -> Tuple[List[Params], Params]:
+    """Chop a single-slot cache into page-shaped KV chunks (prefill handoff).
+
+    A prefill-only worker (serve/disagg.py) computes a prompt's KV in a
+    plain contiguous slot — no pool, no page table — and ships the result
+    to a decode runtime that *is* paged.  This helper is the boundary: the
+    slot's paged leaves (``(G, 1, S, K, hd)``) become ``num_pages`` page
+    trees shaped exactly like :func:`page_slice` output (``(G, page, K,
+    hd)``), so the decode side lands them with :func:`page_insert`
+    unchanged.  Returns ``(pages, rest)`` where ``rest`` holds the
+    slot-shaped leaves (SSM / cross-attention state) that ship whole.
+    """
+    if page_size < 1 or num_pages < 1:
+        raise ValueError(f"bad page chunking: {num_pages}x{page_size}")
+    paged, rest = split_paged(one_cache)
+    leaves = jax.tree_util.tree_leaves(paged)
+    if leaves and num_pages * page_size > leaves[0].shape[2]:
+        raise ValueError(f"{num_pages} pages of {page_size} rows exceed the "
+                         f"slot's {leaves[0].shape[2]} cache rows")
+    pages = [
+        jax.tree.map(
+            lambda c: jax.lax.dynamic_slice_in_dim(
+                c, p * page_size, page_size, axis=2)[:, 0],
+            paged)
+        for p in range(num_pages)
+    ]
+    return pages, rest
+
+
 def page_slice(pool: Params, pid) -> Params:
     """Extract one page (all groups) from the pool — the spill unit."""
     return jax.tree.map(

@@ -1,7 +1,10 @@
 """Serving: Scheduler / KVCacheManager / Session behind the Engine facade,
-over pooled (optionally paged) KV caches (DESIGN.md §6)."""
+over pooled (optionally paged) KV caches, colocated or disaggregated
+across prefill/decode roles (DESIGN.md §6)."""
 from repro.serve.cache_manager import (KVCacheManager,      # noqa: F401
                                        PagedKVCacheManager)
+from repro.serve.disagg import (DisaggPair, KVHandoff,      # noqa: F401
+                                TransferQueue, build_disagg)
 from repro.serve.engine import Engine, Request              # noqa: F401
 from repro.serve.paging import PageError, PageTable         # noqa: F401
 from repro.serve.quota import (QuotaManager, TenantQuota,   # noqa: F401

@@ -47,11 +47,11 @@ from repro.configs.base import MemoryPlan
 from repro.core.compress import (Codec, decode_tensor, encode_tensor,
                                  get_codec)
 from repro.core.runtime import MemoryRuntime, fmt_bytes
-from repro.core.tiers import SpillTier, TransferHints
+from repro.core.tiers import TransferHints
 from repro.models import transformer as tfm
 from repro.serve.kv_cache import (DEFAULT_HBM_FRAC, DEFAULT_MAX_BATCH,
                                   DEFAULT_MAX_LEN, derive_cache_shape)
-from repro.serve.paging import PageTable
+from repro.serve.paging import PageError, PageTable
 from repro.serve.session import Session, SessionState
 
 log = logging.getLogger(__name__)
@@ -186,6 +186,15 @@ class KVCacheManager:
         return self.spill_runtime is not None
 
     # ------------------------------------------------------------------
+    # disaggregated handoff (prefill role: ship a finished prompt's KV)
+    def export_slot(self, sess: Session):
+        """Copy one resident session's single-slot cache tree out of the
+        batched storage — the prefill-role handoff unit, chunked into
+        page-shaped trees by :func:`repro.models.transformer.slot_pages`."""
+        assert sess.slot is not None, sess
+        return self._slot_get(self.caches, sess.slot)
+
+    # ------------------------------------------------------------------
     # spill / resume (cold slots through the secondary tier)
     def pause(self, sess: Session) -> None:
         """Preempt: move the session's KV out of HBM into the spill tier."""
@@ -250,12 +259,8 @@ class KVCacheManager:
 
     def _discard(self, payload) -> None:
         """Return capacity-contract budget to a SpillTier leg, if any."""
-        tier = self.spill_runtime.tier if self.spill_runtime else None
-        while tier is not None:
-            if isinstance(tier, SpillTier):
-                tier.discard(payload)
-                return
-            tier = getattr(tier, "inner", None)
+        if self.spill_runtime is not None:
+            self.spill_runtime.discard(payload)
 
     def spilled_uids(self) -> List[int]:
         return sorted(self._spilled)
@@ -479,6 +484,36 @@ class PagedKVCacheManager(KVCacheManager):
         self.table.note_resumed(uid)
         self.bind(slot, sess, sess.length)
 
+    # ------------------------------------------------------------------
+    # disaggregated adoption (decode role: take ownership of shipped pages)
+    def adopt(self, slot: int, sess: Session, handoff, queue) -> None:
+        """Install a transferred session into ``slot`` (cross-role handoff).
+
+        Ownership passes whole: the decode table *claims* fresh frames
+        (never aliasing an existing owner — the shipped pages become the
+        only copy this role serves from), the transfer queue's payloads
+        are fetched into them, slot-shaped leaves merge into the slot row,
+        and the session binds at its prefill length.  A
+        :class:`~repro.serve.paging.PageError` (pool too hot, nothing
+        cold to evict) rolls the claim back BEFORE any page bytes are
+        fetched — backpressure leaves the pages parked in the transfer
+        tier, not re-prefilled."""
+        uid = sess.uid
+        self._sessions[uid] = sess
+        self._codec_by_uid[uid] = self.codec_for(sess.tenant)
+        try:
+            pids = self.table.claim(uid, handoff.num_pages, self._evict_cb)
+        except PageError:
+            self._sessions.pop(uid, None)
+            self._codec_by_uid.pop(uid, None)
+            raise
+        for pid, page in zip(pids, queue.fetch_pages(handoff)):
+            self.pool = tfm.page_insert(self.pool, page, pid)
+        slot_one = queue.fetch_slot_leaves(handoff)
+        if slot_one is not None:
+            self.slot_tree = self._slot_put(self.slot_tree, slot_one, slot)
+        self.bind(slot, sess, handoff.length)
+
     def release(self, sess: Session) -> None:
         super().release(sess)          # slot + parked slot-shaped leaves
         self._pmap_cache = None
@@ -511,6 +546,7 @@ class PagedKVCacheManager(KVCacheManager):
             "evictions": self.table.evictions,
             "refetches": self.table.refetches,
             "readmits_free": self.table.readmits_free,
+            "adoptions": self.table.adoptions,
         }
         return report
 

@@ -27,6 +27,18 @@ session is charged its worst-case page reservation against its tenant's
 transiently over-budget tenants are deferred (other tenants admit past
 them), impossible requests are rejected with finish reason ``"quota"``.
 
+**Roles** (``role=``, serve/disagg.py): the facade serves three ways.
+``"both"`` — the default colocated engine, prefill and decode in one
+lifecycle.  ``"prefill"`` — admission + prompt prefill + first token
+only; each freshly prefilled session's KV is chopped into page-shaped
+chunks and published to the ``transfer`` queue instead of decoding
+(admission pauses while the queue is at capacity).  ``"decode"`` — no
+fresh submissions; sessions arrive as page handoffs adopted from the
+``transfer`` queue (backpressure requeues them, pages parked in the
+transfer tier) and then decode exactly as colocated.  The token stream
+is bit-identical across ``both`` / prefill→decode for greedy sampling —
+the cross-role trace-equivalence suite pins that.
+
 Back-compat: the legacy ``Engine(model, params, batch, max_len)``
 constructor still works (sizes are simply explicit instead of derived),
 and ``Request.out_tokens`` stays populated — it aliases the session's
@@ -45,7 +57,7 @@ import numpy as np
 from repro.models import transformer as tfm
 from repro.models.model import Model
 from repro.serve.cache_manager import KVCacheManager, PagedKVCacheManager
-from repro.serve.paging import PageError
+from repro.serve.paging import PageError, pages_for
 from repro.serve.quota import QuotaManager, TenantQuota
 from repro.serve.scheduler import Scheduler, build_scheduler
 from repro.serve.session import (FINISH_CACHE_FULL, FINISH_EOS,
@@ -101,11 +113,25 @@ class Engine:
                  codec_kernel: bool = False,
                  quota: Union[QuotaManager, TenantQuota,
                               Dict[str, TenantQuota], None] = None,
+                 role: str = "both",
+                 transfer: Optional[Any] = None,
                  **cache_kwargs):
+        if role not in ("both", "prefill", "decode"):
+            raise ValueError(f"role must be both/prefill/decode: {role!r}")
+        if role != "both":
+            if transfer is None:
+                raise ValueError(f"role={role!r} needs a TransferQueue "
+                                 "(serve/disagg.py) to ship KV through")
+            if not page_size:
+                raise ValueError(f"role={role!r} ships page-shaped KV: "
+                                 "pass page_size")
         self.model = model
         self.params = params
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
+        self.role = role
+        self.transfer = transfer
+        self._page_size = int(page_size) if page_size else None
 
         self.scheduler: Scheduler = (build_scheduler(scheduler)
                                      if isinstance(scheduler, str)
@@ -117,15 +143,22 @@ class Engine:
         else:
             self.quota = QuotaManager(dict(quota))
 
-        if page_size:
+        if page_size and role != "prefill":
             codec_for = self.quota.codec_for if self.quota else None
             self.cache: KVCacheManager = PagedKVCacheManager(
                 model, batch, max_len, spill=spill, page_size=page_size,
                 pages=pages, codec_for=codec_for,
                 codec_kernel=codec_kernel, **cache_kwargs)
         else:
+            # the prefill role computes in plain contiguous slots (no pool
+            # indirection on its hot path); page_size only shapes the
+            # slot_pages chunking of the published handoff
             self.cache = KVCacheManager(model, batch, max_len, spill=spill,
                                         **cache_kwargs)
+        if role == "prefill" and self.cache.max_len % self._page_size:
+            raise ValueError(
+                f"page_size {self._page_size} must divide max_len "
+                f"{self.cache.max_len} (handoff pages tile the slot)")
         self.batch, self.max_len = self.cache.batch, self.cache.max_len
         self.kv_report = self.cache.report
         if not self.kv_report["fits"]:
@@ -140,7 +173,6 @@ class Engine:
         self.finished: List[Request] = []      # legacy result list
         self._seq = 0
         self._by_uid: Dict[int, Session] = {}
-        self._quota_charged: Dict[int, tuple] = {}
         self._build_compute()
 
     # ------------------------------------------------------------------
@@ -149,12 +181,23 @@ class Engine:
         model = self.model
         self._decode = jax.jit(model.decode_step)
 
+        def fresh_slot(caches):
+            """Zeroed single-slot cache for a FRESH admission's prefill.
+
+            A reused slot still holds its previous occupant's state.  KV
+            rows are write-before-read (masked by cache_index) so stale
+            rows are harmless, but recurrent SSM/conv state is READ at
+            the start of the scan — prefilling from the stale slot leaks
+            the last session's state into the new one's stream."""
+            return jax.tree.map(
+                lambda c: jnp.zeros((c.shape[0], 1) + c.shape[2:], c.dtype),
+                caches)
+
         def prefill_one(params, caches, tokens, positions, slot):
             """Prefill one sequence into slot ``slot`` of the batched cache."""
             ctx = model.ctx("prefill")
-            one_cache = tfm.slot_cache(caches, slot)
             h, new_cache = tfm.forward_serve(
-                params, ctx, tokens, positions, one_cache,
+                params, ctx, tokens, positions, fresh_slot(caches),
                 cache_index=jnp.zeros((), jnp.int32))
             logits = tfm.unembed(params, ctx, h[:, -1:, :])[:, 0, :]
             caches = tfm.merge_slot_cache(caches, new_cache, slot)
@@ -188,9 +231,10 @@ class Engine:
                           positions, slot, mask):
             ctx = model.ctx("prefill")
             view = tfm.gather_pages(pool, slot_tree, page_map)
-            one = tfm.slot_cache(view, slot)
+            # fresh_slot, not slot_cache: see prefill_one — a fresh
+            # admission must never read the slot's previous recurrent state
             h, new_one = tfm.forward_serve(
-                params, ctx, tokens, positions, one,
+                params, ctx, tokens, positions, fresh_slot(view),
                 cache_index=jnp.zeros((), jnp.int32))
             logits = tfm.unembed(params, ctx, h[:, -1:, :])[:, 0, :]
             view = tfm.merge_slot_cache(view, new_one, slot)
@@ -209,6 +253,11 @@ class Engine:
     # ------------------------------------------------------------------
     def submit(self, req: Request, on_token=None) -> Session:
         """Queue a request; returns its :class:`Session` (token stream)."""
+        if self.role == "decode":
+            raise RuntimeError(
+                "a decode-role engine adopts sessions from the transfer "
+                "queue; submit prompts to the prefill engine (or the "
+                "DisaggPair facade)")
         sess = Session(request=req, seq=self._seq, on_token=on_token)
         self._seq += 1
         self.sessions.append(sess)
@@ -235,18 +284,30 @@ class Engine:
         self.finished.append(sess.request)
 
     def _release_quota(self, sess: Session) -> None:
-        charge = self._quota_charged.pop(sess.uid, None)
-        if charge is not None and self.quota is not None:
-            self.quota.release(*charge)
+        if self.quota is not None:
+            self.quota.release_uid(sess.uid)
+
+    def _session_pages(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case page reservation.  The prefill role has no page pool
+        of its own but must still charge the reservation its decode peer
+        will serve under — the shared-ledger charge follows the session."""
+        if self.role == "prefill":
+            rows = min(self.max_len, prompt_len + max_new)
+            return pages_for(rows, self._page_size)
+        return self.cache.session_pages(prompt_len, max_new)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One engine step: advance the scheduler clock, sweep
         cancellations, preempt, admit, back the next decode row with
         pages, then one decode step for every resident session.  Returns
-        the number of resident sessions."""
+        the number of resident sessions (prefill role: the number of
+        handoffs shipped this step)."""
         self.scheduler.on_step()
         self._sweep_cancelled()
+        if self.role == "prefill":
+            self._admit()
+            return self._publish_handoffs()
         self._preempt()
         self._admit()
         self._grow_pages()
@@ -310,24 +371,34 @@ class Engine:
         """Honour out-of-band Session.cancel(): free the slot of a
         cancelled resident session, drop the parked cache / pages
         (returning their SpillTier budget) of one cancelled while paused
-        or queued, and return the tenant-quota charge.  Queued
-        cancellations are dropped lazily by the scheduler's next_ready."""
+        or queued — or its in-flight handoff when cancelled in transit —
+        and return the tenant-quota charge.  Queued cancellations are
+        dropped lazily by the scheduler's next_ready."""
         for sess in self.cache.running():
             if sess.done:
                 self.cache.release(sess)
                 self.scheduler.on_retire(sess)
         self.cache.sweep_cancelled()
-        for uid in list(self._quota_charged):
-            sess = self._by_uid.get(uid)
-            if sess is not None and sess.done:
+        if self.transfer is not None:
+            for sess in self.transfer.sweep_cancelled():
                 self._release_quota(sess)
+        if self.quota is not None:
+            for uid in self.quota.charged_uids():
+                sess = self._by_uid.get(uid)
+                if sess is not None and sess.done:
+                    self.quota.release_uid(uid)
 
     def _preempt(self) -> None:
         """Pause running sessions when the scheduler ranks waiting work
-        above them (their KV goes cold: pages lazily, slots eagerly)."""
+        above them (their KV goes cold: pages lazily, slots eagerly).
+        On the decode role, handoffs parked in the transfer queue ARE
+        waiting work — without counting them, a quantum policy would
+        never turn slots over toward incoming adoptions."""
         if not self.cache.can_preempt:
             return
         want = len(self.scheduler.waiting())
+        if self.role == "decode":
+            want += self.transfer.depth()
         freed = self.cache.num_free()
         while freed < want:
             victim = self.scheduler.preempt_victim(self.cache.running())
@@ -346,12 +417,24 @@ class Engine:
         tenants) admit past them — unless their demand could never fit the
         tenant's quota, which rejects with finish reason ``"quota"``.
         Pool-pressure failures (every page hot) stop admission for this
-        step."""
+        step.  Role splits: the prefill role additionally gates on
+        transfer-queue headroom (queue pressure backs up into the prefill
+        scheduler, not the transfer tier), and the decode role admits
+        adoptions from the queue, then paused resumes from its scheduler
+        — the same order a colocated fair/priority policy yields, where
+        a requeued (paused) session waits behind fresh arrivals."""
+        if self.role == "decode":
+            self._admit_adoptions()
+            self._admit_resumes()
+            return
         deferred: List[Session] = []
         while True:
             slot = self.cache.free_slot()
             if slot is None:
                 break
+            if self.role == "prefill" and not self.transfer.has_room(
+                    pending=len(self.cache.running())):
+                break                   # decode-side backpressure
             sess = self.scheduler.next_ready()
             if sess is None:
                 break
@@ -369,7 +452,7 @@ class Engine:
                             sess.uid, len(prompt), self.max_len)
                 self._retire(sess, FINISH_REJECTED)
                 continue
-            pages_needed = self.cache.session_pages(
+            pages_needed = self._session_pages(
                 len(prompt), sess.request.max_new_tokens)
             if self.quota is not None:
                 if not self.quota.admissible(sess.tenant, pages_needed):
@@ -388,8 +471,7 @@ class Engine:
                 deferred.append(sess)
                 break                   # pool too hot; retry next step
             if self.quota is not None:
-                self.quota.admit(sess.tenant, pages_needed)
-                self._quota_charged[sess.uid] = (sess.tenant, pages_needed)
+                self.quota.charge(sess.uid, sess.tenant, pages_needed)
             toks = jnp.asarray(prompt, jnp.int32)[None, :]
             S = toks.shape[1]
             pos = self._positions(S, 0, 1)
@@ -413,6 +495,81 @@ class Engine:
                 self._retire(sess, FINISH_LENGTH)
         for sess in reversed(deferred):
             self.scheduler.requeue(sess)
+
+    # ------------------------------------------------------------------
+    # disaggregated roles: publish (prefill side) / adopt (decode side)
+    def _publish_handoffs(self) -> int:
+        """Ship every freshly prefilled resident session to the decode
+        side: chop the slot's KV into page-shaped chunks, stash them into
+        the transfer tier (metered as ``kv_publish``), free the local
+        slot, and keep the quota charge on the shared ledger — the
+        reservation follows the session."""
+        from repro.serve.disagg import KVHandoff
+        shipped = 0
+        for sess in list(self.cache.running()):
+            if sess.done:
+                continue
+            one = self.cache.export_slot(sess)
+            n_pages = pages_for(sess.length, self._page_size)
+            pages, rest = tfm.slot_pages(one, self._page_size, n_pages)
+            slot_one = rest if jax.tree_util.tree_leaves(rest) else None
+            self.cache.release(sess)
+            sess.state = SessionState.QUEUED    # in transit
+            self.transfer.publish(
+                KVHandoff(session=sess, length=sess.length), pages, slot_one)
+            self.scheduler.on_handoff(sess)
+            shipped += 1
+        return shipped
+
+    def _admit_resumes(self) -> None:
+        """Decode role: re-admit paused sessions in scheduler order (the
+        decode queue — fresh work arrives through the transfer queue)."""
+        deferred: List[Session] = []
+        while True:
+            slot = self.cache.free_slot()
+            if slot is None:
+                break
+            sess = self.scheduler.next_ready()
+            if sess is None:
+                break
+            assert sess.state is SessionState.PAUSED, \
+                f"decode scheduler only holds paused sessions: {sess}"
+            try:
+                self.cache.resume(sess, slot)
+            except PageError:
+                deferred.append(sess)
+                break                   # pool too hot; retry next step
+        for sess in reversed(deferred):
+            self.scheduler.requeue(sess)
+
+    def _admit_adoptions(self) -> None:
+        """Decode role: adopt transferred sessions into free slots.
+
+        Adoption claims fresh page frames first (evicting cold pages if
+        the spill tier allows) and only then fetches the shipped bytes; a
+        pool-too-hot failure therefore costs no transfer traffic — the
+        handoff requeues at the back of the queue and its pages stay
+        parked in the transfer tier, never re-prefilled."""
+        while True:
+            slot = self.cache.free_slot()
+            if slot is None:
+                break
+            handoff = self.transfer.next_ready()
+            if handoff is None:
+                break
+            sess = handoff.session
+            if sess.uid not in self._by_uid:
+                self.sessions.append(sess)
+                self._by_uid[sess.uid] = sess
+            if sess.done:               # cancelled in transit
+                self.transfer.discard(handoff)
+                self._release_quota(sess)
+                continue
+            try:
+                self.cache.adopt(slot, sess, handoff, self.transfer)
+            except PageError:
+                self.transfer.requeue(handoff)
+                break                   # pool too hot; retry next step
 
     def _grow_pages(self) -> None:
         """Back every resident session's next decode row with a page.
@@ -458,7 +615,21 @@ class Engine:
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):
-            if self.step() == 0 and not self.scheduler.has_waiting():
+            busy = self.step()
+            idle = busy == 0 and not self.scheduler.has_waiting()
+            if idle and self.role == "decode" and self.transfer.depth():
+                continue                # handoffs still parked in transit
+            if idle:
+                break
+            if self.role == "prefill" and busy == 0 and \
+                    not self.transfer.has_room():
+                # a standalone prefill engine cannot drain the queue it
+                # filled — spinning until max_steps would silently drop
+                # the waiting prompts on return
+                log.warning("prefill blocked: transfer queue full "
+                            "(depth %d) with no consumer; %d prompts "
+                            "still waiting", self.transfer.depth(),
+                            len(self.scheduler.waiting()))
                 break
         return self.finished
 
@@ -479,5 +650,6 @@ class Engine:
 
     def describe(self) -> str:
         quota = f" {self.quota.describe()}" if self.quota else ""
+        role = "" if self.role == "both" else f" role={self.role}"
         return (f"engine[{self.cache.describe()} "
-                f"sched={self.scheduler.describe()}{quota}]")
+                f"sched={self.scheduler.describe()}{quota}{role}]")

@@ -37,6 +37,17 @@ class PageError(RuntimeError):
     """Allocation failure: every page is hot (resident running sessions)."""
 
 
+def pages_for(rows: int, page_size: int) -> int:
+    """Pages needed to hold ``rows`` cache rows (always >= 1).
+
+    Module-level so every party to the page contract rounds identically:
+    the decode table's charge/claim (:meth:`PageTable.pages_for`), the
+    prefill role's quota reservation and handoff chunk count
+    (serve/engine.py) — a divergence would break the shared-ledger
+    reservation that follows a session across the disaggregated split."""
+    return max(1, -(-rows // page_size))
+
+
 #: evict_cb(owner_sid, position, page_id) -> payload
 #: Called while the page is still resident; must copy the page's contents
 #: out (spill-tier stash) and return an opaque payload the table stores in
@@ -75,12 +86,13 @@ class PageTable:
         self.evictions = 0
         self.refetches = 0
         self.readmits_free = 0         # pages re-bound without a copy
+        self.adoptions = 0             # sessions claimed from another role
 
     # ------------------------------------------------------------------
     # queries
     def pages_for(self, rows: int) -> int:
         """Pages needed to hold ``rows`` cache rows."""
-        return max(1, -(-rows // self.page_size))
+        return pages_for(rows, self.page_size)
 
     def sessions(self) -> Tuple[int, ...]:
         return tuple(sorted(self._entries))
@@ -140,6 +152,29 @@ class PageTable:
         while self.holds(sid) < self.pages_for(rows):
             new.append(self.alloc(sid, evict))
         return new
+
+    def claim(self, sid: int, n_pages: int,
+              evict: Optional[EvictFn] = None) -> List[int]:
+        """Allocate exactly ``n_pages`` fresh pages for an *adopted* session
+        (disaggregated serving: the decode role takes ownership of KV pages
+        prefilled by another runtime).
+
+        Cross-role ownership handoff must never alias: ``sid`` has to be
+        unknown to this table — the shipped pages become the one and only
+        copy this role serves from.  All-or-nothing: a :class:`PageError`
+        mid-claim (pool too hot) returns every page already taken and
+        re-raises, so a backpressured adoption leaves no residue."""
+        assert sid not in self._entries, \
+            f"adoption would alias existing session {sid}"
+        pids = []
+        try:
+            for _ in range(n_pages):
+                pids.append(self.alloc(sid, evict))
+        except PageError:
+            self.free_session(sid)
+            raise
+        self.adoptions += 1
+        return pids
 
     def set_resident(self, sid: int, pos: int,
                      evict: Optional[EvictFn] = None) -> int:
@@ -232,4 +267,5 @@ class PageTable:
         return (f"pages[{self.num_pages}x{self.page_size} "
                 f"free={self.num_free()} cold={self.num_cold()} "
                 f"evict={self.evictions} refetch={self.refetches} "
-                f"readmit_free={self.readmits_free}]")
+                f"readmit_free={self.readmits_free} "
+                f"adopt={self.adoptions}]")

@@ -10,11 +10,20 @@ codec from the ``core/compress.py`` registry (a latency-insensitive batch
 tenant can take int8 pages at half the spill bytes; an interactive tenant
 keeps raw pages).
 
-:class:`QuotaManager` is the engine-side ledger: ``admit``/``release``
-charge and return the reservation, ``can_admit``/``admissible`` answer the
-scheduler-time questions, ``usage`` feeds the traffic report.  Page
-budgets only bind in paged mode (the unpaged slot cache has no page
+:class:`QuotaManager` is the engine-side ledger: ``charge``/``release_uid``
+record and return one session's reservation, ``can_admit``/``admissible``
+answer the scheduler-time questions, ``usage`` feeds the traffic report.
+Page budgets only bind in paged mode (the unpaged slot cache has no page
 notion); session caps bind in both.
+
+The per-session ledger lives *here* (not in the Engine) so a reservation
+can follow a session across cooperating runtimes: under disaggregated
+serving (serve/disagg.py) the prefill and decode engines share one
+QuotaManager — the charge taken at prefill admission stays on the ledger
+while the session's KV pages are in flight through the transfer tier and
+is released by whichever side retires (or sweeps a cancellation of) the
+session.  ``release_uid`` is idempotent for exactly that reason: a
+cancelled-in-transit session may be swept by both sides.
 """
 from __future__ import annotations
 
@@ -70,6 +79,7 @@ class QuotaManager:
         self.default_quota = (default_quota or TenantQuota()).validate()
         self._pages: Dict[str, int] = {}
         self._sessions: Dict[str, int] = {}
+        self._charged: Dict[int, Tuple[str, int]] = {}  # uid -> (tenant, pages)
 
     # ------------------------------------------------------------------
     def quota_for(self, tenant: str) -> TenantQuota:
@@ -105,6 +115,33 @@ class QuotaManager:
     def release(self, tenant: str, pages: int) -> None:
         self._sessions[tenant] = max(0, self._sessions.get(tenant, 0) - 1)
         self._pages[tenant] = max(0, self._pages.get(tenant, 0) - pages)
+
+    # ------------------------------------------------------------------
+    # per-session ledger (reservations that survive role handoffs)
+    def charge(self, uid: int, tenant: str, pages: int) -> None:
+        """Record one session's worst-case reservation against its tenant."""
+        assert uid not in self._charged, f"session {uid} already charged"
+        self.admit(tenant, pages)
+        self._charged[uid] = (tenant, pages)
+
+    def release_uid(self, uid: int) -> bool:
+        """Return a session's reservation; idempotent (False: not charged).
+
+        Safe to call from every runtime that ever saw the session — the
+        first caller wins, later sweeps are no-ops — which is what makes
+        cancel-while-parked (paused, deferred, or in a transfer queue)
+        leak-free without coordinating the sweepers."""
+        entry = self._charged.pop(uid, None)
+        if entry is None:
+            return False
+        self.release(*entry)
+        return True
+
+    def charge_of(self, uid: int) -> Optional[Tuple[str, int]]:
+        return self._charged.get(uid)
+
+    def charged_uids(self) -> Tuple[int, ...]:
+        return tuple(self._charged)
 
     # ------------------------------------------------------------------
     def usage(self) -> Dict[str, Dict[str, int]]:

@@ -30,6 +30,18 @@ Policies are registry-pluggable (:func:`register_scheduler` /
 * :class:`DeadlineScheduler` — earliest-deadline-first over
   ``Request.deadline`` (absolute engine steps via the :meth:`on_step`
   clock) with met/missed accounting at retirement.
+
+Disaggregated serving (serve/disagg.py) splits admission across TWO
+queues, each behind its own engine's scheduler: the *prefill queue* is
+the prefill-role engine's scheduler ordering fresh prompts toward the
+prefill slots (gated by transfer-tier backpressure), while the *decode
+queue* is the decode-role engine's scheduler ordering paused-session
+resumes — fresh work reaches the decode side only through the
+``TransferQueue`` (arrival-ordered, requeue-to-back under backpressure,
+so adoptions never starve resumes nor each other).  A session leaving
+the prefill role is announced via :meth:`on_handoff`, NOT
+:meth:`on_retire`: it has not finished, and deadline accounting must
+happen exactly once, on the side that retires it.
 """
 from __future__ import annotations
 
@@ -73,6 +85,11 @@ class Scheduler(abc.ABC):
 
     def on_retire(self, sess: Session) -> None:
         """Hook: a session finished and left its slot."""
+
+    def on_handoff(self, sess: Session) -> None:
+        """Hook: a prefill-role engine shipped this session to the decode
+        side.  Not a retirement — the session is still live, and any
+        SLO/latency accounting belongs to the engine that retires it."""
 
     def on_step(self) -> None:
         """Hook: the engine completed one decode step (scheduler clock)."""
@@ -261,6 +278,7 @@ class DeadlineScheduler(Scheduler):
         self.now = 0
         self.misses = 0
         self.met = 0
+        self.max_lateness = 0          # worst (now - deadline) over misses
         self.misses_by_tenant: Dict[str, int] = {}
         self.met_by_tenant: Dict[str, int] = {}
 
@@ -306,6 +324,8 @@ class DeadlineScheduler(Scheduler):
             return
         if self.now > sess.deadline:
             self.misses += 1
+            self.max_lateness = max(self.max_lateness,
+                                    int(self.now - sess.deadline))
             self.misses_by_tenant[sess.tenant] = \
                 self.misses_by_tenant.get(sess.tenant, 0) + 1
         else:
@@ -317,6 +337,7 @@ class DeadlineScheduler(Scheduler):
         """Per-tenant SLO ledger: both sides of the met/missed split."""
         tenants = set(self.misses_by_tenant) | set(self.met_by_tenant)
         return {"now": self.now, "met": self.met, "missed": self.misses,
+                "max_lateness": self.max_lateness,
                 "by_tenant": {t: {"met": self.met_by_tenant.get(t, 0),
                                   "missed": self.misses_by_tenant.get(t, 0)}
                               for t in sorted(tenants)}}

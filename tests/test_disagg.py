@@ -1,0 +1,634 @@
+"""Disaggregated prefill/decode: cross-role trace equivalence + handoff
+invariants.
+
+The acceptance bar (ISSUE 4): disaggregated decode token streams are
+bit-identical to colocated paged decode for seeded traces, transfer bytes
+are metered through ``traffic_report()`` (wire bytes == page bytes x
+shipped pages), no page is lost or duplicated across the handoff, decode-
+side backpressure parks pages in the transfer tier (never re-prefills),
+and quota reservations follow the session to the decode side.
+
+The trace drivers (`run_transfer_queue_trace` / `run_deadline_sim`) are
+shared with the hypothesis property suite
+(tests/test_serve_properties.py); here they run on seeded-random traces
+so the machinery is exercised even when hypothesis is not installed.
+"""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, MemoryPlan, MeshPlan, RunConfig
+from repro.configs.base import ShapeConfig
+from repro.models import transformer as tfm
+from repro.models.model import build_model
+from repro.serve.disagg import DisaggPair, KVHandoff, TransferQueue, \
+    build_disagg
+from repro.serve.engine import Engine, Request
+from repro.serve.quota import QuotaManager, TenantQuota
+from repro.serve.scheduler import FairScheduler, build_scheduler
+from repro.serve.session import Session, SessionState
+
+from test_paging import _solo  # noqa: F401 — shared solo-decode reference
+
+CFG = ARCHS["smollm-135m"].reduced()
+PLAN1 = MeshPlan((1,), ("data",))
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    run = RunConfig(model=CFG, shape=ShapeConfig("t", 64, 2, "decode"),
+                    mesh=PLAN1, memory=MemoryPlan(policy="none"))
+    m = build_model(run)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompts(n, base=4):
+    return [((np.arange(base + i, dtype=np.int32) * (i + 2) + 1)
+             % CFG.vocab_size) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance twin: disagg == colocated paged == solo, bit-identical
+def test_disagg_streams_identical_to_colocated(model_and_params):
+    m, params = model_and_params
+    prompts = _prompts(5)
+    want = [_solo(m, params, p, 6) for p in prompts]
+
+    def colocated(**kw):
+        eng = Engine(m, params, batch=2, max_len=64, page_size=16,
+                     spill="host", **kw)
+        ss = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+              for i, p in enumerate(prompts)]
+        eng.run()
+        return [s.result() for s in ss]
+
+    assert colocated() == want
+
+    def disagg(**kw):
+        pair = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                            transfer="host", spill="host", **kw)
+        ss = [pair.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+              for i, p in enumerate(prompts)]
+        pair.run()
+        return pair, [s.result() for s in ss]
+
+    pair, got = disagg()
+    assert got == want                          # plain FIFO decode
+    pair2, got2 = disagg(pages=3,
+                         decode_scheduler=FairScheduler(quantum=2))
+    assert got2 == want                         # overcommit + preemption
+    # the overcommitted run really moved pages through the spill tier on
+    # top of the adoption traffic
+    pages = pair2.decode.traffic_report()["pages"]
+    assert pages["adoptions"] == 5
+    assert pages["evictions"] > 0
+
+
+def test_disagg_streams_with_staggered_retires(model_and_params):
+    """Unequal max_new_tokens: decode slots retire and re-fill mid-run
+    with adoptions crossing the handoff — streams still bit-identical."""
+    m, params = model_and_params
+    prompts = _prompts(4)
+    new_tokens = [3, 9, 4, 6]
+    want = [_solo(m, params, p, n) for p, n in zip(prompts, new_tokens)]
+    pair = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host")
+    ss = [pair.submit(Request(uid=i, prompt=p, max_new_tokens=n))
+          for i, (p, n) in enumerate(zip(prompts, new_tokens))]
+    pair.run()
+    assert [s.result() for s in ss] == want
+    assert all(s.finish_reason == "length" for s in ss)
+
+
+def test_disagg_transfer_bytes_metered(model_and_params):
+    """Acceptance: transferred bytes == page bytes x shipped pages, on
+    both legs (publish and adopt), with no page lost or duplicated."""
+    m, params = model_and_params
+    prompts = _prompts(4, base=18)              # 18..21 rows -> 2 pages each
+    pair = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host")
+    ss = [pair.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+          for i, p in enumerate(prompts)]
+    pair.run()
+    assert all(s.finish_reason == "length" for s in ss)
+    rep = pair.transfer.traffic_report()
+    tq = rep["transfer"]
+    assert tq["shipped_pages"] == 4 * 2         # ceil(18..21 / 16) == 2
+    assert tq["adopted_pages"] == tq["shipped_pages"]   # none lost
+    assert tq["published"] == tq["delivered"] - tq["requeued"] == 4
+    # one page's bytes across the paged kv leaves
+    page_leaves = jax.tree_util.tree_leaves(
+        tfm.page_slice(pair.decode.cache.pool, 0))
+    page_bytes = sum(x.size * x.dtype.itemsize for x in page_leaves)
+    assert rep["kv_publish"]["wire_bytes"] == tq["shipped_pages"] * page_bytes
+    assert rep["kv_adopt"]["wire_bytes"] == tq["shipped_pages"] * page_bytes
+    assert rep["kv_publish"]["calls"] == \
+        tq["shipped_pages"] * len(page_leaves)
+    # every adoption claimed fresh frames exactly once, all freed at retire
+    table = pair.decode.cache.table
+    assert table.adoptions == 4
+    assert table.sessions() == ()
+    assert table.num_free() == table.num_pages
+
+
+def test_disagg_backpressure_parks_pages_not_reprefill(model_and_params):
+    """Decode-side pool pressure: the handoff requeues (to the BACK), its
+    pages stay parked in the transfer tier, and the session is never
+    prefilled again — prefill publishes exactly once per request."""
+    m, params = model_and_params
+    prompts = _prompts(3)
+    # decode: 3 slots over a 2-page pool -> the third adoption finds every
+    # frame hot (two running sessions pin one page each) and must requeue
+    pair = build_disagg(m, params, batch=3, max_len=32, page_size=16,
+                        pages=2, transfer="host", spill="host")
+    ss = [pair.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+          for i, p in enumerate(prompts)]
+    pair.run()
+    assert [len(s.result()) for s in ss] == [8, 8, 8]
+    tq = pair.transfer
+    assert tq.requeued > 0                      # backpressure happened
+    assert tq.published == 3                    # ...but no re-prefill
+    assert tq.shipped_pages == tq.adopted_pages == 3
+    assert pair.decode.cache.table.adoptions == 3
+    want = [_solo(m, params, p, 8) for p in prompts]
+    assert [s.result() for s in ss] == want
+
+
+def test_disagg_quota_reservation_follows_session(model_and_params):
+    """The worst-case page reservation charged at prefill admission stays
+    on the shared ledger while the KV is in flight and serializes the
+    tenant across the role split, releasing only at decode-side retire."""
+    m, params = model_and_params
+    qm = QuotaManager({"A": TenantQuota(max_pages=2)})
+    pair = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host", quota=qm)
+    # 20 prompt + 10 new = 30 rows -> 2 pages each: A's 2nd must wait for
+    # the 1st's reservation to come back from the DECODE side
+    a = [pair.submit(Request(uid=i, prompt=np.arange(20, dtype=np.int32),
+                             max_new_tokens=10, tenant="A"))
+         for i in range(2)]
+    b = pair.submit(Request(uid=5, prompt=np.arange(20, dtype=np.int32),
+                            max_new_tokens=10, tenant="B"))
+    pair.prefill.step()                         # a0 prefilled + published
+    assert qm.charge_of(a[0].uid) == ("A", 2)   # charged...
+    assert pair.transfer.depth() == 1           # ...while parked in transit
+    assert qm.usage()["A"]["pages"] == 2
+    pair.prefill.step()                         # A over budget: b admits past
+    assert qm.charge_of(a[1].uid) is None
+    assert qm.charge_of(b.uid) == ("B", 2)
+    pair.run()
+    assert all(s.finish_reason == "length" for s in a + [b])
+    assert qm.charged_uids() == ()              # every reservation returned
+    assert qm.usage()["A"] == {"sessions": 0, "pages": 0}
+
+
+def test_disagg_cancel_in_transit_releases_everything(model_and_params):
+    """Satellite fix: a session cancelled while its handoff is parked in
+    the transfer queue must release its quota reservation and its parked
+    page payloads (no re-prefill, no ledger leak)."""
+    m, params = model_and_params
+    qm = QuotaManager({"A": TenantQuota(max_pages=4)})
+    pair = build_disagg(m, params, batch=1, max_len=64, page_size=16,
+                        transfer="host", spill="host", quota=qm)
+    s0 = pair.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32) + 1,
+                             max_new_tokens=6, tenant="A"))
+    s1 = pair.submit(Request(uid=1, prompt=np.arange(5, dtype=np.int32) + 2,
+                             max_new_tokens=6, tenant="A"))
+    pair.prefill.step()
+    pair.step()                                 # s0 adopted; s1 published
+    assert pair.transfer.depth() == 1           # s1 parked behind batch=1
+    assert qm.charge_of(1) == ("A", 1)
+    s1.cancel()
+    pair.run()
+    assert s0.result() == _solo(m, params, np.arange(4, dtype=np.int32) + 1, 6)
+    assert s1.state is SessionState.CANCELLED
+    assert len(s1.result()) == 1                # only the prefill token
+    assert pair.transfer.swept == 1             # payloads dropped in place
+    assert pair.transfer.depth() == 0
+    assert qm.charged_uids() == ()              # reservation released
+    assert qm.usage()["A"] == {"sessions": 0, "pages": 0}
+
+
+def test_quota_cancel_while_deferred_releases_reservation(model_and_params):
+    """Satellite regression (colocated twin): cancelling a session parked
+    at admission — deferred on quota, or paused holding a charge — must
+    leave the tenant ledger empty; deferral alone never holds a charge."""
+    m, params = model_and_params
+    qm = QuotaManager({"A": TenantQuota(max_sessions=1)})
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16,
+                 spill="host", quota=qm)
+    a0 = eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=6, tenant="A"))
+    a1 = eng.submit(Request(uid=1, prompt=np.arange(5, dtype=np.int32),
+                            max_new_tokens=6, tenant="A"))
+    eng.step()                                  # a0 resident, a1 deferred
+    assert qm.charge_of(0) == ("A", 1)
+    assert qm.charge_of(1) is None              # deferred != charged
+    a1.cancel()
+    eng.step()
+    assert qm.usage()["A"]["sessions"] == 1     # a0 only
+    eng.run()
+    assert a0.finish_reason == "length"
+    assert a1.state is SessionState.CANCELLED and a1.result() == []
+    assert qm.charged_uids() == ()
+    assert qm.usage()["A"] == {"sessions": 0, "pages": 0}
+
+    # paused-while-charged twin: cancel must return the charge too
+    qm2 = QuotaManager({"A": TenantQuota(max_pages=8)})
+    eng2 = Engine(m, params, batch=1, max_len=64, page_size=16,
+                  scheduler=FairScheduler(quantum=1), spill="host",
+                  quota=qm2)
+    p0 = eng2.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32) + 1,
+                             max_new_tokens=8, tenant="A"))
+    p1 = eng2.submit(Request(uid=1, prompt=np.arange(5, dtype=np.int32) + 2,
+                             max_new_tokens=8, tenant="A"))
+    eng2.step()                                 # p0 resident
+    eng2.step()                                 # p0 paused (quantum), p1 in
+    assert p0.state is SessionState.PAUSED and qm2.charge_of(0) is not None
+    p0.cancel()
+    eng2.run()
+    assert len(p1.result()) == 8
+    assert qm2.charged_uids() == ()
+    assert qm2.usage()["A"] == {"sessions": 0, "pages": 0}
+
+
+# ---------------------------------------------------------------------------
+# role plumbing guards
+def test_role_guards(model_and_params):
+    m, params = model_and_params
+    with pytest.raises(ValueError):
+        Engine(m, params, batch=1, max_len=32, role="prefill")  # no queue
+    with pytest.raises(ValueError):
+        Engine(m, params, batch=1, max_len=32, role="encode")
+    pair = build_disagg(m, params, batch=1, max_len=32, page_size=16,
+                        transfer="host", spill="host")
+    with pytest.raises(RuntimeError):
+        pair.decode.submit(Request(uid=0, prompt=np.zeros(2, np.int32)))
+    with pytest.raises(ValueError):             # mismatched geometry
+        DisaggPair(pair.prefill,
+                   Engine(m, params, batch=1, max_len=64, page_size=16,
+                          spill="host", role="decode",
+                          transfer=pair.transfer),
+                   pair.transfer)
+    with pytest.raises(ValueError):             # page_size must tile slots
+        Engine(m, params, batch=1, max_len=40, page_size=16, spill=None,
+               role="prefill", transfer=pair.transfer)
+
+
+def test_prefill_side_terminal_requests_never_ship(model_and_params):
+    """Rejections and instant finishes (max_new_tokens=1: the prefill
+    token IS the stream) retire on the prefill side — the decode side
+    never sees them, and the streams still match colocated."""
+    m, params = model_and_params
+    pair = build_disagg(m, params, batch=2, max_len=32, page_size=16,
+                        transfer="host", spill="host")
+    too_long = pair.submit(Request(
+        uid=0, prompt=np.arange(32, dtype=np.int32), max_new_tokens=4))
+    instant = pair.submit(Request(
+        uid=1, prompt=np.arange(4, dtype=np.int32) + 1, max_new_tokens=1))
+    normal = pair.submit(Request(
+        uid=2, prompt=np.arange(5, dtype=np.int32) + 2, max_new_tokens=4))
+    done = pair.run()
+    assert too_long.finish_reason == "rejected"
+    assert instant.finish_reason == "length"
+    assert instant.result() == _solo(m, params,
+                                     np.arange(4, dtype=np.int32) + 1, 1)
+    assert normal.result() == _solo(m, params,
+                                    np.arange(5, dtype=np.int32) + 2, 4)
+    assert pair.transfer.published == 1         # only the normal request
+    assert {r.uid for r in done} == {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# hybrid (SSM + shared-attention) arch: slot-shaped state must ship too
+@pytest.fixture(scope="module")
+def hybrid_model():
+    cfg = ARCHS["zamba2-2.7b"].reduced()
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 2, "decode"),
+                    mesh=PLAN1, memory=MemoryPlan(policy="none"))
+    m = build_model(run)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _hybrid_solo(m, params, prompt, n_new):
+    eng = Engine(m, params, batch=1, max_len=32)
+    sess = eng.submit(Request(uid=0, prompt=np.asarray(prompt, np.int32),
+                              max_new_tokens=n_new))
+    eng.run()
+    return sess.result()
+
+
+def test_hybrid_prefill_never_reads_stale_slot_state(hybrid_model):
+    """Regression: prefill used to seed the SSM recurrence from the
+    slot's cache — a REUSED slot then leaked the previous occupant's
+    state into the next session's stream (KV rows are masked by
+    cache_index, recurrent state is read-at-start).  Sequential sessions
+    through one slot must match their solo decodes."""
+    m, params = hybrid_model
+    cfg = m.cfg
+    prompts = [((np.arange(4 + i, dtype=np.int32) * (i + 2) + 1)
+                % cfg.vocab_size) for i in range(2)]
+    want = [_hybrid_solo(m, params, p, 5) for p in prompts]
+    eng = Engine(m, params, batch=1, max_len=32)
+    ss = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+          for i, p in enumerate(prompts)]
+    eng.run()
+    assert [s.result() for s in ss] == want
+
+
+def test_hybrid_disagg_ships_slot_state_bit_identical(hybrid_model):
+    """The handoff's slot-shaped leg: SSM conv/state rides next to the KV
+    pages, and the adopted stream stays bit-identical to colocated."""
+    m, params = hybrid_model
+    cfg = m.cfg
+    prompts = [((np.arange(4 + i, dtype=np.int32) * (i + 2) + 1)
+                % cfg.vocab_size) for i in range(2)]
+    want = [_hybrid_solo(m, params, p, 5) for p in prompts]
+    pair = build_disagg(m, params, batch=2, max_len=32, page_size=16,
+                        transfer="host", spill="host")
+    ss = [pair.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+          for i, p in enumerate(prompts)]
+    pair.run()
+    assert [s.result() for s in ss] == want
+    # the slot-shaped leaves really travelled through the queue: more
+    # publish legs than the page (k/v) leaves alone account for
+    rep = pair.transfer.traffic_report()
+    page_leaf_count = len(jax.tree_util.tree_leaves(
+        tfm.page_slice(pair.decode.cache.pool, 0)))
+    shipped = rep["transfer"]["shipped_pages"]
+    assert rep["kv_publish"]["calls"] > shipped * page_leaf_count
+    assert rep["kv_adopt"]["calls"] == rep["kv_publish"]["calls"]
+
+
+# ---------------------------------------------------------------------------
+# TransferQueue ordering (trace driver shared with the property suite)
+class LedgerRuntime:
+    """Duck-typed MemoryRuntime twin: payload handles in a dict, so the
+    trace driver can assert every stashed page is fetched-or-discarded
+    exactly once (nothing leaks, nothing is fetched twice)."""
+
+    def __init__(self):
+        self.store = {}
+        self._next = 0
+        self.fetches = 0
+        self.discards = 0
+
+    def stash(self, x, hints=None, direction=""):
+        self._next += 1
+        self.store[self._next] = x
+        return self._next
+
+    def fetch(self, payload, hints=None, direction=""):
+        self.fetches += 1
+        return self.store[payload]
+
+    def discard(self, payload):
+        self.discards += 1
+        self.store.pop(payload, None)
+
+    def traffic_report(self):
+        return {"tier": "ledger"}
+
+
+def test_transfer_max_depth_bounds_prefill_burst(model_and_params):
+    """Regression: the admission gate must count residents not yet
+    published — a multi-slot prefill burst used to overshoot max_depth
+    because publish is unconditional."""
+    m, params = model_and_params
+    pair = build_disagg(m, params, batch=2, max_len=32, page_size=16,
+                        prefill_batch=3, max_depth=1, transfer="host",
+                        spill="host")
+    ss = [pair.submit(Request(uid=i,
+                              prompt=np.arange(4, dtype=np.int32) + i,
+                              max_new_tokens=3)) for i in range(4)]
+    for _ in range(3):                  # prefill alone can never exceed it
+        pair.prefill.step()
+        assert pair.transfer.depth() <= 1
+    pair.run()
+    assert [len(s.result()) for s in ss] == [3, 3, 3, 3]
+
+
+def test_standalone_prefill_run_stops_when_queue_full(model_and_params):
+    """Regression: a prefill-role engine with no consumer used to spin
+    max_steps no-op rounds once the queue filled; it must stop, leaving
+    the unshipped prompts visibly waiting."""
+    m, params = model_and_params
+    q = TransferQueue(LedgerRuntime(), max_depth=2)
+    eng = Engine(m, params, batch=1, max_len=32, page_size=16, spill=None,
+                 scheduler="deadline", role="prefill", transfer=q)
+    for i in range(4):
+        eng.submit(Request(uid=i, prompt=np.arange(4, dtype=np.int32) + i,
+                           max_new_tokens=4))
+    eng.run(max_steps=50)
+    assert q.depth() == 2               # filled to the cap, then stopped
+    assert len(eng.scheduler.waiting()) == 2    # not silently dropped
+    assert eng.scheduler.now < 10       # ...and it stopped EARLY (the
+    #                                     deadline clock counts steps)
+
+
+def _mk_handoff(uid, n_pages):
+    req = Request(uid=uid, prompt=np.zeros(2, np.int32))
+    sess = Session(request=req, seq=uid)
+    pages = [{"kv": np.full((2,), uid * 1000 + pos, np.int32)}
+             for pos in range(n_pages)]
+    return KVHandoff(session=sess, length=n_pages), pages
+
+
+def run_transfer_queue_trace(ops, max_depth=None):
+    """Drive a TransferQueue through publish/adopt/defer/cancel steps.
+
+    Invariants asserted (the ISSUE's list):
+    * FIFO per session — pages come back in logical position order with
+      the exact values published;
+    * delivery exactly once — no handoff is lost or adopted twice;
+    * no starvation — after a backpressure requeue, every other handoff
+      then parked is offered before the requeued one comes around again;
+    * no payload leak — at drain, every stashed page was fetched or
+      discarded and the ledger is empty.
+    """
+    runtime = LedgerRuntime()
+    q = TransferQueue(runtime, max_depth=max_depth)
+    uid = 0
+    published, adopted, cancelled = {}, set(), set()
+    waiting_for = {}        # uid -> uids that must be offered before it
+    for op, arg in ops:
+        if op == "publish":
+            if not q.has_room():
+                continue
+            handoff, pages = _mk_handoff(uid, n_pages=1 + arg % 3)
+            q.publish(handoff, pages)
+            published[uid] = pages
+            uid += 1
+        elif op == "adopt":
+            h = q.next_ready()
+            if h is None:
+                continue
+            for blocked, others in list(waiting_for.items()):
+                others.discard(h.uid)
+            if h.uid in waiting_for:
+                assert not waiting_for.pop(h.uid), \
+                    f"handoff {h.uid} starved its queue peers"
+            if h.session.done:
+                q.discard(h)
+                cancelled.add(h.uid)
+                continue
+            if arg % 2:                         # decode-side backpressure
+                others = set(q.parked_uids())
+                q.requeue(h)
+                waiting_for[h.uid] = others
+                continue
+            pages = q.fetch_pages(h)
+            assert h.uid not in adopted, f"handoff {h.uid} adopted twice"
+            adopted.add(h.uid)
+            want = published[h.uid]
+            assert len(pages) == len(want)
+            for got, exp in zip(pages, want):   # FIFO per session
+                np.testing.assert_array_equal(got["kv"], exp["kv"])
+        elif op == "cancel" and published:
+            victim = sorted(published)[arg % len(published)]
+            if victim not in adopted and victim not in cancelled:
+                # find the parked handoff's session and cancel it
+                for h in q._parked:
+                    if h.uid == victim:
+                        h.session.cancel()
+                        break
+        for sess in q.sweep_cancelled():
+            cancelled.add(sess.uid)
+            # a swept peer can no longer be "offered" — it must not
+            # count against the fairness ledger of requeued handoffs
+            for others in waiting_for.values():
+                others.discard(sess.uid)
+    # drain: adopt everything left, no backpressure
+    while True:
+        h = q.next_ready()
+        if h is None:
+            break
+        if h.session.done:
+            q.discard(h)
+            cancelled.add(h.uid)
+            continue
+        q.fetch_pages(h)
+        assert h.uid not in adopted
+        adopted.add(h.uid)
+    swept = {u for u in published
+             if u not in adopted and u not in cancelled}
+    # cancelled-in-queue sessions were swept by sweep_cancelled
+    assert all(u not in adopted for u in swept)
+    assert not runtime.store, "payloads leaked in the transfer tier"
+    assert q.adopted_pages == sum(len(published[u]) for u in adopted)
+    return q, adopted
+
+
+def test_transfer_queue_random_traces_seeded():
+    rng = random.Random(4321)
+    for _ in range(30):
+        ops = [(rng.choice(["publish", "adopt", "adopt", "cancel"]),
+                rng.randrange(16)) for _ in range(60)]
+        q, adopted = run_transfer_queue_trace(
+            ops, max_depth=rng.choice([None, 2, 4]))
+        assert q.depth() == 0
+
+
+# ---------------------------------------------------------------------------
+# DeadlineScheduler under staggered arrivals (driver shared with the
+# property suite: misses are monotone in uniform deadline slack)
+def run_deadline_sim(jobs, slots=2, slack=0, max_steps=500):
+    """Pure-python twin of the engine's deadline serving loop.
+
+    ``jobs``: (arrival_step, service_tokens, base_deadline|None) triples.
+    EDF admission from the real DeadlineScheduler into ``slots``; each
+    step every running session decodes one token; retirement feeds the
+    met/missed accounting.  Uniform ``slack`` is added to every real
+    deadline — it preserves every EDF comparison, so the schedule is
+    identical and misses can only go down.
+    """
+    sched = build_scheduler("deadline")
+    pending = sorted(((arr, i, svc, dl) for i, (arr, svc, dl)
+                      in enumerate(jobs)), key=lambda t: t[:2])
+    running, sessions = [], []
+    for t in range(max_steps):
+        while pending and pending[0][0] <= t:
+            _, i, svc, dl = pending.pop(0)
+            req = Request(uid=i, prompt=np.zeros(2, np.int32),
+                          max_new_tokens=svc,
+                          deadline=None if dl is None else dl + slack)
+            sess = Session(request=req, seq=i)
+            sessions.append(sess)
+            sched.submit(sess)
+        # preemption, as the engine drives it: waiting work beyond the
+        # free slots may displace running sessions the policy outranks
+        free = slots - len(running)
+        while free < len(sched.waiting()):
+            victim = sched.preempt_victim(running)
+            if victim is None:
+                break
+            running.remove(victim)
+            victim.preemptions += 1
+            sched.requeue(victim)
+            free += 1
+        while len(running) < slots:
+            nxt = sched.next_ready()
+            if nxt is None:
+                break
+            running.append(nxt)
+        sched.on_step()
+        for sess in list(running):
+            sess.emit(0)
+            if len(sess.tokens) >= sess.request.max_new_tokens:
+                sess.finish("length")
+                sched.on_retire(sess)
+                running.remove(sess)
+        if not running and not pending and not sched.has_waiting():
+            break
+    assert not pending and not running, "sim did not drain"
+    served = sum(1 for s in sessions if s.deadline != float("inf"))
+    rep = sched.miss_report()
+    assert rep["met"] + rep["missed"] == served
+    return sched
+
+
+def test_deadline_misses_monotone_in_slack_seeded():
+    rng = random.Random(7)
+    for _ in range(25):
+        jobs = [(rng.randrange(0, 10), rng.randrange(1, 8),
+                 rng.choice([None] + list(range(1, 25))))
+                for _ in range(rng.randrange(1, 12))]
+        slots = rng.randrange(1, 4)
+        misses = [run_deadline_sim(jobs, slots=slots, slack=s).misses
+                  for s in (0, 3, 10)]
+        assert misses[0] >= misses[1] >= misses[2], (jobs, slots, misses)
+
+
+def test_deadline_sim_lateness_and_tenant_split():
+    """met/missed under staggered arrivals: a tight deadline arriving
+    behind a long job misses with positive max_lateness; the generous
+    one meets."""
+    sched = run_deadline_sim(
+        [(0, 6, 30), (2, 3, 4)], slots=1, slack=0)
+    rep = sched.miss_report()
+    assert rep == {"now": rep["now"], "met": 1, "missed": 1,
+                   "max_lateness": rep["max_lateness"],
+                   "by_tenant": {"default": {"met": 1, "missed": 1}}}
+    assert rep["max_lateness"] >= 1
+
+
+def test_deadline_staggered_arrivals_engine(model_and_params):
+    """Engine-level staggered arrivals: submissions landing mid-run feed
+    the same met/missed accounting (served sessions only)."""
+    m, params = model_and_params
+    eng = Engine(m, params, batch=1, max_len=64, scheduler="deadline")
+    generous = eng.submit(Request(uid=0,
+                                  prompt=np.arange(4, dtype=np.int32) + 1,
+                                  max_new_tokens=4, deadline=40))
+    eng.step()
+    eng.step()
+    tight = eng.submit(Request(uid=1,
+                               prompt=np.arange(5, dtype=np.int32) + 2,
+                               max_new_tokens=4, deadline=3))
+    eng.run()
+    rep = eng.scheduler.miss_report()
+    assert rep["met"] + rep["missed"] == 2
+    assert rep["missed"] >= 1 and rep["max_lateness"] >= 1
+    assert generous.finish_reason == tight.finish_reason == "length"

@@ -2,16 +2,23 @@
 
 Random submit/requeue/cancel/retire traces against every scheduler policy
 and random alloc/spill/fetch/free traces against the PageTable, reusing
-the trace drivers from tests/test_paging.py (which also runs them on
-seeded traces so the machinery is covered without hypothesis).
+the trace drivers from tests/test_paging.py; plus the disaggregated-
+serving drivers from tests/test_disagg.py (TransferQueue ordering and
+the deadline-slack monotonicity sim).  Every driver also runs on seeded
+traces in its home module, so the machinery is covered without
+hypothesis.
 
-Invariants (the ISSUE's list):
+Invariants (the ISSUEs' lists):
 * no session is lost or double-scheduled, for every policy;
 * FCFS preserves arrival order of fresh (never-preempted) sessions;
 * SRPT never runs a longer job while a shorter one waits;
 * EDF never idles past an unmet deadline and always picks the earliest;
+* EDF misses are monotone (non-increasing) in uniform deadline slack;
 * pages are never aliased across sessions, the free list never
-  double-frees, and metered transfers equal page_size x transfer count.
+  double-frees, and metered transfers equal page_size x transfer count;
+* TransferQueue: pages FIFO per session, handoffs delivered exactly
+  once, no starvation across sessions under backpressure requeues, and
+  no payload leaked in the transfer tier.
 
 CI pins determinism via the "ci" profile registered in conftest.py
 (HYPOTHESIS_PROFILE=ci: derandomized, fixed example budget).
@@ -22,6 +29,8 @@ hypothesis = pytest.importorskip("hypothesis")
 
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from test_disagg import (run_deadline_sim,                  # noqa: E402
+                         run_transfer_queue_trace)
 from test_paging import (SCHED_NAMES, run_scheduler_trace,  # noqa: E402
                          run_table_trace)
 
@@ -71,3 +80,51 @@ def test_scheduler_traces(name, ops, slots):
 @settings(max_examples=40, deadline=None)
 def test_fair_scheduler_traces_with_quantum(ops):
     run_scheduler_trace("fair", ops, quantum=2)
+
+
+# ---------------------------------------------------------------------------
+# TransferQueue traces (disaggregated prefill/decode handoffs)
+queue_ops = st.lists(
+    st.tuples(st.sampled_from(["publish", "adopt", "adopt", "cancel"]),
+              st.integers(min_value=0, max_value=15)),
+    max_size=120)
+
+
+@given(ops=queue_ops,
+       max_depth=st.one_of(st.none(), st.integers(min_value=1, max_value=6)))
+@settings(max_examples=80, deadline=None)
+def test_transfer_queue_traces(ops, max_depth):
+    q, adopted = run_transfer_queue_trace(ops, max_depth=max_depth)
+    assert q.depth() == 0                   # drained
+    assert len(adopted) <= q.published      # delivered at most once each
+
+
+# ---------------------------------------------------------------------------
+# DeadlineScheduler: misses are monotone in uniform deadline slack.
+# Adding the same slack to every real deadline preserves every EDF
+# comparison (strict inequalities shift equally, seq tie-breaks are
+# untouched), so the schedule — and each completion time — is identical;
+# a request that meets its deadline at less slack must still meet it at
+# more.  Staggered arrivals exercise the preempt/requeue path too.
+jobs_strategy = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=12),    # arrival step
+              st.integers(min_value=1, max_value=8),     # service tokens
+              st.one_of(st.none(),
+                        st.integers(min_value=1, max_value=30))),  # deadline
+    min_size=1, max_size=12)
+
+
+@given(jobs=jobs_strategy,
+       slots=st.integers(min_value=1, max_value=3),
+       slacks=st.tuples(st.integers(min_value=0, max_value=6),
+                        st.integers(min_value=0, max_value=25)))
+@settings(max_examples=80, deadline=None)
+def test_deadline_misses_monotone_in_slack(jobs, slots, slacks):
+    lo, hi = min(slacks), max(slacks)
+    tight = run_deadline_sim(jobs, slots=slots, slack=lo)
+    loose = run_deadline_sim(jobs, slots=slots, slack=hi)
+    assert loose.misses <= tight.misses
+    # the same requests were served either way; only the verdict moves
+    assert tight.met + tight.misses == loose.met + loose.misses
+    if lo == hi:
+        assert (tight.met, tight.misses) == (loose.met, loose.misses)
