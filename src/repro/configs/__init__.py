@@ -3,6 +3,7 @@ from repro.configs.base import (
     MeshPlan,
     ModelConfig,
     MULTI_POD,
+    PipelinePlan,
     RunConfig,
     ShapeConfig,
     SHAPES,
@@ -13,7 +14,7 @@ from repro.configs.base import (
 from repro.configs.registry import ARCHS, get_arch, list_archs, cells_for
 
 __all__ = [
-    "MemoryPlan", "MeshPlan", "ModelConfig", "MULTI_POD", "RunConfig",
-    "ShapeConfig", "SHAPES", "SHAPES_BY_NAME", "SINGLE_POD", "TrainConfig",
-    "ARCHS", "get_arch", "list_archs", "cells_for",
+    "MemoryPlan", "MeshPlan", "ModelConfig", "MULTI_POD", "PipelinePlan",
+    "RunConfig", "ShapeConfig", "SHAPES", "SHAPES_BY_NAME", "SINGLE_POD",
+    "TrainConfig", "ARCHS", "get_arch", "list_archs", "cells_for",
 ]

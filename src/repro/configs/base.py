@@ -34,6 +34,11 @@ class MemoryPlan:
       - "spill":  pooled HBM until the pool's capacity contract is spent,
                   host DRAM past it (core.tiers.SpillTier; the serving
                   stack's default secondary store for cold KV slots).
+      - "pipeline": the pipeline-stage tier (core.tiers.PipelineStageTier
+                  over pooled HBM): per-stage activation stash for 1F1B
+                  schedules, priced as the DCN stage hop in series with the
+                  backing store.  Training with ``--pipeline`` builds this
+                  tier implicitly over whatever backing policy is set.
     placement: "bw_aware" stripes a stash across *both* mesh axes (paper
       Fig. 10 BW_AWARE, maximum link utilization); "local" stripes across the
       model axis only (LOCAL: one neighbour, half the links).
@@ -62,6 +67,34 @@ class MemoryPlan:
         assert self.compress in ("none",) + registered_codecs(), (
             self.compress, registered_codecs())
         assert self.opt_state_bits in (32, 8), self.opt_state_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """Pipeline-parallel training over the pod axis (parallel/pipeline.py).
+
+    schedule: a registered pipeline schedule — "gpipe" (all microbatch
+      activations implicitly live per stage) or "1f1b" (in-flight bounded
+      by the stage count; stage inputs stashed through the
+      PipelineStageTier).  Registry-extensible via
+      parallel.pipeline.register_schedule.
+    n_micro: microbatches per step; 0 lets the planner pick it by trading
+      the bubble term (S-1)/(M+S-1) against predicted stash stalls
+      (core.policy.plan_memory).
+    n_stages: pipeline stages; 0 resolves to the pipe mesh's axis size.
+    """
+
+    enabled: bool = False
+    schedule: str = "1f1b"           # gpipe | 1f1b (registry-extensible)
+    n_micro: int = 0                 # 0 -> planner-chosen
+    n_stages: int = 0                # 0 -> pipe mesh axis size
+    axis_name: str = "pod"
+
+    def validate(self) -> None:
+        from repro.parallel.pipeline import registered_schedules
+        assert self.schedule in registered_schedules(), (
+            self.schedule, registered_schedules())
+        assert self.n_micro >= 0 and self.n_stages >= 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -313,3 +346,4 @@ class RunConfig:
     mesh: MeshPlan = SINGLE_POD
     memory: MemoryPlan = MemoryPlan()
     train: TrainConfig = TrainConfig()
+    pipeline: PipelinePlan = PipelinePlan()

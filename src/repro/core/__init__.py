@@ -17,25 +17,28 @@ from repro.core.compress import (fp8_compress, fp8_decompress,
                                  int8_ef_quantize, int8_dequantize)
 from repro.core.dag import LayerDAG, LayerNode, build_dag, model_flops
 from repro.core.offload import maybe_offload, offload_layer, stash, fetch
-from repro.core.policy import plan_memory, fetch_bandwidth, summarize
+from repro.core.policy import (PipelineDecision, fetch_bandwidth,
+                               micro_candidates, plan_memory, summarize)
 from repro.core.pool import PoolAxes, PoolAccountant, pool_spec, pool_report
 from repro.core.runtime import MemoryRuntime, TierTraffic
 from repro.core.tiers import (Codec, CompressedTier, DeviceTier, HostTier,
-                              MemoryTier, PooledHbmTier, TierSpec,
-                              TransferHints, build_tier, get_codec,
-                              register_codec, register_tier,
-                              registered_policies)
+                              MemoryTier, PipelineStageTier, PooledHbmTier,
+                              TierSpec, TransferHints, build_stage_tier,
+                              build_tier, get_codec, register_codec,
+                              register_tier, registered_policies)
 from repro.core.vdnn import VdnnContext, stash_fraction, split_layers
 
 __all__ = [
     "fp8_compress", "fp8_decompress", "int8_ef_quantize", "int8_dequantize",
     "LayerDAG", "LayerNode", "build_dag", "model_flops",
     "maybe_offload", "offload_layer", "stash", "fetch",
-    "plan_memory", "fetch_bandwidth", "summarize",
+    "PipelineDecision", "plan_memory", "fetch_bandwidth", "micro_candidates",
+    "summarize",
     "PoolAxes", "PoolAccountant", "pool_spec", "pool_report",
     "MemoryRuntime", "TierTraffic",
     "Codec", "CompressedTier", "DeviceTier", "HostTier", "MemoryTier",
-    "PooledHbmTier", "TierSpec", "TransferHints", "build_tier", "get_codec",
+    "PipelineStageTier", "PooledHbmTier", "TierSpec", "TransferHints",
+    "build_stage_tier", "build_tier", "get_codec",
     "register_codec", "register_tier", "registered_policies",
     "VdnnContext", "stash_fraction", "split_layers",
 ]

@@ -22,14 +22,21 @@ The planner costs candidate placements through the
 the transfer, ``tier.account()``/``tier.capacity()`` maintain the boot-time
 memory map — so a new tier (host+pool spill, zstd codec, ...) is priced
 without touching this module.
+
+Pipeline training extends the same cost model: given a
+:class:`~repro.configs.base.PipelinePlan`, :func:`plan_memory` jointly
+chooses ``n_micro`` and the per-stage KEEP/POOL/RECOMPUTE split by adding
+the schedule's bubble term ``(S-1)/(M+S-1) * step_time`` against the
+predicted stash stalls of M per-microbatch transfers (each paying the DCN
+hop latency) — one cost model for the whole bubble-vs-pool-traffic trade.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro import hw
-from repro.configs.base import MemoryPlan, MeshPlan
+from repro.configs.base import MemoryPlan, MeshPlan, PipelinePlan
 from repro.core.dag import LayerDAG
 from repro.core.pool import PoolAccountant
 from repro.core.tiers import MemoryTier, build_tier
@@ -44,6 +51,22 @@ class Decision:
     est_stall_s: float           # predicted unhidden transfer time
 
 
+@dataclasses.dataclass(frozen=True)
+class PipelineDecision:
+    """The planner's bubble-vs-stall verdict for one pipeline run."""
+
+    schedule: str
+    n_stages: int
+    n_micro: int                 # chosen (or forced) microbatch count
+    bubble_s: float              # (S-1)/(M+S-1) * step_time
+    stall_s: float               # predicted unhidden stage stash/fetch time
+    act_wire_bytes: float = 0.0  # stash+fetch bytes through the stage tier
+
+    @property
+    def total_s(self) -> float:
+        return self.bubble_s + self.stall_s
+
+
 @dataclasses.dataclass
 class MemoryPlanReport:
     decisions: List[Decision]
@@ -52,6 +75,7 @@ class MemoryPlanReport:
     budget_bytes: float
     tier: str = "pooled_hbm"
     host_bytes: float = 0.0
+    pipeline: Optional[PipelineDecision] = None
 
     @property
     def fits(self) -> bool:
@@ -75,71 +99,159 @@ def fetch_bandwidth(plan: MeshPlan, memory: MemoryPlan,
     return build_tier(memory, ShardingPlanner(plan)).bandwidth(plan, chip)
 
 
+def micro_candidates(global_batch: int, n_stages: int,
+                     cap: int = 16) -> List[int]:
+    """Feasible n_micro values: divisors of the global batch (a microbatch
+    must tile the batch dim) of at least ``n_stages`` — fewer microbatches
+    than stages leaves stages idle most of the schedule — largest ``cap``
+    of them.  Falls back to all divisors when none reach the stage count."""
+    divs = [m for m in range(1, max(1, global_batch) + 1)
+            if global_batch % m == 0]
+    divs = [m for m in divs if m >= max(1, n_stages)] or divs
+    return divs[-cap:] if len(divs) > cap else divs
+
+
 def plan_memory(dag: LayerDAG, plan: MeshPlan, memory: MemoryPlan,
                 chip: hw.Chip = hw.TPU_V5E,
                 model_state_bytes: float = 0.0,
-                tier: Optional[MemoryTier] = None) -> MemoryPlanReport:
+                tier: Optional[MemoryTier] = None,
+                pipeline: Optional[PipelinePlan] = None,
+                n_micro_candidates: Optional[Sequence[int]] = None
+                ) -> MemoryPlanReport:
     """Run the planner over a layer DAG.
 
     model_state_bytes: global bytes of params+optimizer state (FSDP-sharded
     over the pool, so they cost /pool_size per device).
     tier: the backing store to cost POOL decisions against; resolved from
-    ``memory`` via the tier registry when not provided.
+    ``memory`` via the tier registry when not provided.  Pipeline runs pass
+    the :class:`~repro.core.tiers.PipelineStageTier` here.
+    pipeline: when given (and enabled), sweep ``n_micro_candidates`` (or the
+    forced ``pipeline.n_micro``) and pick the microbatch count minimizing
+    bubble + stash stalls; the verdict lands in ``report.pipeline``.
     """
     if tier is None:
         tier = build_tier(memory, ShardingPlanner(plan))
     n_dev = plan.num_devices
-    acct = PoolAccountant(plan, memory)
     bw = tier.bandwidth(plan, chip)
     ratio = tier.payload_ratio()
     eff_flops = n_dev * chip.peak_flops
-
-    # state (params + moments) is pooled via FSDP
-    state_per_dev = model_state_bytes / (acct.pool_devices
-                                         if memory.pool_params else 1)
-    acct.alloc_local(state_per_dev)
-    decisions: List[Decision] = []
 
     sched = dag.schedule()
     # largest reuse distance first — best eviction victims
     order = sorted(range(len(sched)), key=lambda j: -sched[j][2])
     stash_all = tier.stash_all and tier.offloads
-
-    # Pass 1: keep everything resident, then evict until it fits (auto), or
-    # stash everything (mcdla/host — the paper's stress-test policies).
     per_dev_saved = [b / n_dev for (_, b, _) in sched]
-    for b in per_dev_saved:
-        acct.alloc_local(b)
 
-    for j in order:
-        i, bytes_g, window_flops = sched[j]
-        if not stash_all and acct.fits:
-            decisions.append(Decision(i, "keep", bytes_g, 0.0))
-            continue
-        layer = dag.layers[i]
-        xfer = 2.0 * (bytes_g * ratio) / (bw * n_dev)     # stash + fetch
-        recomp = layer.flops_fwd / eff_flops
-        window = window_flops / eff_flops
-        if memory.recompute_cheap and recomp < xfer:
-            decisions.append(Decision(i, "recompute", bytes_g, 0.0))
-            acct.alloc_local(-per_dev_saved[j])
+    def run_pass(n_micro: int = 1, inflight_frac: float = 0.0,
+                 hop_lat: float = 0.0, force_keep: bool = False):
+        """One KEEP/POOL/RECOMPUTE pass.
+
+        Non-pipelined (the defaults): one transfer per layer, hidden
+        inside the reuse-distance window — exactly the original model.
+        Pipelined (``n_micro > 1`` or ``hop_lat > 0``): M per-microbatch
+        transfers, each paying ``hop_lat`` twice (stash+fetch over the
+        stage hop) and each hiding only behind the layer's own
+        per-microbatch compute — the steady-state 1F1B tick, where the
+        full-step reuse window no longer exists.  ``inflight_frac`` of a
+        pooled activation stays device-resident (the schedule's in-flight
+        window).
+        """
+        acct = PoolAccountant(plan, memory)
+        # state (params + moments) is pooled via FSDP
+        acct.alloc_local(model_state_bytes / (acct.pool_devices
+                                              if memory.pool_params else 1))
+        decisions: List[Decision] = []
+        # Pass 1: keep everything resident, then evict until it fits
+        # (auto), or stash everything (mcdla/host — the paper's
+        # stress-test policies).
+        for b in per_dev_saved:
+            acct.alloc_local(b)
+        M = max(1, n_micro)
+        pipelined = n_micro > 1 or hop_lat > 0.0
+        for j in order:
+            i, bytes_g, window_flops = sched[j]
+            if force_keep or (not stash_all and acct.fits):
+                decisions.append(Decision(i, "keep", bytes_g, 0.0))
+                continue
+            layer = dag.layers[i]
+            # stash + fetch, per microbatch (latency paid per transfer)
+            xfer_micro = (2.0 * (bytes_g * ratio) / (M * bw * n_dev)
+                          + 2.0 * hop_lat)
+            if pipelined:
+                # steady-state tick: the transfer hides behind the layer's
+                # own fwd+bwd compute for one microbatch
+                window_micro = 3.0 * layer.flops_fwd / (M * eff_flops)
+            else:
+                window_micro = window_flops / (M * eff_flops)
+            recomp = layer.flops_fwd / eff_flops
+            if memory.recompute_cheap and recomp < M * xfer_micro:
+                decisions.append(Decision(i, "recompute", bytes_g, 0.0))
+                acct.alloc_local(-per_dev_saved[j])
+            else:
+                stall = M * max(0.0, xfer_micro - window_micro)
+                decisions.append(Decision(i, "pool", bytes_g, stall))
+                acct.alloc_local(-per_dev_saved[j] * (1.0 - inflight_frac))
+                tier.account(acct, bytes_g)
+        decisions.sort(key=lambda d: d.layer)
+        return decisions, acct
+
+    if pipeline is None or not pipeline.enabled:
+        decisions, acct = run_pass()
+        return MemoryPlanReport(decisions, acct.local_bytes,
+                                acct.pooled_bytes, acct.budget,
+                                tier=tier.describe(),
+                                host_bytes=acct.host_bytes)
+
+    # ---- joint n_micro x placement sweep (bubble vs stash stalls) --------
+    from repro.parallel.pipeline import get_schedule
+    sch = get_schedule(pipeline.schedule)
+    S = max(1, pipeline.n_stages)
+    step_time = dag.total_flops() / eff_flops
+    if pipeline.n_micro > 0:
+        candidates = [pipeline.n_micro]
+    else:
+        # no batch info -> sweep powers-of-two multiples of the stage count
+        candidates = sorted({max(1, m)
+                             for m in (n_micro_candidates
+                                       or [S * 2 ** k for k in range(6)])})
+    best = None
+    # non-stashing schedules (gpipe): decisions are M-independent — every
+    # microbatch activation stays implicitly live, no stage-tier traffic,
+    # the whole cost is the bubble.  One pass serves the whole sweep.
+    keep_pass = None if sch.stash_saved else run_pass(force_keep=True)
+    for M in candidates:
+        if sch.stash_saved:
+            decisions, acct = run_pass(
+                n_micro=M, inflight_frac=sch.inflight(S, M) / M,
+                hop_lat=hw.DCN_LATENCY_S)
+            stall = sum(d.est_stall_s for d in decisions)
         else:
-            stall = max(0.0, xfer - window)
-            decisions.append(Decision(i, "pool", bytes_g, stall))
-            acct.alloc_local(-per_dev_saved[j])
-            tier.account(acct, bytes_g)
-
-    decisions.sort(key=lambda d: d.layer)
+            decisions, acct = keep_pass
+            stall = 0.0
+        bubble = sch.bubble_fraction(S, M) * step_time
+        wire = 2.0 * ratio * sum(d.saved_bytes for d in decisions
+                                 if d.action == "pool")
+        verdict = PipelineDecision(pipeline.schedule, S, M, bubble, stall,
+                                   act_wire_bytes=wire)
+        if best is None or verdict.total_s < best[0].total_s:
+            best = (verdict, decisions, acct)
+    verdict, decisions, acct = best
     return MemoryPlanReport(decisions, acct.local_bytes, acct.pooled_bytes,
                             acct.budget, tier=tier.describe(),
-                            host_bytes=acct.host_bytes)
+                            host_bytes=acct.host_bytes, pipeline=verdict)
 
 
 def summarize(report: MemoryPlanReport) -> str:
-    return (f"tier={report.tier} "
-            f"keep={report.count('keep')} pool={report.count('pool')} "
-            f"recompute={report.count('recompute')} "
-            f"resident={report.resident_bytes_per_dev/1e9:.2f}GB "
-            f"pooled={report.pooled_bytes_per_dev/1e9:.2f}GB "
-            f"budget={report.budget_bytes/1e9:.0f}GB fits={report.fits} "
-            f"stall={report.total_stall()*1e3:.2f}ms")
+    s = (f"tier={report.tier} "
+         f"keep={report.count('keep')} pool={report.count('pool')} "
+         f"recompute={report.count('recompute')} "
+         f"resident={report.resident_bytes_per_dev/1e9:.2f}GB "
+         f"pooled={report.pooled_bytes_per_dev/1e9:.2f}GB "
+         f"budget={report.budget_bytes/1e9:.0f}GB fits={report.fits} "
+         f"stall={report.total_stall()*1e3:.2f}ms")
+    if report.pipeline is not None:
+        p = report.pipeline
+        s += (f" pipeline[{p.schedule} S={p.n_stages}] n_micro={p.n_micro} "
+              f"bubble={p.bubble_s*1e3:.2f}ms stall={p.stall_s*1e3:.2f}ms "
+              f"act_wire={p.act_wire_bytes/1e9:.2f}GB")
+    return s

@@ -74,13 +74,18 @@ class MemoryRuntime:
     def __init__(self, plan: MeshPlan, memory: MemoryPlan,
                  mesh: Optional[Mesh] = None,
                  planner: Optional[ShardingPlanner] = None,
-                 chip: hw.Chip = hw.TPU_V5E):
+                 chip: hw.Chip = hw.TPU_V5E,
+                 tier: Optional[MemoryTier] = None):
         self.plan = plan
         self.memory = memory
         self.mesh = mesh
         self.chip = chip
         self.planner = planner if planner is not None else ShardingPlanner(plan)
-        self.tier: MemoryTier = build_tier(memory, self.planner, mesh)
+        # ``tier`` overrides the registry resolution — used for runtimes
+        # whose tier is built out-of-band (the pipeline stage runtime wraps
+        # the configured backing store in a PipelineStageTier).
+        self.tier: MemoryTier = tier if tier is not None \
+            else build_tier(memory, self.planner, mesh)
         self._traffic: Dict[str, TierTraffic] = {}
 
     # ------------------------------------------------------------------
@@ -286,13 +291,65 @@ class MemoryRuntime:
         return f
 
     # ------------------------------------------------------------------
+    # pipeline stages: whole stage-input pytrees through the stage tier
+    def wrap_stage(self, stage_fn: Callable, name: str = "stage") -> Callable:
+        """Wrap ``stage_fn(params, tree) -> tree`` so every float leaf of
+        the input tree is saved-for-backward through this runtime's tier.
+
+        The pipeline-schedule analogue of :meth:`wrap_layer`: a 1F1B stage
+        stashes its microbatch input when it runs the forward and fetches
+        it right before the backward, metered as ``act_stash`` /
+        ``act_fetch`` so :meth:`traffic_report` covers training pipelines.
+        The stage body is recomputed from the fetched input (same
+        footnote-4 behaviour as the layer wrapper)."""
+        if not self.offloads:
+            return stage_fn
+        runtime = self
+
+        def hints_for(dtype=None) -> TransferHints:
+            return TransferHints(compute_spec=None, dtype=dtype, name=name)
+
+        def is_float(leaf) -> bool:
+            return (isinstance(leaf, (jax.Array, jnp.ndarray)) and
+                    jnp.issubdtype(jnp.result_type(leaf), jnp.inexact))
+
+        @jax.custom_vjp
+        def f(params, tree):
+            return stage_fn(params, tree)
+
+        def f_fwd(params, tree):
+            y = stage_fn(params, tree)
+            saved = jax.tree.map(
+                lambda leaf: StashedLeaf(
+                    runtime.stash(leaf, hints_for(), direction="act_stash"),
+                    jnp.zeros((), leaf.dtype)) if is_float(leaf) else leaf,
+                tree)
+            return y, (params, saved)
+
+        def f_bwd(res, gy):
+            params, saved = res
+            tree = jax.tree.map(
+                lambda leaf: runtime.fetch(
+                    leaf.payload, hints_for(dtype=leaf.witness.dtype),
+                    direction="act_fetch")
+                if isinstance(leaf, StashedLeaf) else leaf,
+                saved, is_leaf=lambda l: isinstance(l, StashedLeaf))
+            _, vjp = jax.vjp(stage_fn, params, tree)
+            return vjp(gy)
+
+        f.defvjp(f_fwd, f_bwd)
+        return f
+
+    # ------------------------------------------------------------------
     # planning (KEEP/POOL/RECOMPUTE through the tier cost contract)
     def plan_report(self, dag: LayerDAG,
-                    model_state_bytes: float = 0.0):
+                    model_state_bytes: float = 0.0,
+                    pipeline=None, n_micro_candidates=None):
         return policy_mod.plan_memory(dag, self.plan, self.memory,
                                       chip=self.chip,
                                       model_state_bytes=model_state_bytes,
-                                      tier=self.tier)
+                                      tier=self.tier, pipeline=pipeline,
+                                      n_micro_candidates=n_micro_candidates)
 
     def stash_fraction(self, dag: LayerDAG,
                        model_state_bytes: float = 0.0) -> float:
@@ -320,6 +377,26 @@ class MemoryRuntime:
             dag, model_state_bytes=cfg.param_count() * opt_bytes)
         k = int(round(n_groups * frac))
         return max(0, min(n_groups, k))
+
+
+# ---------------------------------------------------------------------------
+class StashedLeaf:
+    """Residual marker for one stage-tier-stashed tensor: the tier payload
+    plus a zero-size dtype witness (residuals must be JAX types).  A pytree
+    node, so custom_vjp residual trees carry the stashed/raw distinction
+    structurally."""
+
+    __slots__ = ("payload", "witness")
+
+    def __init__(self, payload, witness):
+        self.payload = payload
+        self.witness = witness
+
+
+jax.tree_util.register_pytree_node(
+    StashedLeaf,
+    lambda s: ((s.payload, s.witness), None),
+    lambda _, children: StashedLeaf(*children))
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,11 @@ Shipped tiers (DESIGN.md §3):
 * :class:`CompressedTier` — decorator adding the memory-node's "optional
   compression ASIC" (§III-A) to any tier; codecs are registry-extensible
   (fp8 ships; int8/zstd-style codecs slot in via :func:`register_codec`).
+* :class:`SpillTier`      — decorator: primary tier until its capacity
+  contract is spent, then overflow to a cheaper store.
+* :class:`PipelineStageTier` — decorator: per-stage activation stash for
+  pipeline schedules (1F1B), priced as the DCN stage hop in series with
+  the backing store (ROADMAP "pipeline-parallel stage tier").
 
 Policies map to tiers through :func:`build_tier` — the ONLY place in the
 codebase that branches on ``MemoryPlan.policy`` strings.  Everything else
@@ -482,6 +487,86 @@ class SpillTier(MemoryTier):
 
 
 # ---------------------------------------------------------------------------
+class PipelineStageTier(MemoryTier):
+    """Decorator: per-stage activation backing store for pipeline schedules.
+
+    The training half of the tier unification (ROADMAP "pipeline-parallel
+    stage tier"): a 1F1B schedule's saved stage inputs leave the stage's
+    HBM for a backing store instead of staying implicitly live, so the
+    KEEP/POOL/RECOMPUTE planner can trade pipeline bubbles against pool
+    traffic with the same cost contract it prices every other tier with.
+
+    * ``bandwidth`` — the DCN stage hop in *series* with the backing
+      store: bytes cross the inter-stage link and then the inner tier's
+      stash collective, so the harmonic composition bounds both.
+    * ``capacity`` — each stage addresses its 1/n_stages share of the
+      backing store (stages stash concurrently into the same pool).
+    * data path — delegates to the inner tier; composes with
+      :class:`CompressedTier` / :class:`SpillTier` like any other
+      decorator (``build_stage_tier`` stacks the configured codec).
+    """
+
+    kind = "pipeline_stage"
+
+    def __init__(self, inner: MemoryTier, n_stages: int = 1):
+        super().__init__(inner.planner, inner.mesh, inner.memory,
+                         stash_all=inner.stash_all)
+        self.inner = inner
+        self.n_stages = max(1, n_stages)
+
+    def set_stages(self, n_stages: int) -> None:
+        self.n_stages = max(1, n_stages)
+
+    def stash(self, x: jax.Array, hints: TransferHints) -> Payload:
+        return self.inner.stash(x, hints)
+
+    def fetch(self, payload: Payload, hints: TransferHints) -> jax.Array:
+        return self.inner.fetch(payload, hints)
+
+    def bandwidth(self, plan: MeshPlan, chip: hw.Chip = hw.TPU_V5E) -> float:
+        inner_bw = self.inner.bandwidth(plan, chip)
+        if inner_bw <= 0:
+            return hw.DCN_BW
+        return 1.0 / (1.0 / hw.DCN_BW + 1.0 / inner_bw)
+
+    def capacity(self, accountant: PoolAccountant) -> float:
+        return self.inner.capacity(accountant) / self.n_stages
+
+    def account(self, accountant: PoolAccountant, nbytes: float) -> None:
+        self.inner.account(accountant, nbytes)
+
+    @property
+    def offloads(self) -> bool:
+        return self.inner.offloads
+
+    def payload_ratio(self) -> float:
+        return self.inner.payload_ratio()
+
+    def wire_ratio(self, x: jax.Array, hints: TransferHints) -> float:
+        return self.inner.wire_ratio(x, hints)
+
+    def describe(self) -> str:
+        return f"{self.kind}[{self.n_stages}x{self.inner.describe()}]"
+
+
+def build_stage_tier(memory: MemoryPlan, planner: ShardingPlanner,
+                     mesh: Optional[Mesh] = None,
+                     n_stages: int = 1) -> MemoryTier:
+    """The stage tier for a pipeline run: the memory plan's own backing
+    store (pooled HBM when the policy keeps everything resident) behind the
+    per-stage DCN hop, with the configured codec stacked on top."""
+    backing = memory.policy if memory.policy not in ("none", "pipeline") \
+        else "mcdla"
+    binding = _TIER_REGISTRY[backing]
+    inner = binding.factory(memory, planner, mesh)
+    inner.stash_all = binding.stash_all
+    tier: MemoryTier = PipelineStageTier(inner, n_stages=n_stages)
+    if memory.compress != "none":
+        tier = CompressedTier(tier, memory.compress)
+    return tier
+
+
+# ---------------------------------------------------------------------------
 # tier registry: MemoryPlan.policy -> tier.  The one sanctioned policy-string
 # dispatch in the codebase (everything else goes through the tier object).
 TierFactory = Callable[[MemoryPlan, ShardingPlanner, Optional[Mesh]],
@@ -541,6 +626,12 @@ register_tier("auto",
 register_tier("spill",
               lambda m, p, mesh: SpillTier(PooledHbmTier(p, mesh, m),
                                            HostTier(p, mesh, m)),
+              stash_all=True)
+# "pipeline": the pipeline-stage tier over pooled HBM (stage count is
+# late-bound by the run via set_stages; build_stage_tier is the usual way
+# to construct it with the right backing store + codec stack).
+register_tier("pipeline",
+              lambda m, p, mesh: PipelineStageTier(PooledHbmTier(p, mesh, m)),
               stash_all=True)
 
 

@@ -72,6 +72,12 @@ PAPER_MEMNODE = MemNode(
     link_bw=25e9,
 )
 
+# inter-pod data-center network: the pod-axis pipeline's per-stage hop
+# (parallel/pipeline.py ppermute).  Per-transfer latency matters for the
+# bubble-vs-stall planner: many small microbatches pay it per transfer.
+DCN_BW = 25e9                  # bytes/s per device across pods
+DCN_LATENCY_S = 5e-6           # per-transfer latency of one DCN hop
+
 PCIE_GEN3_BW = 16e9            # x16 per direction (DC-DLA host link)
 PCIE_GEN4_BW = 32e9            # sensitivity study (paper §V-B)
 

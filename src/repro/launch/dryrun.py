@@ -280,6 +280,43 @@ def _lower_one(cfg, shape_name: str, *, multi_pod: bool, policy: str,
 
 
 # ---------------------------------------------------------------------------
+def pipeline_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                  policy: str, placement: str, compress: str, opt_bits: int,
+                  pipeline) -> Dict:
+    """Analytic stage-tier report for one cell: the planner's joint
+    n_micro x KEEP/POOL/RECOMPUTE verdict plus the per-stage act traffic
+    the 1F1B schedule would push through the pipeline stage tier.  (The
+    pipelined step itself is a shard_map over a dedicated stage mesh —
+    the dry-run surfaces the tier contract, not a second compile.)"""
+    from repro.core.dag import build_dag
+    from repro.core.policy import micro_candidates, plan_memory
+    from repro.core.tiers import build_stage_tier
+    from repro.parallel.sharding import ShardingPlanner
+
+    cfg = get_arch(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    plan = plan_for(multi_pod=multi_pod)
+    memory = MemoryPlan(policy=policy, placement=placement,
+                        compress=compress, opt_state_bits=opt_bits)
+    planner = ShardingPlanner(plan)
+    tier = build_stage_tier(memory, planner, None,
+                            n_stages=pipeline.n_stages)
+    report = plan_memory(
+        build_dag(cfg, shape), plan, memory, tier=tier, pipeline=pipeline,
+        n_micro_candidates=micro_candidates(shape.global_batch,
+                                            pipeline.n_stages))
+    pd = report.pipeline
+    return {
+        "schedule": pd.schedule, "n_stages": pd.n_stages,
+        "n_micro": pd.n_micro, "bubble_s": pd.bubble_s,
+        "stall_s": pd.stall_s, "act_wire_bytes": pd.act_wire_bytes,
+        "act_wire_bytes_per_stage":
+            pd.act_wire_bytes / max(pd.n_stages, 1),
+        "tier": tier.describe(),
+    }
+
+
+# ---------------------------------------------------------------------------
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="all")
@@ -292,6 +329,12 @@ def main() -> int:
     ap.add_argument("--compress", default="none", choices=["none", "fp8"])
     ap.add_argument("--opt-bits", type=int, default=32, choices=[32, 8])
     ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="attach the analytic pipeline stage-tier report "
+                         "(bubble-vs-stall verdict + per-stage traffic)")
+    ap.add_argument("--pipeline-schedule", default="1f1b")
+    ap.add_argument("--pipeline-stages", type=int, default=2)
+    ap.add_argument("--n-micro", type=int, default=0)
     ap.add_argument("--no-seq-parallel", action="store_true")
     ap.add_argument("--no-probes", action="store_true",
                     help="skip the loop-aware cost probes (faster)")
@@ -321,6 +364,16 @@ def main() -> int:
                                seq_parallel=not args.no_seq_parallel,
                                probes=not args.no_probes,
                                opt_bits=args.opt_bits, mesh=mesh)
+                if args.pipeline and shape.mode == "train":
+                    from repro.configs.base import PipelinePlan
+                    r["pipeline"] = pipeline_cell(
+                        arch, shape.name, multi_pod=args.multi_pod,
+                        policy=args.policy, placement=args.placement,
+                        compress=args.compress, opt_bits=args.opt_bits,
+                        pipeline=PipelinePlan(
+                            enabled=True, schedule=args.pipeline_schedule,
+                            n_micro=args.n_micro,
+                            n_stages=args.pipeline_stages))
                 results.append(r)
                 tr = r.get("traffic", {})
                 print(f"[ok]   {tag}: compile={r['compile_s']}s "
@@ -330,6 +383,15 @@ def main() -> int:
                       f"coll/dev={r['collective_wire_bytes_per_dev']/1e9:.3f}GB "
                       f"tier[{tr.get('tier', '?')}]="
                       f"{tr.get('wire_bytes_total', 0.0)/1e9:.3f}GB/group")
+                if "pipeline" in r:
+                    p = r["pipeline"]
+                    print(f"       pipeline[{p['schedule']} "
+                          f"S={p['n_stages']}]: n_micro={p['n_micro']} "
+                          f"bubble={p['bubble_s']*1e3:.2f}ms "
+                          f"stall={p['stall_s']*1e3:.2f}ms "
+                          f"act/stage="
+                          f"{p['act_wire_bytes_per_stage']/1e9:.3f}GB "
+                          f"tier[{p['tier']}]")
             except Exception as e:  # noqa: BLE001 — a failed cell is a bug
                 results.append({"arch": arch, "shape": shape.name,
                                 "mesh": "2x16x16" if args.multi_pod

@@ -11,10 +11,13 @@ import dataclasses
 import logging
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
-from repro.configs import (MemoryPlan, RunConfig, SHAPES_BY_NAME,
-                           TrainConfig, get_arch)
+from repro.configs import (MemoryPlan, PipelinePlan, RunConfig,
+                           SHAPES_BY_NAME, TrainConfig, get_arch)
 from repro.configs.base import MeshPlan, ShapeConfig
+from repro.core.policy import summarize
 from repro.data.pipeline import Prefetcher, SyntheticLM
 from repro.launch.mesh import make_host_mesh, make_production_mesh, plan_for
 from repro.models.model import build_model
@@ -37,6 +40,16 @@ def main() -> None:
     ap.add_argument("--compress", default="none")
     ap.add_argument("--opt-bits", type=int, default=32)
     ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="run the pod axis as a pipeline of layer stages "
+                         "(parallel/pipeline.py schedule registry)")
+    ap.add_argument("--pipeline-schedule", default="1f1b",
+                    help="registered schedule: gpipe | 1f1b")
+    ap.add_argument("--n-micro", type=int, default=0,
+                    help="microbatches per step (0: planner-chosen by the "
+                         "bubble-vs-stall cost model)")
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="pipeline stages (0: all local devices)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--log-every", type=int, default=10)
@@ -69,6 +82,29 @@ def main() -> None:
         batch = args.batch or sh.global_batch
         seq = args.seq or sh.seq_len
 
+    pipeline = PipelinePlan()
+    pipe_mesh = None
+    if args.pipeline:
+        # the pipeline owns the pod axis: stages on a dedicated 1D mesh,
+        # the model itself unsharded (stage stash placement is the tier's)
+        if args.multi_pod:
+            raise SystemExit("--pipeline replaces pod-DP with pipeline "
+                             "stages; a multi-pod pipeline+DP composition "
+                             "is not implemented (see ROADMAP)")
+        devs = jax.devices()
+        n_stages = args.pipeline_stages or len(devs)
+        if len(devs) < n_stages:
+            raise SystemExit(f"--pipeline-stages {n_stages} needs that many "
+                             f"devices (have {len(devs)})")
+        if n_stages > 1:
+            pipe_mesh = Mesh(np.array(devs[:n_stages]), ("pod",))
+        mesh = None
+        plan = MeshPlan((1,), ("data",))
+        pipeline = PipelinePlan(enabled=True,
+                                schedule=args.pipeline_schedule,
+                                n_micro=args.n_micro, n_stages=n_stages)
+        pipeline.validate()
+
     shape = ShapeConfig("train", seq, batch, "train")
     tc = TrainConfig(total_steps=args.steps, warmup_steps=args.steps // 10,
                      learning_rate=args.lr, grad_accum=args.accum,
@@ -78,8 +114,11 @@ def main() -> None:
     memory = MemoryPlan(policy=args.policy, placement=args.placement,
                         compress=args.compress, opt_state_bits=args.opt_bits)
     run = RunConfig(model=cfg, shape=shape, mesh=plan, memory=memory,
-                    train=tc)
-    model = build_model(run, mesh=mesh)
+                    train=tc, pipeline=pipeline)
+    model = build_model(run, mesh=mesh, pipe_mesh=pipe_mesh)
+    if model.pipeline_report is not None:
+        logging.getLogger(__name__).info(
+            "pipeline plan: %s", summarize(model.pipeline_report))
     data = Prefetcher(SyntheticLM(cfg, batch=batch, seq=seq, seed=tc.seed))
     handler = FaultHandler()
     try:

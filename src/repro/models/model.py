@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (MemoryPlan, MeshPlan, ModelConfig, RunConfig,
-                                ShapeConfig)
+from repro.configs.base import (MemoryPlan, MeshPlan, ModelConfig,
+                                PipelinePlan, RunConfig, ShapeConfig)
 from repro.core.runtime import MemoryRuntime
 from repro.models import frontends, transformer as tfm
 from repro.models.layers import ModelContext, chunked_cross_entropy
@@ -33,12 +33,31 @@ class Model:
     memory: MemoryPlan
     mesh: Optional[Mesh] = None
     stash_groups: Optional[int] = None     # None -> stash all (mcdla)
+    pipeline: Optional[PipelinePlan] = None
+    pipe_mesh: Optional[Mesh] = None       # dedicated stage-axis mesh
 
     def __post_init__(self):
         self.planner = ShardingPlanner(self.plan)
         self.dtype = jnp.dtype(self.cfg.dtype)
         self.runtime = MemoryRuntime(self.plan, self.memory, self.mesh,
                                      planner=self.planner)
+        # pipeline runs get a second runtime whose tier is the stage tier:
+        # the schedule's stash/fetch hooks meter act_stash/act_fetch there,
+        # so training traffic shows up in a traffic_report like serving's.
+        self.stage_runtime: Optional[MemoryRuntime] = None
+        self.pipeline_report = None
+        if self.pipeline is not None and self.pipeline.enabled:
+            n_stages = self.pipeline.n_stages or (
+                self.pipe_mesh.shape[self.pipeline.axis_name]
+                if self.pipe_mesh is not None else 1)
+            self.pipeline = dataclasses.replace(self.pipeline,
+                                                n_stages=n_stages)
+            from repro.core.tiers import build_stage_tier
+            tier = build_stage_tier(self.memory, self.planner, None,
+                                    n_stages=n_stages)
+            self.stage_runtime = MemoryRuntime(self.plan, self.memory, None,
+                                               planner=self.planner,
+                                               tier=tier)
 
     # ------------------------------------------------------------------
     def ctx(self, mode: str) -> ModelContext:
@@ -67,10 +86,16 @@ class Model:
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         cfg = self.cfg
         ctx = self.ctx("train")
-        h, aux = tfm.forward_train(
-            params, ctx, batch["tokens"], batch["positions"],
-            frames=batch.get("frames"), patches=batch.get("patches"),
-            stash_groups=self.stash_groups)
+        if self.pipeline is not None and self.pipeline.enabled:
+            h, aux = tfm.forward_train_pipelined(
+                params, ctx, batch["tokens"], batch["positions"],
+                pipeline=self.pipeline, pipe_mesh=self.pipe_mesh,
+                stage_runtime=self.stage_runtime)
+        else:
+            h, aux = tfm.forward_train(
+                params, ctx, batch["tokens"], batch["positions"],
+                frames=batch.get("frames"), patches=batch.get("patches"),
+                stash_groups=self.stash_groups)
         table = params["embed"] if cfg.tie_embeddings else params["unembed"]
         # hoist the FSDP (data-axis) gather of the table out of the chunk
         # scan: vocab stays model-sharded, D gathered ONCE (§Perf: was
@@ -167,12 +192,36 @@ class Model:
 
 
 # ---------------------------------------------------------------------------
-def build_model(run: RunConfig, mesh: Optional[Mesh] = None) -> Model:
+def build_model(run: RunConfig, mesh: Optional[Mesh] = None,
+                pipe_mesh: Optional[Mesh] = None) -> Model:
     """Construct the Model for a run, resolving the memory tier's stash
-    split through the MemoryRuntime (cost model for non-stash-all tiers)."""
+    split through the MemoryRuntime (cost model for non-stash-all tiers).
+
+    Pipeline runs (``run.pipeline.enabled``) additionally resolve
+    ``n_micro`` when it is 0: the planner sweeps the feasible microbatch
+    counts and trades the schedule bubble against predicted stage-tier
+    stalls (``core.policy.plan_memory``); the full verdict is kept on
+    ``model.pipeline_report``.
+    """
     cfg, memory, plan = run.model, run.memory, run.mesh
     _, n_groups = tfm.arch_group(cfg)
-    model = Model(cfg=cfg, plan=plan, memory=memory, mesh=mesh)
+    pipeline = run.pipeline if run.pipeline.enabled else None
+    model = Model(cfg=cfg, plan=plan, memory=memory, mesh=mesh,
+                  pipeline=pipeline, pipe_mesh=pipe_mesh)
     model.stash_groups = model.runtime.resolve_stash_groups(
         cfg, run.shape, n_groups)
+    if model.pipeline is not None:
+        from repro.core.dag import build_dag
+        from repro.core.policy import micro_candidates
+        opt_bytes = 2 + (8 if memory.opt_state_bits == 32 else 2) + 4
+        report = model.stage_runtime.plan_report(
+            build_dag(cfg, run.shape),
+            model_state_bytes=cfg.param_count() * opt_bytes,
+            pipeline=model.pipeline,
+            n_micro_candidates=micro_candidates(
+                run.shape.global_batch, model.pipeline.n_stages))
+        model.pipeline_report = report
+        if model.pipeline.n_micro == 0:
+            model.pipeline = dataclasses.replace(
+                model.pipeline, n_micro=report.pipeline.n_micro)
     return model

@@ -384,6 +384,81 @@ def _train_sublayer(ctx, kind, use_rope, p, x, positions, enc_out=None):
 
 
 # ---------------------------------------------------------------------------
+# pipelined train forward: the scanned decoder stack split into contiguous
+# stages over a dedicated pipe mesh axis (parallel/pipeline.py schedules).
+def forward_train_pipelined(params: Params, ctx: ModelContext,
+                            tokens: jax.Array, positions: jax.Array,
+                            pipeline, pipe_mesh,
+                            stage_runtime=None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B,S,D), aux_loss).
+
+    Each pipe-mesh member owns ``n_groups / n_stages`` contiguous layer
+    groups; embed / final-norm / CE run replicated on every member (the
+    pipeline output is broadcast).  The stage's saved activations are
+    placed by the schedule: 1F1B routes them through ``stage_runtime``'s
+    :class:`~repro.core.tiers.PipelineStageTier` (metered as
+    ``act_stash``/``act_fetch``), GPipe keeps them implicitly live.  MoE
+    aux losses are computed per microbatch (like gradient accumulation).
+    """
+    from repro.parallel.pipeline import get_schedule, make_pipelined
+
+    cfg = ctx.cfg
+    group, n_groups = arch_group(cfg)
+    if cfg.is_encoder_decoder or cfg.frontend != "none" or \
+            cfg.mrope_sections:
+        raise ValueError("pipeline schedules support decoder-only stacks "
+                         f"with batch-leading positions (got {cfg.name})")
+    S = pipeline.n_stages or (pipe_mesh.shape[pipeline.axis_name]
+                              if pipe_mesh is not None else 1)
+    if n_groups % max(S, 1) != 0:
+        raise ValueError(f"{n_groups} layer groups do not split into "
+                         f"{S} stages")
+    M = max(1, pipeline.n_micro)
+    B = tokens.shape[0]
+    if B % M != 0:
+        raise ValueError(f"batch {B} not divisible by n_micro {M}")
+
+    x = embed_tokens(params, ctx, tokens)
+
+    def stage_fn(gp, tree):
+        h, pos = tree["h"], tree["positions"]
+
+        def body(carry, g1):
+            h, aux = carry
+            for j, kind in enumerate(group):
+                p = params["shared"] if kind == "shared" else g1[f"sub_{j}"]
+                y, a = _train_sublayer(ctx, kind, True, p, h, pos)
+                # spread the scalar aux over the GLOBAL batch rows so it
+                # rides the pipeline as ordinary activation data and the
+                # final sum is the microbatch MEAN (matching grad-accum
+                # semantics; a load-balance aux is batch-size-invariant,
+                # so summing raw per-microbatch auxes would inflate it M x)
+                h, aux = y, aux + a / B
+            return (h, aux), None
+
+        (h, aux), _ = jax.lax.scan(body, (h, tree["aux"]), gp,
+                                   unroll=_unroll())
+        return {"h": h, "positions": pos, "aux": aux}
+
+    tree = {"h": x, "positions": positions,
+            "aux": jnp.zeros((B,), jnp.float32)}
+    schedule = get_schedule(pipeline.schedule, runtime=stage_runtime)
+    if S <= 1 or pipe_mesh is None:
+        out = schedule.run_local(stage_fn, params["groups"], tree, M)
+    else:
+        stage_params = jax.tree.map(
+            lambda l: l.reshape((S, n_groups // S) + l.shape[1:]),
+            params["groups"])
+        pipe = make_pipelined(pipe_mesh, stage_fn, n_micro=M,
+                              axis_name=pipeline.axis_name,
+                              schedule=schedule)
+        out = pipe(stage_params, tree)
+    h = apply_norm(cfg, params["final_norm"], out["h"])
+    return h, jnp.sum(out["aux"])
+
+
+# ---------------------------------------------------------------------------
 # serve forward (prefill S>1 / decode S==1) against stacked caches
 def forward_serve(params: Params, ctx: ModelContext, tokens: jax.Array,
                   positions: jax.Array, caches: Params,

@@ -1,1 +1,5 @@
+from repro.parallel.pipeline import (PipelineSchedule, accumulate_microbatches,
+                                     get_schedule, make_pipelined,
+                                     pipeline_apply, register_schedule,
+                                     registered_schedules)
 from repro.parallel.sharding import Axes, ShardingPlanner, logical_to_spec

@@ -149,6 +149,62 @@ def simulate(dag: LayerDAG, sys: SystemConfig, parallel: str = "dp",
 
 
 # ---------------------------------------------------------------------------
+def simulate_pipeline(dag: LayerDAG, sys: SystemConfig, n_stages: int,
+                      n_micro: int, schedule: str = "1f1b",
+                      virtualize: bool = True) -> StepResult:
+    """Pipeline-parallel iteration over the paper's system design points.
+
+    The layer DAG splits into ``n_stages`` contiguous stages over device
+    groups of ``n_devices / n_stages``; ``n_micro`` microbatches stream
+    through in T = M + S - 1 ticks (tick = the slowest stage's
+    fwd + bwd per microbatch, bubble = (S-1) ticks).  Under ``1f1b`` each
+    stage's saved microbatch inputs stream through the system's
+    virtualization backing store — the pipeline-stage tier expressed in
+    the DC/HC/MC ``TierSpec`` vocabulary — and a stage stalls when its
+    per-microbatch DMA exceeds the tick; ``gpipe`` keeps activations
+    resident (zero virtualization traffic, the whole cost is the bubble).
+    """
+    S, M = max(1, n_stages), max(1, n_micro)
+    tier = sys.backing_tier
+    stash = schedule == "1f1b" and virtualize and not tier.is_oracle
+    per_stage = max(1, sys.n_devices // S)
+    virt_bw = tier.effective_bw(per_stage, sys.n_sockets)
+    L = dag.num_layers
+    bounds = [round(s * L / S) for s in range(S + 1)]
+
+    def stage_time(s: int) -> float:
+        t = 0.0
+        for l in dag.layers[bounds[s]:bounds[s + 1]]:
+            f = l.flops_fwd / (M * per_stage)
+            by = (l.saved_bytes + l.weight_bytes) / (M * per_stage) * 2
+            t += 3.0 * _compute_time(f, by, sys)       # fwd + 2x bwd
+        return t
+
+    def stage_bytes(s: int) -> float:
+        return sum(l.saved_bytes for l in dag.layers[bounds[s]:bounds[s + 1]]
+                   if not l.cheap) / (M * per_stage)
+
+    tick = max(stage_time(s) for s in range(S))
+    bubble = (S - 1) * tick
+    compute = M * sum(stage_time(s) for s in range(S))
+    virt = 0.0
+    stall = 0.0
+    moved = 0.0
+    if stash:
+        for s in range(S):
+            dma = 2.0 * stage_bytes(s) / virt_bw       # stash + fetch
+            virt += M * dma
+            stall += M * max(0.0, dma - tick)
+            moved += 2.0 * stage_bytes(s) * M * per_stage
+    total = (M + S - 1) * tick + stall
+    cpu_frac = 0.0
+    if tier.uses_cpu and total > 0 and moved > 0:
+        cpu_frac = (moved / total) / (sys.cpu_socket_bw * sys.n_sockets)
+    return StepResult(total=total, compute=compute, sync=bubble, virt=virt,
+                      virt_bytes=moved, cpu_bw_frac=cpu_frac)
+
+
+# ---------------------------------------------------------------------------
 def speedup_table(workloads: Dict[str, LayerDAG], systems,
                   parallel: str = "dp", baseline: str = "DC-DLA"
                   ) -> Dict[str, Dict[str, float]]:

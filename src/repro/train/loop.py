@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
 from repro.models.model import Model
+from repro.parallel.pipeline import accumulate_microbatches
 from repro.train import checkpoint as ckpt_mod
 from repro.train.optimizer import apply_adamw
 from repro.train.train_state import init_state, state_shardings
@@ -25,42 +26,27 @@ def make_train_step(model: Model, tc: TrainConfig
                                   Tuple[Pytree, Dict[str, jax.Array]]]:
     """(state, batch) -> (state, metrics).
 
-    Gradient accumulation: when ``tc.grad_accum > 1`` the batch's leading
-    batch dim is split into microbatches scanned sequentially (activation
-    memory / accum trade-off — one of the §Perf knobs).
+    Microbatching runs on one schedule path (parallel/pipeline.py): a
+    pipeline-enabled model microbatches *inside* its pipelined forward
+    (``model.pipeline.n_micro`` over the stage mesh), while gradient
+    accumulation (``tc.grad_accum > 1``) is the degenerate single-stage
+    schedule — microbatches scanned sequentially with gradients averaged
+    and metrics accumulated across microbatches
+    (:func:`repro.parallel.pipeline.accumulate_microbatches`).
     """
 
     def loss(params, batch):
         return model.loss_fn(params, batch)
 
+    pipelined = (getattr(model, "pipeline", None) is not None
+                 and model.pipeline.enabled)
+
     def grads_of(params, batch):
-        if tc.grad_accum <= 1:
+        if tc.grad_accum <= 1 or pipelined:
             (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(
                 params, batch)
             return g, l, metrics
-        n = tc.grad_accum
-
-        def micro(i, batch):
-            return jax.tree.map(
-                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:])[i]
-                if x.ndim >= 1 and x.shape[0] % n == 0 else x, batch)
-
-        def body(carry, i):
-            acc, ltot = carry
-            (l, _), g = jax.value_and_grad(loss, has_aux=True)(
-                params, micro(i, batch))
-            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
-                               acc, g)
-            return (acc, ltot + l), None
-
-        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                             params)
-        (g, ltot), _ = jax.lax.scan(body, (zeros, jnp.float32(0)),
-                                    jnp.arange(n))
-        g = jax.tree.map(lambda x: x / n, g)
-        return g, ltot / n, {"loss": ltot / n,
-                             "aux_loss": jnp.float32(0),
-                             "tokens": jnp.float32(0)}
+        return accumulate_microbatches(loss, params, batch, tc.grad_accum)
 
     def train_step(state, batch):
         g, l, metrics = grads_of(state["params"], batch)
@@ -89,11 +75,18 @@ def jit_train_step(model: Model, tc: TrainConfig, batch_shardings=None):
 def train(model: Model, tc: TrainConfig, data_iter, *,
           state: Optional[Pytree] = None,
           fault_handler=None,
-          hooks: Optional[Dict[str, Callable]] = None) -> Pytree:
+          hooks: Optional[Dict[str, Callable]] = None
+          ) -> Tuple[Pytree, Dict[str, jax.Array]]:
     """The end-to-end driver (examples/train_*.py).
 
     data_iter: yields (step_idx, batch) — resumable via its own state.
     fault_handler: train.fault.FaultHandler (SIGTERM-safe checkpointing).
+
+    Returns ``(state, metrics)``: the final train state and the last
+    step's metrics.  On exit it logs the memory-tier traffic summary, and
+    — when the model trains through a pipeline schedule — the stage
+    tier's ``act_stash``/``act_fetch`` traffic as a separate
+    "pipeline traffic" line.
     """
     hooks = hooks or {}
     step_fn = jit_train_step(model, tc)
@@ -147,4 +140,7 @@ def train(model: Model, tc: TrainConfig, data_iter, *,
     runtime = getattr(model, "runtime", None)
     if runtime is not None and runtime.offloads:
         log.info("memory traffic: %s", runtime.traffic_summary())
+    stage_runtime = getattr(model, "stage_runtime", None)
+    if stage_runtime is not None and stage_runtime.offloads:
+        log.info("pipeline traffic: %s", stage_runtime.traffic_summary())
     return state, metrics

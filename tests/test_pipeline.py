@@ -1,0 +1,284 @@
+"""Pipeline schedules over the tier API: registry + S=1 parity in-process,
+S in {2,4} parity via subprocess (tests/multidev/pipeline.py), the
+PipelineStageTier cost contract, and the planner's bubble-vs-stall trade."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_multidev
+from repro import hw
+from repro.configs import ARCHS, MemoryPlan, PipelinePlan, RunConfig, \
+    SHAPES_BY_NAME, TrainConfig, get_arch
+from repro.configs.base import MeshPlan, ShapeConfig
+from repro.core.dag import build_dag
+from repro.core.policy import micro_candidates, plan_memory, summarize
+from repro.core.pool import PoolAccountant
+from repro.core.runtime import MemoryRuntime
+from repro.core.tiers import (CompressedTier, PipelineStageTier, build_tier,
+                              build_stage_tier)
+from repro.models.model import build_model
+from repro.parallel.pipeline import (accumulate_microbatches, get_schedule,
+                                     registered_schedules)
+from repro.parallel.sharding import ShardingPlanner
+from repro.sim.simulator import simulate_pipeline
+from repro.sim.topology import DC_DLA, MC_DLA_B
+from repro.sim.workloads import WORKLOADS
+
+CFG = ARCHS["smollm-135m"].reduced(dtype="float32")
+PLAN1 = MeshPlan((1,), ("data",))
+SINGLE = MeshPlan((16, 16), ("data", "model"))
+SHAPE = ShapeConfig("t", 32, 4, "train")
+
+
+def _batch(B=4, S=32, seed=0):
+    return {
+        "tokens": jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0,
+                                     CFG.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(seed + 1), (B, S),
+                                     0, CFG.vocab_size),
+        "positions": jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# registry + schedule contract
+def test_schedule_registry():
+    assert registered_schedules() == ("1f1b", "gpipe")
+    with pytest.raises(KeyError):
+        get_schedule("interleaved")
+    g, f = get_schedule("gpipe"), get_schedule("1f1b")
+    assert not g.stash_saved and f.stash_saved
+    assert g.inflight(4, 16) == 16           # gpipe: all M live
+    assert f.inflight(4, 16) == 4            # 1f1b: bounded by S
+    assert f.inflight(4, 2) == 2             # ... and by M
+    assert g.bubble_fraction(4, 16) == pytest.approx(3 / 19)
+    assert g.bubble_fraction(1, 8) == 0.0
+
+
+def test_micro_candidates_divide_batch():
+    cands = micro_candidates(256, 4)
+    assert all(256 % m == 0 for m in cands)
+    assert all(m >= 4 for m in cands)        # M < S wastes the schedule
+    assert micro_candidates(7, 2) == [7]
+    assert micro_candidates(2, 4) == [1, 2]  # fallback below stage count
+
+
+# ---------------------------------------------------------------------------
+# S=1 degenerate schedule: in-process parity + stage-tier traffic
+def test_single_stage_pipeline_matches_baseline():
+    memory = MemoryPlan(policy="mcdla")
+    base = build_model(RunConfig(model=CFG, shape=SHAPE, mesh=PLAN1,
+                                 memory=memory, train=TrainConfig()))
+    params = base.init(jax.random.PRNGKey(0))
+    batch = _batch()
+    l_base, m_base = jax.jit(base.loss_fn)(params, batch)
+    for sched in ("gpipe", "1f1b"):
+        m = build_model(RunConfig(
+            model=CFG, shape=SHAPE, mesh=PLAN1, memory=memory,
+            train=TrainConfig(),
+            pipeline=PipelinePlan(enabled=True, schedule=sched, n_micro=2,
+                                  n_stages=1)))
+        l, _ = jax.jit(m.loss_fn)(params, batch)
+        np.testing.assert_allclose(float(l), float(l_base), rtol=1e-6)
+        # a grad pass exercises the 1f1b stash/fetch hooks
+        jax.jit(jax.grad(lambda p: m.loss_fn(p, batch)[0]))(params)
+        rep = m.stage_runtime.traffic_report()
+        assert "pipeline_stage" in rep["tier"]
+        if sched == "1f1b":
+            assert rep["act_stash"]["calls"] > 0
+            assert rep["act_fetch"]["calls"] > 0
+            assert rep["act_stash"]["wire_bytes"] > 0
+        else:                                # gpipe keeps activations live
+            assert "act_stash" not in rep
+
+
+def test_multidev_pipeline_two_stages():
+    out = run_multidev("pipeline.py", devices=2, timeout=900)
+    assert "schedule loss parity OK" in out
+    assert "loss curve parity OK" in out
+    assert "stage tier traffic OK" in out
+    assert "model pipeline parity OK" in out
+
+
+def test_multidev_pipeline_four_stages():
+    out = run_multidev("pipeline.py", devices=4, timeout=900)
+    assert "pipeline == sequential OK" in out
+    assert "schedule loss parity OK" in out
+    assert "model pipeline parity OK" in out
+
+
+def test_pipeline_moe_aux_is_microbatch_mean():
+    """An MoE load-balance aux is batch-size-invariant, so the pipelined
+    forward must average it across microbatches (grad-accum semantics),
+    not sum it M x."""
+    cfg = ARCHS["mixtral-8x7b"].reduced(dtype="float32")
+    memory = MemoryPlan(policy="none")
+    shape = ShapeConfig("t", 32, 4, "train")
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(0), (4, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                     cfg.vocab_size),
+        "positions": jnp.broadcast_to(jnp.arange(32)[None], (4, 32)),
+    }
+    base = build_model(RunConfig(model=cfg, shape=shape, mesh=PLAN1,
+                                 memory=memory, train=TrainConfig()))
+    params = base.init(jax.random.PRNGKey(0))
+    # reference: mean of per-microbatch auxes over the same split
+    aux_ref = np.mean([
+        float(base.loss_fn(params, jax.tree.map(
+            lambda v: v[2 * m:2 * m + 2] if getattr(v, "ndim", 0) >= 1
+            else v, batch))[1]["aux_loss"]) for m in range(2)])
+    pipe = build_model(RunConfig(
+        model=cfg, shape=shape, mesh=PLAN1, memory=memory,
+        train=TrainConfig(),
+        pipeline=PipelinePlan(enabled=True, schedule="1f1b", n_micro=2,
+                              n_stages=1)))
+    _, m2 = jax.jit(pipe.loss_fn)(params, batch)
+    np.testing.assert_allclose(float(m2["aux_loss"]), aux_ref, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grad accumulation == the degenerate single-stage schedule
+def test_accumulate_microbatches_metrics():
+    def loss_fn(params, batch):
+        x = batch["x"]
+        l = jnp.mean((x @ params["w"]) ** 2)
+        return l, {"loss": l, "aux_loss": 0.5 * l,
+                   "tokens": jnp.float32(x.shape[0])}
+
+    params = {"w": jnp.ones((4, 2))}
+    batch = {"x": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+    g, l, metrics = accumulate_microbatches(loss_fn, params, batch, 4)
+    l_full, m_full = loss_fn(params, batch)
+    # tokens SUM to the full batch; losses are microbatch means
+    assert float(metrics["tokens"]) == 8.0
+    assert float(metrics["aux_loss"]) == pytest.approx(
+        float(metrics["loss"]) * 0.5, rel=1e-6)
+    # mean-of-microbatch-means == full-batch mean (equal microbatches)
+    np.testing.assert_allclose(float(l), float(l_full), rtol=1e-6)
+    g_full = jax.grad(lambda p: loss_fn(p, batch)[0])(params)
+    np.testing.assert_allclose(np.asarray(g["w"]),
+                               np.asarray(g_full["w"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PipelineStageTier cost contract
+def test_stage_tier_contract():
+    planner = ShardingPlanner(SINGLE)
+    memory = MemoryPlan(policy="mcdla")
+    inner = build_tier(memory, planner)
+    tier = build_stage_tier(memory, planner, None, n_stages=4)
+    assert isinstance(tier, PipelineStageTier)
+    assert "pipeline_stage" in tier.describe()
+    # DCN hop in series: strictly slower than both legs
+    bw = tier.bandwidth(SINGLE)
+    assert 0 < bw < inner.bandwidth(SINGLE) and bw < hw.DCN_BW
+    # per-stage capacity share
+    acct = PoolAccountant(SINGLE, memory)
+    assert tier.capacity(acct) == pytest.approx(inner.capacity(acct) / 4)
+    tier.set_stages(8)
+    assert tier.capacity(acct) == pytest.approx(inner.capacity(acct) / 8)
+    # registered like the others
+    assert isinstance(build_tier(MemoryPlan(policy="pipeline"), planner),
+                      PipelineStageTier)
+    MemoryPlan(policy="pipeline").validate()
+
+
+def test_stage_tier_composes_with_codec():
+    planner = ShardingPlanner(SINGLE)
+    memory = MemoryPlan(policy="mcdla", compress="fp8")
+    tier = build_stage_tier(memory, planner, None, n_stages=2)
+    assert isinstance(tier, CompressedTier)
+    assert tier.payload_ratio() == pytest.approx(0.5)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8), jnp.float32)
+    from repro.core.tiers import TransferHints
+    y = tier.fetch(tier.stash(x, TransferHints()), TransferHints())
+    assert jnp.max(jnp.abs(y.astype(jnp.float32) - x)) < 0.25
+
+
+# ---------------------------------------------------------------------------
+# planner: the bubble-vs-stall trade
+def _plan(n_micro, schedule="1f1b", chip=hw.TPU_V5E, n_stages=4,
+          recompute=False, arch="smollm-135m"):
+    cfg = get_arch(arch)
+    dag = build_dag(cfg, SHAPES_BY_NAME["train_4k"])
+    memory = MemoryPlan(policy="mcdla", recompute_cheap=recompute)
+    planner = ShardingPlanner(SINGLE)
+    tier = build_stage_tier(memory, planner, None, n_stages=n_stages)
+    return plan_memory(
+        dag, SINGLE, memory, chip=chip,
+        model_state_bytes=cfg.param_count() * 14, tier=tier,
+        pipeline=PipelinePlan(enabled=True, schedule=schedule,
+                              n_micro=n_micro, n_stages=n_stages),
+        n_micro_candidates=micro_candidates(256, n_stages))
+
+
+def test_planner_bubble_monotone_in_n_micro():
+    bubbles = [_plan(m).pipeline.bubble_s for m in (2, 4, 8, 16, 32)]
+    assert all(a > b for a, b in zip(bubbles, bubbles[1:]))
+
+
+def test_planner_stall_monotone_in_n_micro():
+    stalls = [_plan(m).pipeline.stall_s for m in (2, 4, 8, 16, 32)]
+    assert all(a <= b for a, b in zip(stalls, stalls[1:]))
+    assert stalls[-1] > 0                    # DCN latency term bites
+
+
+def test_planner_decision_changes_with_n_micro():
+    r2, r32 = _plan(2), _plan(32)
+    assert r2.pipeline.n_micro != r32.pipeline.n_micro
+    assert r2.pipeline.total_s != r32.pipeline.total_s
+    assert "pipeline[1f1b" in summarize(r2)
+
+
+def test_planner_choice_moves_with_tier_bandwidth():
+    slow = dataclasses.replace(hw.TPU_V5E, link_bw=hw.TPU_V5E.link_bw / 16)
+    m_fast = _plan(0, chip=hw.TPU_V5E).pipeline
+    m_slow = _plan(0, chip=slow).pipeline
+    # a faster stage tier affords more microbatches (smaller bubble)
+    # before stash stalls dominate
+    assert m_fast.n_micro >= m_slow.n_micro
+    assert m_fast.stall_s <= m_slow.stall_s
+
+
+def test_planner_gpipe_all_resident():
+    r = _plan(0, schedule="gpipe")
+    assert r.pipeline.stall_s == 0.0
+    assert r.pipeline.act_wire_bytes == 0.0
+    assert r.count("pool") == 0 and r.count("recompute") == 0
+    # with zero stall the bubble alone decides: max candidate wins
+    assert r.pipeline.n_micro == max(micro_candidates(256, 4))
+
+
+def test_planner_1f1b_reports_act_traffic():
+    r = _plan(8)
+    assert r.pipeline.act_wire_bytes > 0
+    assert r.count("pool") > 0
+
+
+def test_plan_memory_without_pipeline_unchanged():
+    dag = build_dag(get_arch("mixtral-8x7b"), SHAPES_BY_NAME["train_4k"])
+    r = plan_memory(dag, SINGLE, MemoryPlan(policy="mcdla"),
+                    model_state_bytes=47e9 * 10)
+    assert r.pipeline is None
+    assert r.count("keep") == 0 and r.fits
+
+
+# ---------------------------------------------------------------------------
+# sim: the stage tier in the DC/HC/MC vocabulary
+def test_sim_pipeline_bubble_and_tier():
+    dag = WORKLOADS["ResNet"]()
+    r8 = simulate_pipeline(dag, MC_DLA_B, n_stages=4, n_micro=8)
+    r32 = simulate_pipeline(dag, MC_DLA_B, n_stages=4, n_micro=32)
+    assert r32.sync < r8.sync                # bubble shrinks with M
+    assert r8.virt_bytes > 0                 # 1f1b streams the stage tier
+    g = simulate_pipeline(dag, MC_DLA_B, n_stages=4, n_micro=8,
+                          schedule="gpipe")
+    assert g.virt_bytes == 0 and g.virt == 0.0
+    # pooled backing store beats the PCIe host path on stage stash
+    dc = simulate_pipeline(dag, DC_DLA, n_stages=4, n_micro=8)
+    assert r8.total <= dc.total

@@ -91,6 +91,33 @@ def test_grad_accum_equivalence():
                                    rtol=2e-3, atol=2e-4)
 
 
+def test_grad_accum_metrics_accumulated():
+    """Regression: the accumulated path used to hardcode aux_loss=0 and
+    tokens=0, discarding per-microbatch metrics — it must now report the
+    same token count and aux loss as the unaccumulated step."""
+    cfg = dataclasses.replace(CFG, dtype="float32")
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
+                    mesh=PLAN1, memory=MemoryPlan(policy="none"),
+                    train=TrainConfig())
+    m = build_model(run)
+    B, S = 8, 32
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                     cfg.vocab_size),
+        "positions": jnp.broadcast_to(jnp.arange(S)[None], (B, S)),
+    }
+    tc1 = TrainConfig(grad_accum=1, grad_clip=0.0)
+    tc2 = TrainConfig(grad_accum=2, grad_clip=0.0)
+    _, m1 = jax.jit(make_train_step(m, tc1))(init_state(m, tc1), batch)
+    _, m2 = jax.jit(make_train_step(m, tc2))(init_state(m, tc2), batch)
+    assert float(m2["tokens"]) == float(m1["tokens"]) == B * S
+    assert float(m2["aux_loss"]) == pytest.approx(float(m1["aux_loss"]),
+                                                  abs=1e-5)
+    assert float(m2["loss"]) == pytest.approx(float(m1["loss"]), rel=1e-4)
+
+
 def test_lr_schedule_shape():
     tc = TrainConfig(total_steps=100, warmup_steps=10, learning_rate=1e-3)
     lrs = [float(lr_schedule(tc, jnp.int32(s))) for s in (1, 5, 10, 50, 100)]
