@@ -1,0 +1,90 @@
+"""Checkpoint-overhead bench: measured save/restore wall-clock through the
+CheckpointTier runtime (sync vs async vs codec), the metered ckpt traffic,
+and the analytic snapshot-cost model over the DC/HC/MC design points.
+
+Rows follow the repo bench convention ``(name, value, note)``; run via
+``python -m benchmarks.run --suite checkpoint`` (emits BENCH_checkpoint.json).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Row = Tuple[str, float, str]
+
+
+def _state(param_mb: float = 8.0):
+    n = int(param_mb * 1e6 / 4 / 2) // 1024 * 1024   # params + one moment
+    w = jnp.arange(n, dtype=jnp.float32).reshape(-1, 1024) / 977
+    return {"params": {"w": w}, "opt": {"mu": jnp.zeros_like(w)},
+            "step": jnp.array(0, jnp.int32)}
+
+
+def checkpoint_bench(quick: bool = False) -> List[Row]:
+    from repro.configs.base import CheckpointPlan, MemoryPlan, MeshPlan
+    from repro.train.checkpoint import CheckpointManager, make_ckpt_runtime
+
+    plan = MeshPlan((1,), ("data",))
+    memory = MemoryPlan()
+    state = _state(2.0 if quick else 8.0)
+    raw_mb = sum(float(x.size) * jnp.dtype(x.dtype).itemsize
+                 for x in jax.tree_util.tree_leaves(state)) / 1e6
+    rows: List[Row] = [("ckpt.state_size.mb", round(raw_mb, 2), "")]
+
+    variants = [("sync_none", "none", False, 1),
+                ("sync_fp8", "fp8", False, 1),
+                ("async_none", "none", True, 1),
+                ("sharded4_none", "none", False, 4)]
+    for tag, codec, async_saves, shards in variants:
+        ckpt = CheckpointPlan(enabled=True, tier="host", codec=codec,
+                              async_saves=async_saves, shards=shards)
+        with tempfile.TemporaryDirectory() as d:
+            rt = make_ckpt_runtime(ckpt, plan, memory)
+            mgr = CheckpointManager(d, keep=2, runtime=rt, shards=shards,
+                                    async_saves=async_saves)
+            t0 = time.perf_counter()
+            mgr.save(1, {"state": state, "data": None})
+            t_issue = time.perf_counter() - t0
+            mgr.wait()
+            t_save = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            mgr.restore_latest()
+            t_restore = time.perf_counter() - t0
+            tr = rt.traffic_report()
+            rows.append((f"ckpt.save_{tag}.ms", round(1e3 * t_save, 1),
+                         f"{shards} shard(s)"))
+            if async_saves:
+                rows.append((f"ckpt.save_issue_{tag}.ms",
+                             round(1e3 * t_issue, 1),
+                             "foreground cost of an async save"))
+            rows.append((f"ckpt.restore_{tag}.ms", round(1e3 * t_restore, 1),
+                         ""))
+            rows.append((f"ckpt.wire_{tag}.mb",
+                         round(tr["ckpt_save"]["wire_bytes"] / 1e6, 2),
+                         "metered ckpt_save bytes"))
+
+    # analytic: snapshot cost across the paper's design points
+    from repro.sim.simulator import simulate_checkpoint
+    from repro.sim.topology import ALL_SYSTEMS
+    from repro.sim.workloads import WORKLOADS
+    dag = WORKLOADS["VGG-E"]()
+    state_bytes = sum(l.weight_bytes for l in dag.layers) * 3
+    for s in ALL_SYSTEMS:
+        for async_saves in (False, True):
+            c = simulate_checkpoint(dag, s, state_bytes, mtbf_steps=5000,
+                                    async_saves=async_saves)
+            mode = "async" if async_saves else "sync"
+            rows.append((f"ckpt.sim.{s.name}.{mode}.overhead_frac",
+                         round(c.overhead_frac, 6),
+                         f"every={c.every} save={c.save_s*1e3:.2f}ms "
+                         f"tier={c.tier_kind}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, value, note in checkpoint_bench(quick=True):
+        print(f"{name},{value},{note}")

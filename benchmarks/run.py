@@ -1,21 +1,112 @@
-"""Benchmark harness: one function per paper table/figure + kernel
-microbench.  Prints ``name,value,note`` CSV (tee'd to bench_output.txt)."""
+"""Single bench entry point: ``python -m benchmarks.run [--suite ...]``.
+
+Runs the requested suites and emits, per suite, a machine-readable
+``BENCH_<suite>.json`` (list of ``{"name", "value", "note"}`` records plus
+a header with wall-clock and row count) alongside the legacy
+``name,value,note`` CSV on stdout.  Suites:
+
+  micro       kernel + tier microbenchmarks
+  paper       the paper-figure tables (Fig 11-14, §V-D)
+  pipeline    pipeline schedule bench
+  serve       serving engine + disaggregated prefill/decode bench
+  checkpoint  checkpoint save/restore overhead (measured + analytic)
+
+CI runs ``--suite micro,checkpoint --quick`` per-push and uploads the JSON
+artifacts; the full matrix is the nightly/manual path.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
+from typing import Callable, Dict, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def _paper_rows() -> List[Row]:
+    from benchmarks.paper_figs import ALL_FIGS
+    rows: List[Row] = []
+    for fig in ALL_FIGS:
+        rows.extend(fig())
+    return rows
+
+
+def _micro_rows() -> List[Row]:
+    from benchmarks.microbench import kernel_microbench, tier_microbench
+    return list(kernel_microbench()) + list(tier_microbench())
+
+
+def _pipeline_rows(quick: bool) -> List[Row]:
+    from benchmarks.pipeline_bench import pipeline_bench
+    return pipeline_bench(quick=quick)
+
+
+def _serve_rows(quick: bool) -> List[Row]:
+    from benchmarks.serve_bench import disagg_bench, serve_bench
+    n = 4 if quick else 6
+    return list(serve_bench(n_requests=n)) + \
+        list(disagg_bench(n_requests=n))
+
+
+def _checkpoint_rows(quick: bool) -> List[Row]:
+    from benchmarks.checkpoint_bench import checkpoint_bench
+    return checkpoint_bench(quick=quick)
+
+
+SUITES: Dict[str, Callable[[bool], List[Row]]] = {
+    "micro": lambda quick: _micro_rows(),
+    "paper": lambda quick: _paper_rows(),
+    "pipeline": _pipeline_rows,
+    "serve": _serve_rows,
+    "checkpoint": _checkpoint_rows,
+}
+
+
+def run_suites(names: List[str], quick: bool = False,
+               json_dir: str = ".") -> List[Row]:
+    all_rows: List[Row] = []
+    for name in names:
+        t0 = time.time()
+        rows = SUITES[name](quick)
+        elapsed = round(time.time() - t0, 1)
+        payload = {
+            "suite": name,
+            "quick": quick,
+            "elapsed_s": elapsed,
+            "n_rows": len(rows),
+            "rows": [{"name": n, "value": v, "note": note}
+                     for n, v, note in rows],
+        }
+        path = os.path.join(json_dir or ".", f"BENCH_{name}.json")
+        os.makedirs(json_dir or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# suite {name}: {len(rows)} rows in {elapsed}s -> {path}",
+              file=sys.stderr)
+        all_rows.extend(rows)
+    return all_rows
 
 
 def main() -> None:
-    from benchmarks.microbench import kernel_microbench, tier_microbench
-    from benchmarks.paper_figs import ALL_FIGS
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suite", default="paper,micro",
+                    help="comma-separated: " + ",".join(SUITES) + " | all")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI smoke)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<suite>.json artifacts")
+    args = ap.parse_args()
+    names = list(SUITES) if args.suite == "all" else \
+        [s.strip() for s in args.suite.split(",") if s.strip()]
+    unknown = [s for s in names if s not in SUITES]
+    if unknown:
+        raise SystemExit(f"unknown suite(s) {unknown}; have {list(SUITES)}")
 
     t0 = time.time()
-    rows = []
-    for fig in ALL_FIGS:
-        rows.extend(fig())
-    rows.extend(kernel_microbench())
-    rows.extend(tier_microbench())
+    rows = run_suites(names, quick=args.quick, json_dir=args.json_dir)
     print("name,value,note")
     for name, value, note in rows:
         print(f"{name},{value},{note}")

@@ -1,4 +1,5 @@
 from repro.configs.base import (
+    CheckpointPlan,
     MemoryPlan,
     MeshPlan,
     ModelConfig,
@@ -14,7 +15,8 @@ from repro.configs.base import (
 from repro.configs.registry import ARCHS, get_arch, list_archs, cells_for
 
 __all__ = [
-    "MemoryPlan", "MeshPlan", "ModelConfig", "MULTI_POD", "PipelinePlan",
-    "RunConfig", "ShapeConfig", "SHAPES", "SHAPES_BY_NAME", "SINGLE_POD",
-    "TrainConfig", "ARCHS", "get_arch", "list_archs", "cells_for",
+    "CheckpointPlan", "MemoryPlan", "MeshPlan", "ModelConfig", "MULTI_POD",
+    "PipelinePlan", "RunConfig", "ShapeConfig", "SHAPES", "SHAPES_BY_NAME",
+    "SINGLE_POD", "TrainConfig", "ARCHS", "get_arch", "list_archs",
+    "cells_for",
 ]

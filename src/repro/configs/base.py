@@ -98,6 +98,48 @@ class PipelinePlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class CheckpointPlan:
+    """Checkpoint-as-a-tier: snapshots flow through the same metered
+    backing stores as KV spill and activation stash (train/checkpoint.py).
+
+    tier: backing policy for the snapshot leg — "host" (DC-DLA: pinned
+      host DRAM), "mcdla" (the pooled-HBM tier), or "spill" (pool until
+      the capacity contract is spent, host past it).  Resolved through
+      the tier registry and wrapped in a ``CheckpointTier``
+      (core.tiers.build_ckpt_tier), so snapshots are metered as
+      ``ckpt_save``/``ckpt_load`` in the runtime's ``traffic_report``.
+    codec: stash codec for the snapshot payload ("fp8"/"int8" halve the
+      bytes; lossy — bit-identical resume requires "none", the default).
+    every: save cadence in steps; 0 lets the planner pick it by the
+      Young–Daly trade (core.policy.plan_checkpoint): amortized unhidden
+      save time against expected replay at the assumed MTBF.
+    async_saves: double-buffered background writes — the device→host
+      gather is synchronous (donated buffers), the encode+write+commit
+      overlaps the next train steps.
+    shards: snapshot shard files per checkpoint (manifest carries a CRC
+      per shard; the chaos harness corrupts exactly one).
+    mtbf_steps: assumed mean steps between failures for the cadence
+      model and the dryrun/sim overhead reports.
+    """
+
+    enabled: bool = False
+    tier: str = "host"               # host | mcdla | spill
+    codec: str = "none"              # none | fp8 | int8
+    every: int = 0                   # 0 -> planner-chosen (Young–Daly)
+    async_saves: bool = False
+    shards: int = 1
+    mtbf_steps: int = 10_000
+
+    def validate(self) -> None:
+        from repro.core.tiers import registered_codecs, registered_policies
+        assert self.tier in registered_policies(), (
+            self.tier, registered_policies())
+        assert self.codec in ("none",) + registered_codecs(), (
+            self.codec, registered_codecs())
+        assert self.every >= 0 and self.shards >= 1 and self.mtbf_steps >= 1
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     """Architecture description.  Dims are the *full* published config; use
     ``reduced()`` for CPU smoke twins."""
@@ -347,3 +389,4 @@ class RunConfig:
     memory: MemoryPlan = MemoryPlan()
     train: TrainConfig = TrainConfig()
     pipeline: PipelinePlan = PipelinePlan()
+    ckpt: CheckpointPlan = CheckpointPlan()

@@ -67,6 +67,30 @@ class PipelineDecision:
         return self.bubble_s + self.stall_s
 
 
+@dataclasses.dataclass(frozen=True)
+class CheckpointDecision:
+    """The planner's cadence verdict for the checkpoint tier.
+
+    Per-step cost = ``overhead_s`` (unhidden save time amortized over the
+    cadence) + ``lost_s`` (expected replay: a failure loses every/2 steps
+    on average, paid at rate 1/mtbf_steps).  ``every = 0`` sweeps
+    candidates and keeps the minimizer — the discrete Young–Daly optimum
+    ``sqrt(2 · MTBF · save_time)`` against the actual step time.
+    """
+
+    tier: str
+    every: int                   # chosen save cadence (steps)
+    snapshot_bytes: float        # wire bytes of one snapshot
+    save_s: float                # one snapshot through the tier
+    overhead_s: float            # amortized unhidden save time per step
+    lost_s: float                # expected replay time per step
+    async_saves: bool = False
+
+    @property
+    def total_s(self) -> float:
+        return self.overhead_s + self.lost_s
+
+
 @dataclasses.dataclass
 class MemoryPlanReport:
     decisions: List[Decision]
@@ -76,6 +100,7 @@ class MemoryPlanReport:
     tier: str = "pooled_hbm"
     host_bytes: float = 0.0
     pipeline: Optional[PipelineDecision] = None
+    checkpoint: Optional[CheckpointDecision] = None
 
     @property
     def fits(self) -> bool:
@@ -111,12 +136,54 @@ def micro_candidates(global_batch: int, n_stages: int,
     return divs[-cap:] if len(divs) > cap else divs
 
 
+# checkpoint cadence sweep when CheckpointPlan.every == 0: a coarse
+# logarithmic grid — the Young–Daly optimum is flat around its minimum, so
+# a grid hit within ~2x of sqrt(2·MTBF·save_s) costs almost nothing extra.
+CADENCE_CANDIDATES: Sequence[int] = (1, 2, 5, 10, 25, 50, 100, 250, 500,
+                                     1000)
+
+
+def plan_checkpoint(state_bytes: float, step_time_s: float,
+                    tier: MemoryTier, plan: MeshPlan,
+                    chip: hw.Chip = hw.TPU_V5E, *,
+                    every: int = 0, async_saves: bool = False,
+                    mtbf_steps: int = 10_000,
+                    candidates: Optional[Sequence[int]] = None
+                    ) -> CheckpointDecision:
+    """Cost a checkpoint cadence against step time through the tier contract.
+
+    state_bytes: global params+optimizer bytes of one snapshot (raw).
+    every: force a cadence, or 0 to sweep ``candidates`` and keep the
+    minimizer of amortized-save + expected-replay — the discrete form of
+    Young–Daly ``sqrt(2 · MTBF · save_time)``.  Async saves hide up to
+    ``every · step_time`` of the drain behind the next steps.
+    """
+    bw = tier.bandwidth(plan, chip)
+    n_dev = max(plan.num_devices, 1)
+    snap = state_bytes * tier.payload_ratio()
+    save_s = snap / (bw * n_dev) if bw > 0 else 0.0
+    cands = [every] if every > 0 else list(candidates or CADENCE_CANDIDATES)
+    best = None
+    for k in cands:
+        unhidden = max(0.0, save_s - k * step_time_s) if async_saves \
+            else save_s
+        overhead = unhidden / k
+        lost = (k / 2.0) * step_time_s / max(mtbf_steps, 1)
+        if best is None or overhead + lost < best[1] + best[2]:
+            best = (k, overhead, lost)
+    k, overhead, lost = best
+    return CheckpointDecision(tier.describe(), k, snap, save_s, overhead,
+                              lost, async_saves)
+
+
 def plan_memory(dag: LayerDAG, plan: MeshPlan, memory: MemoryPlan,
                 chip: hw.Chip = hw.TPU_V5E,
                 model_state_bytes: float = 0.0,
                 tier: Optional[MemoryTier] = None,
                 pipeline: Optional[PipelinePlan] = None,
-                n_micro_candidates: Optional[Sequence[int]] = None
+                n_micro_candidates: Optional[Sequence[int]] = None,
+                checkpoint=None,
+                ckpt_tier: Optional[MemoryTier] = None
                 ) -> MemoryPlanReport:
     """Run the planner over a layer DAG.
 
@@ -128,6 +195,11 @@ def plan_memory(dag: LayerDAG, plan: MeshPlan, memory: MemoryPlan,
     pipeline: when given (and enabled), sweep ``n_micro_candidates`` (or the
     forced ``pipeline.n_micro``) and pick the microbatch count minimizing
     bubble + stash stalls; the verdict lands in ``report.pipeline``.
+    checkpoint: a :class:`~repro.configs.base.CheckpointPlan` — when given
+    (and enabled), cost the save cadence against the planned step time
+    (compute + pipeline penalty + stash stalls) through ``ckpt_tier`` (or
+    the plan's :func:`~repro.core.tiers.build_ckpt_tier` stack); the
+    verdict lands in ``report.checkpoint``.
     """
     if tier is None:
         tier = build_tier(memory, ShardingPlanner(plan))
@@ -195,12 +267,29 @@ def plan_memory(dag: LayerDAG, plan: MeshPlan, memory: MemoryPlan,
         decisions.sort(key=lambda d: d.layer)
         return decisions, acct
 
+    def attach_checkpoint(report: MemoryPlanReport) -> MemoryPlanReport:
+        if checkpoint is None or not getattr(checkpoint, "enabled", False):
+            return report
+        from repro.core.tiers import build_ckpt_tier
+        ct = ckpt_tier or build_ckpt_tier(
+            memory, ShardingPlanner(plan), backing=checkpoint.tier,
+            codec=checkpoint.codec)
+        step_time = dag.total_flops() / eff_flops + report.total_stall()
+        if report.pipeline is not None:
+            step_time += report.pipeline.total_s
+        report.checkpoint = plan_checkpoint(
+            model_state_bytes, step_time, ct, plan, chip,
+            every=checkpoint.every, async_saves=checkpoint.async_saves,
+            mtbf_steps=checkpoint.mtbf_steps)
+        return report
+
     if pipeline is None or not pipeline.enabled:
         decisions, acct = run_pass()
-        return MemoryPlanReport(decisions, acct.local_bytes,
-                                acct.pooled_bytes, acct.budget,
-                                tier=tier.describe(),
-                                host_bytes=acct.host_bytes)
+        return attach_checkpoint(
+            MemoryPlanReport(decisions, acct.local_bytes,
+                             acct.pooled_bytes, acct.budget,
+                             tier=tier.describe(),
+                             host_bytes=acct.host_bytes))
 
     # ---- joint n_micro x placement sweep (bubble vs stash stalls) --------
     from repro.parallel.pipeline import get_schedule
@@ -236,9 +325,10 @@ def plan_memory(dag: LayerDAG, plan: MeshPlan, memory: MemoryPlan,
         if best is None or verdict.total_s < best[0].total_s:
             best = (verdict, decisions, acct)
     verdict, decisions, acct = best
-    return MemoryPlanReport(decisions, acct.local_bytes, acct.pooled_bytes,
-                            acct.budget, tier=tier.describe(),
-                            host_bytes=acct.host_bytes, pipeline=verdict)
+    return attach_checkpoint(
+        MemoryPlanReport(decisions, acct.local_bytes, acct.pooled_bytes,
+                         acct.budget, tier=tier.describe(),
+                         host_bytes=acct.host_bytes, pipeline=verdict))
 
 
 def summarize(report: MemoryPlanReport) -> str:
@@ -254,4 +344,11 @@ def summarize(report: MemoryPlanReport) -> str:
         s += (f" pipeline[{p.schedule} S={p.n_stages}] n_micro={p.n_micro} "
               f"bubble={p.bubble_s*1e3:.2f}ms stall={p.stall_s*1e3:.2f}ms "
               f"act_wire={p.act_wire_bytes/1e9:.2f}GB")
+    if report.checkpoint is not None:
+        c = report.checkpoint
+        s += (f" ckpt[{c.tier}] every={c.every} "
+              f"snap={c.snapshot_bytes/1e9:.2f}GB save={c.save_s:.2f}s "
+              f"overhead={c.overhead_s*1e3:.2f}ms/step "
+              f"lost={c.lost_s*1e3:.2f}ms/step"
+              f"{' async' if c.async_saves else ''}")
     return s

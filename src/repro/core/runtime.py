@@ -184,6 +184,37 @@ class MemoryRuntime:
             self._meter(direction, x, hints)
         return x
 
+    # ------------------------------------------------------------------
+    # snapshots (checkpoint-as-a-tier).  Unlike stash/fetch these meter the
+    # *actual* payload bytes — the manifest the CheckpointManager commits
+    # accounts the same bytes, so `traffic_report["ckpt_save"]` is checkable
+    # against on-disk truth for any codec stack.
+    def _payload_bytes(self, payload) -> float:
+        return sum(float(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree_util.tree_leaves(payload)
+                   if hasattr(leaf, "size"))
+
+    def snapshot(self, x: jax.Array, hints: Optional[TransferHints] = None,
+                 direction: str = "ckpt_save"):
+        """Stash one snapshot leaf through the tier, metered ``ckpt_save``."""
+        hints = hints or TransferHints()
+        payload = self.tier.stash(x, hints)
+        raw = float(x.size) * jnp.dtype(x.dtype).itemsize
+        self._traffic.setdefault(direction, TierTraffic()).add(
+            raw, self._payload_bytes(payload))
+        return payload
+
+    def restore_snapshot(self, payload,
+                         hints: Optional[TransferHints] = None,
+                         direction: str = "ckpt_load") -> jax.Array:
+        """Fetch one snapshot leaf back, metered ``ckpt_load``."""
+        hints = hints or TransferHints()
+        wire = self._payload_bytes(payload)
+        x = self.tier.fetch(payload, hints)
+        raw = float(x.size) * jnp.dtype(x.dtype).itemsize
+        self._traffic.setdefault(direction, TierTraffic()).add(raw, wire)
+        return x
+
     def discard(self, payload) -> None:
         """Release a parked payload's capacity-contract charge.
 
@@ -344,12 +375,15 @@ class MemoryRuntime:
     # planning (KEEP/POOL/RECOMPUTE through the tier cost contract)
     def plan_report(self, dag: LayerDAG,
                     model_state_bytes: float = 0.0,
-                    pipeline=None, n_micro_candidates=None):
+                    pipeline=None, n_micro_candidates=None,
+                    checkpoint=None, ckpt_tier=None):
         return policy_mod.plan_memory(dag, self.plan, self.memory,
                                       chip=self.chip,
                                       model_state_bytes=model_state_bytes,
                                       tier=self.tier, pipeline=pipeline,
-                                      n_micro_candidates=n_micro_candidates)
+                                      n_micro_candidates=n_micro_candidates,
+                                      checkpoint=checkpoint,
+                                      ckpt_tier=ckpt_tier)
 
     def stash_fraction(self, dag: LayerDAG,
                        model_state_bytes: float = 0.0) -> float:

@@ -27,6 +27,10 @@ Shipped tiers (DESIGN.md §3):
 * :class:`PipelineStageTier` — decorator: per-stage activation stash for
   pipeline schedules (1F1B), priced as the DCN stage hop in series with
   the backing store (ROADMAP "pipeline-parallel stage tier").
+* :class:`CheckpointTier`  — decorator: the durable snapshot leg — the
+  ``CheckpointManager`` writes through it, metered as ``ckpt_save`` /
+  ``ckpt_load`` and priced as the DCN drain in series with the backing
+  store (ROADMAP "checkpoint-as-a-tier").
 
 Policies map to tiers through :func:`build_tier` — the ONLY place in the
 codebase that branches on ``MemoryPlan.policy`` strings.  Everything else
@@ -549,6 +553,85 @@ class PipelineStageTier(MemoryTier):
         return f"{self.kind}[{self.n_stages}x{self.inner.describe()}]"
 
 
+class CheckpointTier(MemoryTier):
+    """Decorator: the durable snapshot leg of the memory hierarchy.
+
+    A checkpoint is the coldest tensor class of all — touched once per
+    cadence, read only on failure — so it belongs in the pool, not in a
+    side-channel that bypasses the tier API (ISSUE 6 / ROADMAP
+    "checkpoint-as-a-tier").  The decorator delegates the data path to its
+    backing store (host DRAM or pooled HBM, with an optional codec stacked
+    on top by :func:`build_ckpt_tier`) and prices durability:
+
+    * ``bandwidth`` — a snapshot is only fault-tolerant once it leaves the
+      failure domain, so the drain is the DCN hop in *series* with the
+      backing store's stash collective (same harmonic composition as
+      :class:`PipelineStageTier`'s stage hop).
+    * ``capacity`` — ``keep`` live snapshots must fit concurrently: each
+      addresses 1/keep of the backing store.
+    """
+
+    kind = "ckpt"
+
+    def __init__(self, inner: MemoryTier, keep: int = 1):
+        super().__init__(inner.planner, inner.mesh, inner.memory,
+                         stash_all=inner.stash_all)
+        self.inner = inner
+        self.keep = max(1, keep)
+
+    def stash(self, x: jax.Array, hints: TransferHints) -> Payload:
+        return self.inner.stash(x, hints)
+
+    def fetch(self, payload: Payload, hints: TransferHints) -> jax.Array:
+        return self.inner.fetch(payload, hints)
+
+    def bandwidth(self, plan: MeshPlan, chip: hw.Chip = hw.TPU_V5E) -> float:
+        inner_bw = self.inner.bandwidth(plan, chip)
+        if inner_bw <= 0:
+            return hw.DCN_BW
+        return 1.0 / (1.0 / hw.DCN_BW + 1.0 / inner_bw)
+
+    def capacity(self, accountant: PoolAccountant) -> float:
+        return self.inner.capacity(accountant) / self.keep
+
+    def account(self, accountant: PoolAccountant, nbytes: float) -> None:
+        self.inner.account(accountant, nbytes)
+
+    @property
+    def offloads(self) -> bool:
+        # a checkpoint always leaves the device, even over a DeviceTier
+        # backing (the drain hop is the point)
+        return True
+
+    def payload_ratio(self) -> float:
+        return self.inner.payload_ratio()
+
+    def wire_ratio(self, x: jax.Array, hints: TransferHints) -> float:
+        return self.inner.wire_ratio(x, hints)
+
+    def describe(self) -> str:
+        return f"{self.kind}[{self.inner.describe()}]"
+
+
+def build_ckpt_tier(memory: MemoryPlan, planner: ShardingPlanner,
+                    mesh: Optional[Mesh] = None,
+                    backing: str = "host", codec: str = "none",
+                    keep: int = 1) -> MemoryTier:
+    """The snapshot tier for a run: the requested backing store behind the
+    durability drain, with the snapshot codec stacked on top.  Mirrors
+    :func:`build_stage_tier` — the backing policy resolves through the
+    registry, so a new store prices checkpoints without touching this."""
+    if backing in ("none", "pipeline", "checkpoint"):
+        backing = "host"
+    binding = _TIER_REGISTRY[backing]
+    inner = binding.factory(memory, planner, mesh)
+    inner.stash_all = binding.stash_all
+    tier: MemoryTier = CheckpointTier(inner, keep=keep)
+    if codec != "none":
+        tier = CompressedTier(tier, codec)
+    return tier
+
+
 def build_stage_tier(memory: MemoryPlan, planner: ShardingPlanner,
                      mesh: Optional[Mesh] = None,
                      n_stages: int = 1) -> MemoryTier:
@@ -632,6 +715,11 @@ register_tier("spill",
 # to construct it with the right backing store + codec stack).
 register_tier("pipeline",
               lambda m, p, mesh: PipelineStageTier(PooledHbmTier(p, mesh, m)),
+              stash_all=True)
+# "checkpoint": the durable snapshot leg over host DRAM (build_ckpt_tier is
+# the usual way to construct it with a pooled backing + codec stack).
+register_tier("checkpoint",
+              lambda m, p, mesh: CheckpointTier(HostTier(p, mesh, m)),
               stash_all=True)
 
 

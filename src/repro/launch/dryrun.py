@@ -317,6 +317,39 @@ def pipeline_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 
 # ---------------------------------------------------------------------------
+def checkpoint_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                    policy: str, placement: str, compress: str,
+                    opt_bits: int, ckpt) -> Dict:
+    """Analytic checkpoint-traffic report for one cell: the Young-Daly
+    cadence verdict through the configured CheckpointTier stack plus the
+    per-snapshot wire bytes the pooled backing store absorbs.  (Pure tier
+    arithmetic — no compile; the in-process metered path is
+    train/checkpoint.py.)"""
+    from repro.core.dag import build_dag
+    from repro.core.policy import plan_memory
+
+    cfg = get_arch(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    plan = plan_for(multi_pod=multi_pod)
+    memory = MemoryPlan(policy=policy, placement=placement,
+                        compress=compress, opt_state_bits=opt_bits)
+    opt_bytes = 4 + 2 * opt_bits // 8
+    report = plan_memory(build_dag(cfg, shape), plan, memory,
+                         model_state_bytes=cfg.param_count() * opt_bytes,
+                         checkpoint=ckpt)
+    d = report.checkpoint
+    return {
+        "tier": d.tier, "every": d.every,
+        "snapshot_bytes": d.snapshot_bytes,
+        "save_s": d.save_s,
+        "overhead_s_per_step": d.overhead_s,
+        "lost_s_per_step": d.lost_s,
+        "async": d.async_saves,
+        "ckpt_wire_bytes_per_step": d.snapshot_bytes / max(d.every, 1),
+    }
+
+
+# ---------------------------------------------------------------------------
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="all")
@@ -335,6 +368,14 @@ def main() -> int:
     ap.add_argument("--pipeline-schedule", default="1f1b")
     ap.add_argument("--pipeline-stages", type=int, default=2)
     ap.add_argument("--n-micro", type=int, default=0)
+    ap.add_argument("--ckpt", action="store_true",
+                    help="attach the analytic checkpoint-traffic report "
+                         "(Young-Daly cadence + pooled snapshot bytes)")
+    ap.add_argument("--ckpt-tier", default="host")
+    ap.add_argument("--ckpt-codec", default="none")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-async", action="store_true")
+    ap.add_argument("--mtbf-steps", type=int, default=10_000)
     ap.add_argument("--no-seq-parallel", action="store_true")
     ap.add_argument("--no-probes", action="store_true",
                     help="skip the loop-aware cost probes (faster)")
@@ -374,6 +415,17 @@ def main() -> int:
                             enabled=True, schedule=args.pipeline_schedule,
                             n_micro=args.n_micro,
                             n_stages=args.pipeline_stages))
+                if args.ckpt and shape.mode == "train":
+                    from repro.configs.base import CheckpointPlan
+                    r["checkpoint"] = checkpoint_cell(
+                        arch, shape.name, multi_pod=args.multi_pod,
+                        policy=args.policy, placement=args.placement,
+                        compress=args.compress, opt_bits=args.opt_bits,
+                        ckpt=CheckpointPlan(
+                            enabled=True, tier=args.ckpt_tier,
+                            codec=args.ckpt_codec, every=args.ckpt_every,
+                            async_saves=args.ckpt_async,
+                            mtbf_steps=args.mtbf_steps))
                 results.append(r)
                 tr = r.get("traffic", {})
                 print(f"[ok]   {tag}: compile={r['compile_s']}s "
@@ -392,6 +444,15 @@ def main() -> int:
                           f"act/stage="
                           f"{p['act_wire_bytes_per_stage']/1e9:.3f}GB "
                           f"tier[{p['tier']}]")
+                if "checkpoint" in r:
+                    c = r["checkpoint"]
+                    print(f"       checkpoint[{c['tier']}]: "
+                          f"every={c['every']} "
+                          f"snap={c['snapshot_bytes']/1e9:.3f}GB "
+                          f"save={c['save_s']:.2f}s "
+                          f"overhead={c['overhead_s_per_step']*1e3:.2f}ms"
+                          f"/step lost={c['lost_s_per_step']*1e3:.2f}ms"
+                          f"/step{' async' if c['async'] else ''}")
             except Exception as e:  # noqa: BLE001 — a failed cell is a bug
                 results.append({"arch": arch, "shape": shape.name,
                                 "mesh": "2x16x16" if args.multi_pod

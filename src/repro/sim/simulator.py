@@ -205,6 +205,87 @@ def simulate_pipeline(dag: LayerDAG, sys: SystemConfig, n_stages: int,
 
 
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CheckpointCost:
+    system: str
+    tier_kind: str               # device | host | pooled
+    every: int                   # cadence (steps between snapshots)
+    snapshot_bytes: float        # global bytes of one snapshot
+    step_s: float                # simulated iteration time
+    save_s: float                # one snapshot drain through the tier
+    overhead_s: float            # amortized unhidden save, per step
+    lost_s: float                # expected replay loss, per step
+    async_saves: bool
+
+    @property
+    def total_s(self) -> float:
+        return self.overhead_s + self.lost_s
+
+    @property
+    def overhead_frac(self) -> float:
+        return self.total_s / self.step_s if self.step_s > 0 else 0.0
+
+
+def simulate_checkpoint(dag: LayerDAG, sys: SystemConfig,
+                        state_bytes: float, *,
+                        every: int = 0, async_saves: bool = False,
+                        mtbf_steps: int = 10_000,
+                        parallel: str = "dp") -> CheckpointCost:
+    """Snapshot-cost model over a system design point's backing tier.
+
+    The snapshot (params + optimizer moments, sharded over the devices)
+    drains through the same DC/HC/MC ``TierSpec`` the virtualization
+    traffic uses — a checkpoint is cold pooled state riding the identical
+    channel, so its cost obeys the same bandwidth-contention law
+    (``effective_bw`` divides the host/pool bandwidth across concurrent
+    devices).  ``every=0`` sweeps the Young-Daly cadence grid against the
+    *simulated* step time and keeps the minimizer of amortized unhidden
+    save + expected replay; async saves hide up to ``every . step`` of
+    the drain behind the next steps.  The oracle design point snapshots
+    HBM-to-HBM (nothing crosses a wire).
+    """
+    from repro.core.policy import CADENCE_CANDIDATES
+    step = simulate(dag, sys, parallel).total
+    tier = sys.backing_tier
+    n = max(1, sys.n_devices)
+    if tier.is_oracle:
+        bw = sys.device.hbm_bw
+    else:
+        bw = tier.effective_bw(n, sys.n_sockets)
+    save_s = (state_bytes / n) / bw if bw > 0 else 0.0
+    cands = [every] if every > 0 else list(CADENCE_CANDIDATES)
+    best = None
+    for k in cands:
+        unhidden = max(0.0, save_s - k * step) if async_saves else save_s
+        overhead = unhidden / k
+        lost = (k / 2.0) * step / max(mtbf_steps, 1)
+        if best is None or overhead + lost < best[1] + best[2]:
+            best = (k, overhead, lost)
+    k, overhead, lost = best
+    return CheckpointCost(system=sys.name, tier_kind=tier.kind, every=k,
+                          snapshot_bytes=state_bytes, step_s=step,
+                          save_s=save_s, overhead_s=overhead, lost_s=lost,
+                          async_saves=async_saves)
+
+
+def checkpoint_table(workloads: Dict[str, LayerDAG], systems,
+                     state_bytes_of, *, mtbf_steps: int = 10_000,
+                     async_saves: bool = True
+                     ) -> Dict[str, Dict[str, CheckpointCost]]:
+    """Per-workload checkpoint overhead across the system design points
+    (the fault-tolerance analogue of :func:`speedup_table`).
+    ``state_bytes_of``: workload name -> snapshot bytes."""
+    out: Dict[str, Dict[str, CheckpointCost]] = {}
+    for wname, dag in workloads.items():
+        out[wname] = {}
+        for s in systems:
+            out[wname][s.name] = simulate_checkpoint(
+                dag, s, state_bytes_of(wname), mtbf_steps=mtbf_steps,
+                async_saves=async_saves)
+    return out
+
+
+# ---------------------------------------------------------------------------
 def speedup_table(workloads: Dict[str, LayerDAG], systems,
                   parallel: str = "dp", baseline: str = "DC-DLA"
                   ) -> Dict[str, Dict[str, float]]:

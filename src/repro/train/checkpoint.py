@@ -1,9 +1,25 @@
-"""Sharded, atomic checkpoints with reshard-on-load.
+"""Sharded, atomic, tier-backed checkpoints with reshard-on-load.
 
 No orbax offline — implemented directly on numpy + manifest json:
 
+* **checkpoint-as-a-tier**: snapshots flow *through* a
+  :class:`~repro.core.runtime.MemoryRuntime` whose tier stack is the
+  :class:`~repro.core.tiers.CheckpointTier` (host or pooled backing store,
+  optional codec), metered as ``ckpt_save``/``ckpt_load`` in
+  ``traffic_report`` — a checkpoint is cold pooled state, not a
+  side-channel write (ISSUE 6).  The manifest accounts the same raw/wire
+  bytes the meter counts, so the report is checkable against disk truth.
 * **atomic**: written to ``<dir>/tmp.<step>`` then ``os.replace``d into
-  ``<dir>/step_<n>`` — a crash mid-save never corrupts the latest.
+  ``<dir>/step_<n>`` — a crash mid-save never corrupts the latest; stale
+  ``tmp.*`` orphans from a crashed save are swept on the next save.
+* **sharded + CRC-validated**: leaves are packed into ``shards`` npz files
+  balanced by bytes; the manifest records a crc32 per shard, and
+  :meth:`restore` raises :class:`CheckpointError` (``restore_latest``
+  skips + warns) on a missing/corrupt manifest or shard.
+* **async double-buffered saves**: the device→host gather is synchronous
+  (the train step donates its input buffers), the encode+write+commit
+  overlaps the next train steps in a background thread; at most one save
+  is in flight (:meth:`wait` joins and re-raises).
 * **keep-K** garbage collection.
 * **reshard-on-load** (elastic scaling): leaves are stored as full arrays;
   ``to_device`` re-places them under the *current* model's shardings, so a
@@ -23,7 +39,9 @@ import json
 import logging
 import os
 import shutil
-from typing import Any, Dict, Optional, Tuple
+import threading
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +51,12 @@ log = logging.getLogger(__name__)
 Pytree = Any
 
 _SEP = "::"
+_SCALE_SUFFIX = "::scale"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint directory failed validation (missing/corrupt manifest,
+    missing shard, CRC mismatch).  ``restore_latest`` skips past these."""
 
 
 def _flatten(tree: Pytree) -> Dict[str, Any]:
@@ -45,32 +69,124 @@ def _flatten(tree: Pytree) -> Dict[str, Any]:
     return out
 
 
+def make_ckpt_runtime(ckpt, plan, memory, planner=None, mesh=None,
+                      keep: int = 1):
+    """Build the snapshot runtime for a :class:`CheckpointPlan`: the
+    requested backing store behind the CheckpointTier drain with the
+    snapshot codec stacked on top (core.tiers.build_ckpt_tier)."""
+    from repro.core.runtime import MemoryRuntime
+    from repro.core.tiers import build_ckpt_tier
+    from repro.parallel.sharding import ShardingPlanner
+    planner = planner or ShardingPlanner(plan)
+    tier = build_ckpt_tier(memory, planner, mesh, backing=ckpt.tier,
+                           codec=ckpt.codec, keep=keep)
+    return MemoryRuntime(plan, memory, mesh, planner=planner, tier=tier)
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    """Snapshot writer/reader over a checkpoint-tier runtime.
+
+    runtime: a :class:`~repro.core.runtime.MemoryRuntime` whose tier is a
+    CheckpointTier stack (:func:`make_ckpt_runtime`); None falls back to
+    direct un-metered writes (the legacy path — tests and callers that
+    never configured a CheckpointPlan keep working unchanged).
+    on_commit: callback ``(step, final_dir)`` invoked after the atomic
+    rename — the chaos harness corrupts a committed shard through it.
+    """
+
+    def __init__(self, directory: str, keep: int = 3,
+                 runtime=None, shards: int = 1,
+                 async_saves: bool = False,
+                 on_commit: Optional[Callable[[int, str], None]] = None):
         self.dir = directory
         self.keep = keep
+        self.runtime = runtime
+        self.shards = max(1, shards)
+        self.async_saves = async_saves
+        self.on_commit = on_commit
+        self._inflight: Optional[threading.Thread] = None
+        self._async_exc: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------
-    def save(self, step: int, payload: Pytree) -> str:
+    # save path
+    def _encode(self, state: Pytree) -> Tuple[Dict[str, np.ndarray],
+                                              List[Dict[str, Any]],
+                                              Dict[str, float]]:
+        """Flatten + push every leaf through the snapshot tier, gathered to
+        host numpy.  Synchronous by design: the caller's next train step
+        donates the state buffers, so nothing may reference them after
+        this returns."""
+        flat = _flatten(state)
+        arrays: Dict[str, np.ndarray] = {}
+        entries: List[Dict[str, Any]] = []
+        raw_total = wire_total = 0.0
+        for key, leaf in flat.items():
+            if leaf is None:
+                continue
+            logical_dtype = str(jnp.asarray(leaf).dtype)
+            logical_shape = list(np.shape(leaf))
+            if self.runtime is not None:
+                q, scale = self.runtime.snapshot(jnp.asarray(leaf))
+            else:
+                q, scale = leaf, None
+            q_np = np.asarray(jax.device_get(q))
+            arrays[key] = q_np
+            entry = {"key": key, "dtype": logical_dtype,
+                     "shape": logical_shape,
+                     "payload_dtype": str(q_np.dtype),
+                     "nbytes": int(q_np.nbytes)}
+            raw = float(np.dtype(logical_dtype).itemsize) * \
+                float(np.prod(logical_shape or [1]))
+            wire = float(q_np.nbytes)
+            if scale is not None:
+                s_np = np.asarray(jax.device_get(scale))
+                arrays[key + _SCALE_SUFFIX] = s_np
+                entry["scale_dtype"] = str(s_np.dtype)
+                entry["nbytes"] += int(s_np.nbytes)
+                wire += float(s_np.nbytes)
+            raw_total += raw
+            wire_total += wire
+            entries.append(entry)
+        return arrays, entries, {"raw": raw_total, "wire": wire_total}
+
+    def _assign_shards(self, entries: List[Dict[str, Any]]) -> None:
+        """Balance leaves over shard files by cumulative payload bytes."""
+        load = [0] * self.shards
+        for e in sorted(entries, key=lambda e: -e["nbytes"]):
+            s = load.index(min(load))
+            e["shard"] = s
+            load[s] += e["nbytes"]
+
+    @staticmethod
+    def shard_file(index: int) -> str:
+        return "arrays.npz" if index == 0 else f"arrays.{index}.npz"
+
+    def _write_commit(self, step: int, arrays: Dict[str, np.ndarray],
+                      meta: Dict[str, Any]) -> str:
+        """Write shards + manifest into tmp.<step>, then atomically
+        commit.  Runs on the async thread when async_saves is set."""
         tmp = os.path.join(self.dir, f"tmp.{step}")
         final = os.path.join(self.dir, f"step_{step:08d}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        state = payload.get("state")
-        flat = _flatten(state)
-        arrays = {}
-        meta = {"step": step, "keys": [], "data": payload.get("data")}
-        for key, leaf in flat.items():
-            if leaf is None:
-                continue
-            arr = np.asarray(jax.device_get(leaf))
-            arrays[key] = arr
-            meta["keys"].append({"key": key, "dtype": str(arr.dtype),
-                                 "shape": list(arr.shape)})
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{k: v for k, v in arrays.items()})
+        by_shard: Dict[int, Dict[str, np.ndarray]] = {}
+        for e in meta["keys"]:
+            sh = by_shard.setdefault(e["shard"], {})
+            sh[e["key"]] = arrays[e["key"]]
+            if e["key"] + _SCALE_SUFFIX in arrays:
+                sh[e["key"] + _SCALE_SUFFIX] = arrays[e["key"] + _SCALE_SUFFIX]
+        meta["shards"] = []
+        for s in range(self.shards):
+            fname = self.shard_file(s)
+            path = os.path.join(tmp, fname)
+            np.savez(path, **by_shard.get(s, {}))
+            with open(path, "rb") as f:
+                blob = f.read()
+            meta["shards"].append({"file": fname,
+                                   "crc32": zlib.crc32(blob) & 0xFFFFFFFF,
+                                   "nbytes": len(blob)})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(meta, f)
         if os.path.exists(final):
@@ -78,7 +194,48 @@ class CheckpointManager:
         os.replace(tmp, final)
         self._gc()
         log.info("checkpoint written: %s", final)
+        if self.on_commit is not None:
+            self.on_commit(step, final)
         return final
+
+    def save(self, step: int, payload: Pytree) -> str:
+        """Snapshot ``payload["state"]`` (+ data-iterator state) at
+        ``step``.  Returns the final directory (sync) or the directory the
+        async commit will land in."""
+        self.wait()
+        # sweep orphaned tmp dirs a crashed previous save left behind
+        for name in os.listdir(self.dir):
+            if name.startswith("tmp."):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
+        arrays, entries, nbytes = self._encode(payload.get("state"))
+        meta = {"step": step, "keys": entries, "data": payload.get("data"),
+                "bytes": nbytes,
+                "codec": getattr(self.runtime, "tier", None) and
+                self.runtime.tier.describe() or "none"}
+        self._assign_shards(entries)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if not self.async_saves:
+            return self._write_commit(step, arrays, meta)
+
+        def _bg():
+            try:
+                self._write_commit(step, arrays, meta)
+            except BaseException as e:      # noqa: BLE001 — re-raised in wait
+                self._async_exc = e
+        self._inflight = threading.Thread(target=_bg, daemon=True,
+                                          name=f"ckpt-save-{step}")
+        self._inflight.start()
+        return final
+
+    def wait(self) -> None:
+        """Join the in-flight async save; re-raise its failure if any."""
+        if self._inflight is not None:
+            self._inflight.join()
+            self._inflight = None
+        if self._async_exc is not None:
+            exc, self._async_exc = self._async_exc, None
+            raise exc
 
     def _gc(self):
         steps = self.all_steps()
@@ -97,25 +254,104 @@ class CheckpointManager:
         return sorted(out)
 
     # ------------------------------------------------------------------
+    # restore path
+    def _read_manifest(self, path: str) -> Dict[str, Any]:
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.exists(mpath):
+            raise CheckpointError(f"{path}: manifest.json missing")
+        try:
+            with open(mpath) as f:
+                return json.load(f)
+        except (json.JSONDecodeError, OSError) as e:
+            raise CheckpointError(f"{path}: manifest.json unreadable: {e}")
+
+    def _read_shards(self, path: str,
+                     meta: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        arrays: Dict[str, np.ndarray] = {}
+        import io
+        for sh in meta.get("shards",
+                           [{"file": "arrays.npz", "crc32": None}]):
+            spath = os.path.join(path, sh["file"])
+            if not os.path.exists(spath):
+                raise CheckpointError(f"{path}: shard {sh['file']} missing")
+            with open(spath, "rb") as f:
+                blob = f.read()
+            if sh.get("crc32") is not None and \
+                    (zlib.crc32(blob) & 0xFFFFFFFF) != sh["crc32"]:
+                raise CheckpointError(
+                    f"{path}: shard {sh['file']} CRC mismatch "
+                    f"(corrupt or truncated)")
+            try:
+                with np.load(io.BytesIO(blob)) as z:
+                    for k in z.files:
+                        arrays[k] = z[k]
+            except Exception as e:      # zipfile/format errors vary
+                raise CheckpointError(
+                    f"{path}: shard {sh['file']} unreadable: {e}")
+        return arrays
+
     def restore(self, step: int) -> Tuple[int, Dict[str, Any]]:
+        """Read + validate + decode the snapshot at ``step``.
+
+        Raises :class:`CheckpointError` with the failing file on any
+        missing/corrupt manifest or shard — the fault-injection harness
+        (train/chaos.py) exercises exactly this path.
+        """
         path = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            meta = json.load(f)
-        dtypes = {e["key"]: e["dtype"] for e in meta["keys"]}
-        z = np.load(os.path.join(path, "arrays.npz"))
-        flat = {}
-        for k in z.files:
-            arr = z[k]
-            if arr.dtype.kind == "V":    # ml_dtypes (bfloat16/fp8) round-trip
-                arr = arr.view(np.dtype(dtypes[k]))
-            flat[k] = arr
-        return step, {"state": flat, "data": meta.get("data")}
+        if not os.path.isdir(path):
+            raise CheckpointError(f"{path}: no such checkpoint")
+        meta = self._read_manifest(path)
+        if "keys" not in meta:
+            raise CheckpointError(f"{path}: manifest has no key table")
+        raw = self._read_shards(path, meta)
+        flat: Dict[str, Any] = {}
+        for e in meta["keys"]:
+            key = e["key"]
+            if key not in raw:
+                raise CheckpointError(
+                    f"{path}: leaf {key!r} missing from its shard")
+            arr = raw[key]
+            pdtype = e.get("payload_dtype", e["dtype"])
+            if arr.dtype.kind == "V":   # ml_dtypes (bfloat16/fp8) round-trip
+                arr = arr.view(np.dtype(pdtype))
+            scale = raw.get(key + _SCALE_SUFFIX)
+            if self.runtime is not None:
+                from repro.core.tiers import TransferHints
+                x = self.runtime.restore_snapshot(
+                    (jnp.asarray(arr),
+                     None if scale is None else jnp.asarray(scale)),
+                    TransferHints(dtype=jnp.dtype(e["dtype"]), name=key))
+                flat[key] = np.asarray(jax.device_get(x))
+            elif scale is not None:
+                # codec payload restored without a tier runtime: decompress
+                # directly through the registry (manifest records the stack)
+                from repro.core.compress import get_codec
+                codec = next((c for c in ("fp8", "int8", "blocksparse")
+                              if c in meta.get("codec", "")), None)
+                if codec is None:
+                    raise CheckpointError(
+                        f"{path}: leaf {key!r} is codec-compressed "
+                        f"({meta.get('codec')}) but no codec is resolvable")
+                x = get_codec(codec).decompress(
+                    jnp.asarray(arr), jnp.asarray(scale),
+                    jnp.dtype(e["dtype"]))
+                flat[key] = np.asarray(jax.device_get(x))
+            else:
+                flat[key] = arr
+        return meta.get("step", step), {"state": flat,
+                                        "data": meta.get("data")}
 
     def restore_latest(self) -> Optional[Tuple[int, Dict[str, Any]]]:
-        steps = self.all_steps()
-        if not steps:
-            return None
-        return self.restore(steps[-1])
+        """Restore the newest checkpoint that validates, skipping (with a
+        warning) any step dir with a corrupt manifest or shard."""
+        self.wait()
+        for step in reversed(self.all_steps()):
+            try:
+                return self.restore(step)
+            except CheckpointError as e:
+                log.warning("skipping corrupt checkpoint step %d: %s",
+                            step, e)
+        return None
 
 
 # ---------------------------------------------------------------------------

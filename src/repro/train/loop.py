@@ -12,7 +12,9 @@ import jax.numpy as jnp
 from repro.configs.base import TrainConfig
 from repro.models.model import Model
 from repro.parallel.pipeline import accumulate_microbatches
+from repro.train import chaos as chaos_mod
 from repro.train import checkpoint as ckpt_mod
+from repro.train import fault as fault_mod
 from repro.train.optimizer import apply_adamw
 from repro.train.train_state import init_state, state_shardings
 
@@ -72,25 +74,61 @@ def jit_train_step(model: Model, tc: TrainConfig, batch_shardings=None):
 
 
 # ---------------------------------------------------------------------------
+def make_manager(model: Model, tc: TrainConfig, ckpt=None, chaos=None
+                 ) -> ckpt_mod.CheckpointManager:
+    """Build the run's CheckpointManager: tier-backed + metered when a
+    :class:`~repro.configs.base.CheckpointPlan` is enabled, the legacy
+    direct writer otherwise.  The chaos harness's shard corruptor rides
+    on the manager's post-commit hook."""
+    on_commit = chaos.after_save if chaos is not None else None
+    if ckpt is None or not ckpt.enabled:
+        return ckpt_mod.CheckpointManager(tc.checkpoint_dir,
+                                          keep=tc.keep_checkpoints,
+                                          on_commit=on_commit)
+    runtime = ckpt_mod.make_ckpt_runtime(ckpt, model.plan, model.memory,
+                                         planner=model.planner,
+                                         mesh=model.mesh,
+                                         keep=tc.keep_checkpoints)
+    return ckpt_mod.CheckpointManager(tc.checkpoint_dir,
+                                      keep=tc.keep_checkpoints,
+                                      runtime=runtime, shards=ckpt.shards,
+                                      async_saves=ckpt.async_saves,
+                                      on_commit=on_commit)
+
+
 def train(model: Model, tc: TrainConfig, data_iter, *,
           state: Optional[Pytree] = None,
           fault_handler=None,
-          hooks: Optional[Dict[str, Callable]] = None
+          hooks: Optional[Dict[str, Callable]] = None,
+          ckpt=None, chaos=None, elastic=None, mgr=None
           ) -> Tuple[Pytree, Dict[str, jax.Array]]:
     """The end-to-end driver (examples/train_*.py).
 
     data_iter: yields (step_idx, batch) — resumable via its own state.
     fault_handler: train.fault.FaultHandler (SIGTERM-safe checkpointing).
+    ckpt: optional :class:`~repro.configs.base.CheckpointPlan` — snapshots
+      then flow through the checkpoint tier (metered ``ckpt_save`` /
+      ``ckpt_load``), sharded + CRC-manifested, optionally async.
+    chaos: optional :class:`~repro.train.chaos.ChaosMonkey` — injects the
+      scheduled kills (absorbed by ``retry_step``), preemptions (the
+      SIGTERM path), shard corruptions and stage losses.
+    elastic: optional :class:`~repro.train.elastic.ElasticController` —
+      on a stage loss, replans the pipeline for the surviving stages and
+      restores from the checkpoint tier; without it a stage loss is
+      fatal.
+    mgr: override the CheckpointManager (tests wiring custom runtimes).
 
     Returns ``(state, metrics)``: the final train state and the last
-    step's metrics.  On exit it logs the memory-tier traffic summary, and
-    — when the model trains through a pipeline schedule — the stage
-    tier's ``act_stash``/``act_fetch`` traffic as a separate
-    "pipeline traffic" line.
+    step's metrics.  On exit it logs the memory-tier traffic summary, the
+    stage tier's ``act_stash``/``act_fetch`` traffic for pipelined runs,
+    and the checkpoint tier's ``ckpt_save``/``ckpt_load`` traffic.
     """
     hooks = hooks or {}
     step_fn = jit_train_step(model, tc)
-    mgr = ckpt_mod.CheckpointManager(tc.checkpoint_dir, keep=tc.keep_checkpoints)
+    if mgr is None:
+        mgr = make_manager(model, tc, ckpt, chaos)
+    ckpt_every = (ckpt.every if ckpt is not None and ckpt.every > 0
+                  else tc.checkpoint_every)
 
     start_step = 0
     if state is None:
@@ -113,8 +151,23 @@ def train(model: Model, tc: TrainConfig, data_iter, *,
             continue
         if step_idx >= tc.total_steps:
             break
+        if chaos is not None:
+            try:
+                chaos.before_step(step_idx, fault_handler)
+            except chaos_mod.StageLostError as err:
+                if elastic is None:
+                    raise
+                model, state, start_step = elastic.recover(
+                    tc, data_iter, err.stage)
+                step_fn = jit_train_step(model, tc)
+                continue
         t0 = time.perf_counter()
-        state, metrics = step_fn(state, batch)
+        if chaos is not None:
+            state, metrics = fault_mod.retry_step(
+                chaos.wrap_step(step_fn, step_idx), state, batch,
+                retries=chaos.retries, backoff=chaos.backoff)
+        else:
+            state, metrics = step_fn(state, batch)
         if fault_handler is not None:
             fault_handler.observe_step(time.perf_counter() - t0)
         times.append(time.perf_counter() - t0)
@@ -127,7 +180,7 @@ def train(model: Model, tc: TrainConfig, data_iter, *,
                      m.get("lr", 0), 1e3 * times[-1])
             if "on_log" in hooks:
                 hooks["on_log"](done, m)
-        save_now = (done % tc.checkpoint_every == 0)
+        save_now = (done % ckpt_every == 0)
         if fault_handler is not None and fault_handler.should_stop:
             save_now = True
         if save_now:
@@ -135,12 +188,18 @@ def train(model: Model, tc: TrainConfig, data_iter, *,
                           if hasattr(data_iter, "get_state") else None)
             mgr.save(done, {"state": state, "data": data_state})
         if fault_handler is not None and fault_handler.should_stop:
+            mgr.wait()      # the preemption checkpoint must land on disk
             log.warning("preemption requested — checkpoint written, exiting")
             break
+    mgr.wait()
     runtime = getattr(model, "runtime", None)
     if runtime is not None and runtime.offloads:
         log.info("memory traffic: %s", runtime.traffic_summary())
     stage_runtime = getattr(model, "stage_runtime", None)
     if stage_runtime is not None and stage_runtime.offloads:
         log.info("pipeline traffic: %s", stage_runtime.traffic_summary())
+    if mgr.runtime is not None:
+        log.info("checkpoint traffic: %s", mgr.runtime.traffic_summary())
+    if chaos is not None:
+        log.info("chaos events fired: %s", chaos.summary())
     return state, metrics

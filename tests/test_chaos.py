@@ -1,0 +1,199 @@
+"""Fault-injection harness + elastic recovery + retry-path regressions.
+
+Covers ISSUE 6's acceptance scenario end to end: under a seeded chaos
+schedule (step kill, snapshot-shard corruption, preemption) training
+resumes from the checkpoint tier with a loss curve bit-identical to the
+uninterrupted run at the same seed; the stage-loss + replan + reshard
+path runs under 2 host devices (tests/multidev/elastic.py).
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from conftest import run_multidev
+from repro.configs import ARCHS, MemoryPlan, MeshPlan, RunConfig, TrainConfig
+from repro.configs.base import CheckpointPlan, ShapeConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import build_model
+from repro.train.chaos import (ChaosMonkey, ChaosSchedule, StageLostError,
+                               TransientCollectiveError)
+from repro.train.checkpoint import _flatten
+from repro.train.fault import FaultHandler, retry_step
+from repro.train.loop import make_manager, train
+
+CFG = ARCHS["smollm-135m"].reduced()
+PLAN1 = MeshPlan((1,), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# schedule
+def test_schedule_parse_roundtrip():
+    spec = "kill@3:2,corrupt@5,stage_loss@7:1,preempt@9"
+    sched = ChaosSchedule.parse(spec)
+    assert [e.kind for e in sched.events] == \
+        ["kill", "corrupt", "stage_loss", "preempt"]
+    assert sched.events[0].arg == 2
+    assert sched.events[1].arg == -1
+    assert sched.spec() == "kill@3:2,corrupt@5,stage_loss@7:1,preempt@9"
+
+
+def test_schedule_parse_rejects_garbage():
+    with pytest.raises(ValueError, match="unknown chaos kind"):
+        ChaosSchedule.parse("explode@3")
+    with pytest.raises(ValueError, match="bad chaos event"):
+        ChaosSchedule.parse("kill@three")
+
+
+def test_schedule_random_is_seeded():
+    a = ChaosSchedule.random(7, 200)
+    b = ChaosSchedule.random(7, 200)
+    c = ChaosSchedule.random(8, 200)
+    assert a.spec() == b.spec()
+    assert a.spec() != c.spec()
+    assert len(a.events) > 0
+
+
+# ---------------------------------------------------------------------------
+# monkey hooks
+def test_wrap_step_kills_then_passes_through():
+    chaos = ChaosMonkey(ChaosSchedule.parse("kill@2:2"))
+    calls = []
+
+    def step(state, batch):
+        calls.append(1)
+        return state + 1, {}
+
+    assert chaos.wrap_step(step, 0) is step          # unarmed step: no wrap
+    wrapped = chaos.wrap_step(step, 2)
+    for _ in range(2):
+        with pytest.raises(TransientCollectiveError):
+            wrapped(0, None)
+    assert wrapped(0, None)[0] == 1                  # third attempt runs
+    assert calls == [1]
+    assert chaos.fired == ["kill@2", "kill@2"]
+
+
+def test_before_step_stage_loss_and_preempt():
+    chaos = ChaosMonkey(ChaosSchedule.parse("stage_loss@4:1,preempt@6"))
+    chaos.before_step(3)                             # nothing scheduled
+    with pytest.raises(StageLostError) as e:
+        chaos.before_step(4)
+    assert e.value.stage == 1
+    chaos.before_step(4)                             # fired once only
+    fh = FaultHandler(install_signals=False)
+    chaos.before_step(6, fh)
+    assert fh.should_stop
+    assert chaos.fired == ["stage_loss@4", "preempt@6"]
+
+
+def test_after_save_flips_a_shard_byte(tmp_path):
+    d = tmp_path / "step_00000002"
+    d.mkdir()
+    blob = bytes(range(256))
+    (d / "arrays.npz").write_bytes(blob)
+    (d / "arrays.1.npz").write_bytes(blob)
+    chaos = ChaosMonkey(ChaosSchedule.parse("corrupt@1:1"), seed=3)
+    chaos.after_save(2, str(d))                      # event step 1 <= 2: due
+    assert (d / "arrays.npz").read_bytes() == blob   # arg pins shard 1
+    assert (d / "arrays.1.npz").read_bytes() != blob
+    assert chaos.fired == ["corrupt@2:arrays.1.npz"]
+    chaos.after_save(3, str(d))                      # one-shot
+    assert len(chaos.fired) == 1
+
+
+# ---------------------------------------------------------------------------
+# retry_step regression (the terminal-backoff bug)
+def test_retry_step_no_sleep_after_final_failure():
+    sleeps = []
+
+    def boom(state, batch):
+        raise RuntimeError("always")
+
+    with pytest.raises(RuntimeError, match="always"):
+        retry_step(boom, None, None, retries=3, backoff=0.5,
+                   sleep=sleeps.append)
+    # exponential backoff between attempts, but NO sleep after the last
+    # failed attempt before raising
+    assert sleeps == [0.5, 1.0, 2.0]
+
+
+def test_retry_step_sleeps_only_between_failures():
+    sleeps = []
+    attempts = []
+
+    def flaky(state, batch):
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_step(flaky, None, None, retries=4, backoff=0.25,
+                      sleep=sleeps.append) == "ok"
+    assert sleeps == [0.25, 0.5]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: seeded chaos run resumes bit-identical (acceptance criterion)
+def _build(tc):
+    run = RunConfig(model=CFG, shape=ShapeConfig("t", 64, 4, "train"),
+                    mesh=PLAN1, memory=MemoryPlan(policy="none"), train=tc)
+    return build_model(run)
+
+
+def test_chaos_run_resumes_bit_identical():
+    curves = {}
+
+    def hooks(tag):
+        curves[tag] = []
+        return {"on_log": lambda s, m: curves[tag].append((s, m["loss"]))}
+
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(total_steps=10, warmup_steps=2, learning_rate=1e-2,
+                         checkpoint_every=100, log_every=1, checkpoint_dir=d)
+        ref_state, _ = train(_build(tc),
+                             tc, iter(SyntheticLM(CFG, batch=4, seq=64,
+                                                  seed=0)),
+                             hooks=hooks("ref"))
+
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(total_steps=10, warmup_steps=2, learning_rate=1e-2,
+                         checkpoint_every=2, log_every=1, checkpoint_dir=d)
+        ckpt = CheckpointPlan(enabled=True, tier="host", codec="none",
+                              shards=2, async_saves=True)
+        chaos = ChaosMonkey(ChaosSchedule.parse("kill@3:2,corrupt@4,preempt@7"),
+                            retries=2, backoff=0.0)
+        m = _build(tc)
+        mgr = make_manager(m, tc, ckpt, chaos)
+        train(m, tc, iter(SyntheticLM(CFG, batch=4, seq=64, seed=0)),
+              fault_handler=FaultHandler(install_signals=False),
+              ckpt=ckpt, chaos=chaos, mgr=mgr, hooks=hooks("part1"))
+        fired = ",".join(chaos.fired)
+        assert "kill@3" in fired and "corrupt@" in fired \
+            and "preempt@7" in fired, fired
+        tr = mgr.runtime.traffic_report()
+        assert tr["ckpt_save"]["wire_bytes"] > 0
+
+        # simulated process restart: fresh model + manager, restore from disk
+        m2 = _build(tc)
+        mgr2 = make_manager(m2, tc, ckpt, None)
+        state2, _ = train(m2, tc, iter(SyntheticLM(CFG, batch=4, seq=64,
+                                                   seed=0)),
+                          fault_handler=FaultHandler(install_signals=False),
+                          ckpt=ckpt, mgr=mgr2, hooks=hooks("part2"))
+        assert mgr2.runtime.traffic_report()["ckpt_load"]["wire_bytes"] > 0
+
+    ref = dict(curves["ref"])
+    for s, l in curves["part1"] + curves["part2"]:
+        assert ref[s] == l, (s, l, ref[s])          # bit-identical curve
+    for k, leaf in _flatten(ref_state).items():
+        if leaf is not None:
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.asarray(_flatten(state2)[k]),
+                                          err_msg=k)
+
+
+def test_elastic_stage_loss():
+    out = run_multidev("elastic.py", devices=2, timeout=900)
+    assert "elastic stage-loss recovery OK" in out

@@ -1,0 +1,319 @@
+"""Checkpoint-as-a-tier: CheckpointTier stack, metered snapshot runtime,
+cadence planning, and the sharded/atomic/async CheckpointManager.
+
+The manifest accounts the same raw/wire bytes the ``ckpt_save`` /
+``ckpt_load`` meters count, so every test closes the loop against disk
+truth; crash-mid-save and corruption paths pin the atomicity guarantees
+the chaos harness (tests/test_chaos.py) relies on.
+"""
+import glob
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CheckpointPlan, MemoryPlan, MeshPlan
+from repro import hw
+from repro.core.policy import (CADENCE_CANDIDATES, plan_checkpoint,
+                               plan_memory, summarize)
+from repro.core.tiers import (CheckpointTier, HostTier, build_ckpt_tier,
+                              registered_policies)
+from repro.parallel.sharding import ShardingPlanner
+from repro.train.checkpoint import (CheckpointError, CheckpointManager,
+                                    make_ckpt_runtime)
+
+PLAN1 = MeshPlan((1,), ("data",))
+MEM = MemoryPlan()
+
+
+def _runtime(ckpt=None, keep=1):
+    ckpt = ckpt or CheckpointPlan(enabled=True, tier="host", codec="none")
+    return make_ckpt_runtime(ckpt, PLAN1, MEM, keep=keep)
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(64 * 32,
+                                   dtype=jnp.float32).reshape(64, 32) / 7,
+                   "b": jnp.ones((32,), jnp.bfloat16)},
+        "opt": {"mu": jnp.zeros((64, 32), jnp.float32)},
+        "step": jnp.array(3, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# tier layer
+def test_checkpoint_policy_registered():
+    assert "checkpoint" in registered_policies()
+
+
+def test_ckpt_tier_offloads_and_describes():
+    tier = build_ckpt_tier(MEM, ShardingPlanner(PLAN1), backing="host")
+    assert isinstance(tier, CheckpointTier)
+    assert tier.offloads
+    assert tier.describe() == "ckpt[host]"
+    codec = build_ckpt_tier(MEM, ShardingPlanner(PLAN1), backing="host",
+                            codec="fp8")
+    assert "ckpt[host]" in codec.describe() and "fp8" in codec.describe()
+
+
+def test_ckpt_tier_bandwidth_is_series_with_dcn():
+    tier = build_ckpt_tier(MEM, ShardingPlanner(PLAN1), backing="host")
+    inner_bw = tier.inner.bandwidth(PLAN1, hw.TPU_V5E)
+    bw = tier.bandwidth(PLAN1, hw.TPU_V5E)
+    assert 0 < bw <= min(inner_bw, hw.DCN_BW)   # series resistance
+
+
+def test_ckpt_tier_capacity_scales_with_keep():
+    planner = ShardingPlanner(PLAN1)
+    t1 = build_ckpt_tier(MEM, planner, backing="host", keep=1)
+    t4 = build_ckpt_tier(MEM, planner, backing="host", keep=4)
+
+    class FakeAcct:
+        pass
+    acct = FakeAcct()
+    c1 = t1.capacity(acct) if hasattr(t1.inner, "capacity") else 0
+    c4 = t4.capacity(acct)
+    if c1 > 0:
+        assert c4 == pytest.approx(c1 / 4)
+
+
+def test_snapshot_metering_matches_payload_bytes():
+    from repro.core.tiers import TransferHints
+    rt = _runtime(CheckpointPlan(enabled=True, tier="host", codec="fp8"))
+    x = jnp.ones((128, 64), jnp.float32)
+    hints = TransferHints(dtype=jnp.dtype(jnp.float32), name="w")
+    payload = rt.snapshot(x, hints)
+    back = rt.restore_snapshot(payload, hints)
+    assert back.shape == x.shape and back.dtype == x.dtype
+    tr = rt.traffic_report()
+    raw = 128 * 64 * 4
+    assert tr["ckpt_save"]["raw_bytes"] == raw
+    # fp8 payload + f32 scales — actual bytes, not the analytic ratio
+    wire = sum(float(np.asarray(jax.device_get(p)).nbytes)
+               for p in payload if p is not None)
+    assert tr["ckpt_save"]["wire_bytes"] == wire
+    assert tr["ckpt_load"]["wire_bytes"] == wire
+    assert tr["ckpt_load"]["raw_bytes"] == raw
+
+
+# ---------------------------------------------------------------------------
+# cadence planner
+def test_plan_checkpoint_explicit_cadence():
+    tier = build_ckpt_tier(MEM, ShardingPlanner(PLAN1), backing="host")
+    dec = plan_checkpoint(1e9, 0.1, tier, PLAN1, every=25)
+    assert dec.every == 25
+    assert dec.snapshot_bytes == pytest.approx(1e9 * tier.payload_ratio())
+    assert dec.save_s > 0 and dec.total_s > 0
+
+
+def test_plan_checkpoint_sweeps_young_daly():
+    tier = build_ckpt_tier(MEM, ShardingPlanner(PLAN1), backing="host")
+    dec = plan_checkpoint(1e9, 0.1, tier, PLAN1, mtbf_steps=1000)
+    assert dec.every in CADENCE_CANDIDATES
+    # sweep must beat (or match) both extremes of the grid
+    lo = plan_checkpoint(1e9, 0.1, tier, PLAN1, every=CADENCE_CANDIDATES[0],
+                         mtbf_steps=1000)
+    hi = plan_checkpoint(1e9, 0.1, tier, PLAN1, every=CADENCE_CANDIDATES[-1],
+                         mtbf_steps=1000)
+    assert dec.total_s <= lo.total_s + 1e-12
+    assert dec.total_s <= hi.total_s + 1e-12
+
+
+def test_plan_checkpoint_async_hides_save():
+    tier = build_ckpt_tier(MEM, ShardingPlanner(PLAN1), backing="host")
+    sync = plan_checkpoint(1e9, 0.5, tier, PLAN1, every=10)
+    asyn = plan_checkpoint(1e9, 0.5, tier, PLAN1, every=10, async_saves=True)
+    assert asyn.overhead_s <= sync.overhead_s
+    assert asyn.async_saves and not sync.async_saves
+
+
+def test_plan_memory_attaches_checkpoint_decision():
+    from repro.configs import ARCHS
+    from repro.configs.base import ShapeConfig
+    from repro.core.dag import build_dag
+    cfg = ARCHS["smollm-135m"].reduced()
+    dag = build_dag(cfg, ShapeConfig("t", 64, 4, "train"))
+    report = plan_memory(dag, PLAN1, MEM,
+                         model_state_bytes=cfg.param_count() * 16.0,
+                         checkpoint=CheckpointPlan(enabled=True, tier="host",
+                                                   mtbf_steps=500))
+    assert report.checkpoint is not None
+    assert report.checkpoint.every >= 1
+    assert report.checkpoint.snapshot_bytes > 0
+    assert "ckpt[" in summarize(report)
+
+
+# ---------------------------------------------------------------------------
+# manager: roundtrip / shards / async / metering == manifest
+@pytest.mark.parametrize("codec,exact", [("none", True), ("fp8", False),
+                                         ("int8", False)])
+def test_manager_roundtrip_codecs(codec, exact):
+    with tempfile.TemporaryDirectory() as d:
+        rt = _runtime(CheckpointPlan(enabled=True, tier="host", codec=codec))
+        mgr = CheckpointManager(d, keep=2, runtime=rt)
+        state = _state()
+        mgr.save(7, {"state": state, "data": {"step": 7, "seed": 0}})
+        step, payload = mgr.restore_latest()
+        assert step == 7
+        assert payload["data"] == {"step": 7, "seed": 0}
+        got = payload["state"]["params::w"]
+        want = np.asarray(state["params"]["w"])
+        if exact:
+            np.testing.assert_array_equal(got, want)
+        else:
+            # quantization floor: half an int8 step at the tensor's max
+            atol = float(np.max(np.abs(want))) / 127 + 1e-6
+            np.testing.assert_allclose(got, want, rtol=0.1, atol=atol)
+        man = json.load(open(os.path.join(d, "step_00000007",
+                                          "manifest.json")))
+        tr = rt.traffic_report()
+        assert tr["ckpt_save"]["wire_bytes"] == man["bytes"]["wire"]
+        assert tr["ckpt_load"]["wire_bytes"] == man["bytes"]["wire"]
+        if codec != "none":
+            assert man["bytes"]["wire"] < man["bytes"]["raw"]
+
+
+def test_manager_shards_balanced_and_all_read():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=1, runtime=_runtime(), shards=3)
+        mgr.save(1, {"state": _state(), "data": None})
+        files = sorted(os.path.basename(p) for p in
+                       glob.glob(os.path.join(d, "step_00000001", "*.npz")))
+        assert files == ["arrays.1.npz", "arrays.2.npz", "arrays.npz"]
+        man = json.load(open(os.path.join(d, "step_00000001",
+                                          "manifest.json")))
+        assert len(man["shards"]) == 3
+        assert {e["shard"] for e in man["keys"]} <= {0, 1, 2}
+        step, payload = mgr.restore_latest()
+        np.testing.assert_array_equal(payload["state"]["params::w"],
+                                      np.asarray(_state()["params"]["w"]))
+
+
+def test_manager_async_save_overlaps_and_waits():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, runtime=_runtime(),
+                                async_saves=True)
+        mgr.save(1, {"state": _state(), "data": None})
+        mgr.save(2, {"state": _state(), "data": None})  # waits for save 1
+        mgr.wait()
+        assert mgr.all_steps() == [1, 2]
+        step, _ = mgr.restore_latest()
+        assert step == 2
+
+
+def test_manager_async_failure_surfaces_in_wait(monkeypatch):
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, runtime=_runtime(),
+                                async_saves=True)
+        monkeypatch.setattr(
+            "repro.train.checkpoint.os.replace",
+            lambda *a: (_ for _ in ()).throw(OSError("disk gone")))
+        mgr.save(1, {"state": _state(), "data": None})
+        with pytest.raises(OSError, match="disk gone"):
+            mgr.wait()
+
+
+def test_legacy_manager_reads_tierless():
+    # no runtime: direct write, and a manifest without "shards" (legacy
+    # layout) still restores
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        mgr.save(5, {"state": _state(), "data": None})
+        man_path = os.path.join(d, "step_00000005", "manifest.json")
+        man = json.load(open(man_path))
+        del man["shards"]
+        json.dump(man, open(man_path, "w"))
+        step, payload = mgr.restore_latest()
+        assert step == 5
+        np.testing.assert_array_equal(payload["state"]["params::w"],
+                                      np.asarray(_state()["params"]["w"]))
+
+
+# ---------------------------------------------------------------------------
+# corruption handling (restore raises, restore_latest skips + warns)
+def _two_checkpoints(d, mgr=None):
+    mgr = mgr or CheckpointManager(d, keep=3, runtime=_runtime(), shards=2)
+    mgr.save(1, {"state": _state(), "data": None})
+    mgr.save(2, {"state": _state(), "data": None})
+    return mgr
+
+
+def test_restore_raises_on_corrupt_shard():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = _two_checkpoints(d)
+        f = os.path.join(d, "step_00000002", "arrays.1.npz")
+        with open(f, "r+b") as fh:
+            fh.seek(40)
+            b = fh.read(1)
+            fh.seek(40)
+            fh.write(bytes([b[0] ^ 0xFF]))
+        with pytest.raises(CheckpointError, match="CRC mismatch"):
+            mgr.restore(2)
+        step, _ = mgr.restore_latest()          # skips + warns, falls back
+        assert step == 1
+
+
+def test_restore_raises_on_missing_shard():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = _two_checkpoints(d)
+        os.remove(os.path.join(d, "step_00000002", "arrays.npz"))
+        with pytest.raises(CheckpointError, match="arrays.npz missing"):
+            mgr.restore(2)
+        assert mgr.restore_latest()[0] == 1
+
+
+def test_restore_raises_on_bad_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = _two_checkpoints(d)
+        mpath = os.path.join(d, "step_00000002", "manifest.json")
+        with open(mpath, "w") as f:
+            f.write("{not json")
+        with pytest.raises(CheckpointError, match="manifest.json unreadable"):
+            mgr.restore(2)
+        os.remove(mpath)
+        with pytest.raises(CheckpointError, match="manifest.json missing"):
+            mgr.restore(2)
+        assert mgr.restore_latest()[0] == 1
+
+
+def test_restore_raises_on_missing_step():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3, runtime=_runtime())
+        with pytest.raises(CheckpointError, match="no such checkpoint"):
+            mgr.restore(42)
+        assert mgr.restore_latest() is None
+
+
+# ---------------------------------------------------------------------------
+# crash-mid-save atomicity
+def test_crash_between_write_and_commit_preserves_previous(monkeypatch):
+    with tempfile.TemporaryDirectory() as d:
+        mgr = _two_checkpoints(d)
+        # crash injected between the arrays/manifest writes and os.replace:
+        # the commit never happens, step_3 must not exist
+        monkeypatch.setattr(
+            "repro.train.checkpoint.os.replace",
+            lambda *a: (_ for _ in ()).throw(OSError("power cut")))
+        with pytest.raises(OSError, match="power cut"):
+            mgr.save(3, {"state": _state(), "data": None})
+        monkeypatch.undo()
+        assert mgr.all_steps() == [1, 2]
+        assert mgr.restore_latest()[0] == 2     # previous step intact
+        orphans = glob.glob(os.path.join(d, "tmp.*"))
+        assert orphans                           # the wreck is on disk...
+        mgr.save(4, {"state": _state(), "data": None})
+        assert not glob.glob(os.path.join(d, "tmp.*"))   # ...swept next save
+        assert mgr.restore_latest()[0] == 4
+
+
+def test_keep_k_garbage_collection():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, runtime=_runtime())
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"state": _state(), "data": None})
+        assert mgr.all_steps() == [3, 4]

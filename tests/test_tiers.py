@@ -35,7 +35,7 @@ def _plans():
 # registry round-trip
 def test_registry_covers_all_shipped_policies():
     assert set(registered_policies()) == {"none", "host", "mcdla", "auto",
-                                          "spill", "pipeline"}
+                                          "spill", "pipeline", "checkpoint"}
 
 
 @pytest.mark.parametrize("memory", _plans(),
