@@ -1,0 +1,124 @@
+"""Diff two BENCH_*.json artifacts (or artifact directories).
+
+``python -m benchmarks.compare old new [--threshold 0.05]
+[--fail-on-regress]`` — the cross-PR trajectory comparison the ROADMAP
+names: CI uploads ``BENCH_<suite>.json`` per push (benchmarks/run.py),
+and this tool turns two of those uploads into a per-row delta report.
+
+``old``/``new`` each name either one JSON file or a directory; in the
+directory case every ``BENCH_*.json`` present in BOTH sides is compared
+suite-by-suite.  Rows match by name.  Direction is inferred from the row
+name: throughput-like rows (``tok_per_s``, ``speedup``, ``gbps``, ...)
+regress when they drop, latency/miss-like rows (``_ms``, ``_s``,
+``miss``, ``bubble``, ...) when they rise; unknown names report the
+delta but never count as regressions.  ``--fail-on-regress`` exits 1
+when any matched row regresses past ``--threshold`` (relative).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+_HIGHER = ("tok_per_s", "tok/s", "speedup", "gbps", "gb_s", "throughput",
+           "hit_rate", "util", "ratio_vs", "per_s")
+_LOWER = ("_ms", "_s", "_sec", "miss", "bubble", "overhead", "latency",
+          "bytes", "stall", "time")
+
+
+def direction(name: str) -> Optional[int]:
+    """+1: higher is better, -1: lower is better, None: no preference."""
+    low = name.lower()
+    for pat in _HIGHER:
+        if pat in low:
+            return +1
+    for pat in _LOWER:
+        if pat in low:
+            return -1
+    return None
+
+
+def load_rows(path: str) -> Dict[str, Tuple[float, str]]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: (float(r["value"]), r.get("note", ""))
+            for r in payload.get("rows", [])}
+
+
+def pair_files(old: str, new: str) -> List[Tuple[str, str, str]]:
+    """(suite, old path, new path) for every suite present in both."""
+    if os.path.isfile(old) and os.path.isfile(new):
+        suite = os.path.basename(new).replace("BENCH_", "") \
+            .replace(".json", "")
+        return [(suite, old, new)]
+    olds = {os.path.basename(p): p
+            for p in glob.glob(os.path.join(old, "BENCH_*.json"))}
+    news = {os.path.basename(p): p
+            for p in glob.glob(os.path.join(new, "BENCH_*.json"))}
+    both = sorted(set(olds) & set(news))
+    skipped = sorted(set(olds) ^ set(news))
+    if skipped:
+        print(f"# only on one side, skipped: {', '.join(skipped)}",
+              file=sys.stderr)
+    return [(b.replace("BENCH_", "").replace(".json", ""),
+             olds[b], news[b]) for b in both]
+
+
+def compare(old: str, new: str, threshold: float = 0.05
+            ) -> Tuple[List[str], int]:
+    """Returns (report lines, regression count)."""
+    lines: List[str] = []
+    regressions = 0
+    for suite, old_path, new_path in pair_files(old, new):
+        a, b = load_rows(old_path), load_rows(new_path)
+        shared = [n for n in b if n in a]
+        added = [n for n in b if n not in a]
+        removed = [n for n in a if n not in b]
+        lines.append(f"== {suite}: {len(shared)} matched, "
+                     f"{len(added)} added, {len(removed)} removed ==")
+        for name in shared:
+            ov, nv = a[name][0], b[name][0]
+            delta = nv - ov
+            rel = delta / abs(ov) if ov else float("inf") if delta else 0.0
+            d = direction(name)
+            flag = ""
+            if d is not None and abs(rel) > threshold:
+                worse = (d > 0) == (delta < 0)
+                flag = " REGRESS" if worse else " improve"
+                regressions += worse
+            lines.append(f"  {name}: {ov:.6g} -> {nv:.6g} "
+                         f"({rel:+.1%}){flag}")
+        for name in added:
+            lines.append(f"  + {name}: {b[name][0]:.6g}")
+        for name in removed:
+            lines.append(f"  - {name}: {a[name][0]:.6g}")
+    return lines, regressions
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="BENCH_*.json file or artifact dir")
+    ap.add_argument("new", help="BENCH_*.json file or artifact dir")
+    ap.add_argument("--threshold", type=float, default=0.05,
+                    help="relative delta that counts as a change")
+    ap.add_argument("--fail-on-regress", action="store_true",
+                    help="exit 1 when a directional row regresses")
+    args = ap.parse_args()
+    lines, regressions = compare(args.old, args.new, args.threshold)
+    try:
+        print("\n".join(lines))
+    except BrokenPipeError:             # e.g. piped into head
+        sys.stderr.close()
+        raise SystemExit(1 if regressions and args.fail_on_regress else 0)
+    if regressions:
+        print(f"# {regressions} regression(s) past "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        if args.fail_on_regress:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

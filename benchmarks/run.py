@@ -10,6 +10,10 @@ a header with wall-clock and row count) alongside the legacy
   pipeline    pipeline schedule bench
   serve       serving engine + disaggregated prefill/decode bench
   checkpoint  checkpoint save/restore overhead (measured + analytic)
+  router      cluster fabric: wire-vs-loopback tax, real-router traffic
+              replay per placement policy, analytic DC/HC/MC sweep
+
+Diff two runs' artifacts with ``python -m benchmarks.compare old/ new/``.
 
 CI runs ``--suite micro,checkpoint --quick`` per-push and uploads the JSON
 artifacts; the full matrix is the nightly/manual path.
@@ -56,12 +60,18 @@ def _checkpoint_rows(quick: bool) -> List[Row]:
     return checkpoint_bench(quick=quick)
 
 
+def _router_rows(quick: bool) -> List[Row]:
+    from benchmarks.serve_bench import router_bench
+    return router_bench(quick=quick)
+
+
 SUITES: Dict[str, Callable[[bool], List[Row]]] = {
     "micro": lambda quick: _micro_rows(),
     "paper": lambda quick: _paper_rows(),
     "pipeline": _pipeline_rows,
     "serve": _serve_rows,
     "checkpoint": _checkpoint_rows,
+    "router": _router_rows,
 }
 
 

@@ -190,6 +190,100 @@ def disagg_bench(n_requests: int = 6, batch: int = 2, max_len: int = 64,
     return rows
 
 
+def router_bench(quick: bool = True) -> List[Row]:
+    """PR 7 suite behind BENCH_router.json: the cluster fabric priced
+    three ways.
+
+    * ``wire/...`` — the serialization tax: the same requests through the
+      in-process loopback pair and through the byte-framed wire pair
+      (tok/s each, plus the exact frame bytes the wire moved).
+    * ``replay/<policy>/...`` — a scaled-down synthetic traffic replay
+      (sim/workloads.py mix) through the REAL router per placement
+      policy: tok/s (wall), TTFT in router steps, SLO-miss rate.
+    * ``<system>/<policy>/...`` — the analytic sweep of the same policies
+      over DC/HC/MC tier configurations at a session count no host can
+      replay (sim/simulator.simulate_serving).
+    """
+    import time as _time
+
+    from repro.serve.engine import Request
+    from repro.serve.disagg import build_disagg
+    from repro.serve.router import build_router, replay_trace
+    from repro.serve.transport import build_wire_pair
+    from repro.sim.simulator import serving_table
+    from repro.sim.topology import DC_DLA, HC_DLA, MC_DLA_B
+    from repro.sim.workloads import TrafficSpec, generate_traffic
+
+    cfg, model, params = _build()
+    rows: List[Row] = []
+    kw = dict(batch=2, max_len=64, page_size=16, spill="host")
+    n_req = 6 if quick else 12
+
+    # --- wire vs loopback ------------------------------------------------
+    def drive_pair(pair):
+        rng = np.random.default_rng(0)
+        for i in range(3):                       # warm the jitted paths
+            pair.submit(Request(uid=900 + i, prompt=rng.integers(
+                0, cfg.vocab_size, size=(8,)).astype(np.int32),
+                max_new_tokens=4))
+        pair.run()
+        reqs = [Request(uid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=(8,)).astype(np.int32),
+            max_new_tokens=8) for i in range(n_req)]
+        t0 = _time.perf_counter()
+        for r in reqs:
+            pair.submit(r)
+        pair.run()
+        dt = _time.perf_counter() - t0
+        return n_req * 8 / dt
+
+    rows.append(("wire/loopback_tok_per_s",
+                 drive_pair(build_disagg(model, params, transfer="host",
+                                         **kw)),
+                 "in-process TransferQueue"))
+    wire = build_wire_pair(model, params, transport="memory", **kw)
+    rows.append(("wire/framed_tok_per_s", drive_pair(wire),
+                 "byte-serialized frames (memory channel)"))
+    rep = wire.traffic_report()
+    rows.append(("wire/kv_wire_bytes",
+                 rep["wire_out"]["kv_wire"]["wire_bytes"] +
+                 rep["wire_in"]["kv_wire"]["wire_bytes"],
+                 "exact frame bytes both directions"))
+
+    # --- real-router replay per policy -----------------------------------
+    n_sessions = 12 if quick else 40
+    policies = ("least_loaded", "prefix_affinity", "round_robin")
+    for policy in policies:
+        trace = generate_traffic(TrafficSpec(
+            sessions=n_sessions, horizon_s=600.0, prompt_mean=10.0,
+            prompt_max=24, decode_mean=6.0, decode_max=10,
+            prefix_len=8, seed=7))
+        router = build_router(model, params, engines=2, placement=policy,
+                              transfer="host", **kw)
+        t0 = _time.perf_counter()
+        done = replay_trace(router, trace, cfg.vocab_size,
+                            arrivals_per_step=2.0)
+        dt = _time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        ttft = router.ttft_report()
+        slo = router.slo_report()
+        rows.append((f"replay/{policy}/tok_per_s", toks / dt,
+                     f"{len(done)}/{n_sessions} sessions, 2 engines"))
+        rows.append((f"replay/{policy}/ttft_steps", ttft["mean"],
+                     f"p99={ttft['p99']}"))
+        rows.append((f"replay/{policy}/slo_miss_rate", slo["miss_rate"],
+                     f"met={slo['met']} missed={slo['missed']}"))
+
+    # --- analytic sweep at scale -----------------------------------------
+    trace = generate_traffic(TrafficSpec(
+        sessions=20_000 if quick else 200_000,
+        horizon_s=3600.0 if quick else 86_400.0, seed=1))
+    for rep in serving_table(trace, [DC_DLA, HC_DLA, MC_DLA_B],
+                             policies=policies, engines=8):
+        rows.extend(rep.rows())
+    return rows
+
+
 if __name__ == "__main__":
-    for name, value, note in serve_bench():
+    for name, value, note in serve_bench() + router_bench(quick=True):
         print(f"{name},{value},{note}")

@@ -133,6 +133,20 @@ class MemoryRuntime:
         wire = raw * self.tier.wire_ratio(x, hints or TransferHints())
         self._traffic.setdefault(direction, TierTraffic()).add(raw, wire)
 
+    def meter_transfer(self, direction: str, raw_bytes: float,
+                       wire_bytes: float, calls: int = 1) -> None:
+        """Account an out-of-band transfer in this runtime's report.
+
+        ``stash``/``fetch`` meter tier traffic implicitly; transfers that
+        bypass the tier stack — e.g. serialized wire frames in
+        serve/transport.py, metered as ``kv_wire`` with the exact frame
+        byte count — record themselves here so ``traffic_report()`` stays
+        the single reconciliation point for every byte that moved."""
+        t = self._traffic.setdefault(direction, TierTraffic())
+        t.calls += calls
+        t.raw_bytes += raw_bytes
+        t.wire_bytes += wire_bytes
+
     def reset_traffic(self) -> None:
         self._traffic = {}
 

@@ -23,9 +23,22 @@ on a prefill-role engine, KV pages ship through the ``--transfer-tier``
 (metered, printed as the transfer report with time-to-first-token), and
 a decode-role engine adopts them; ``prefill`` runs the prefill worker
 alone (publishes into a local queue and reports what shipped — useful to
-price the transfer path); ``decode`` needs a peer feeding the queue, so
-standalone it is rejected with a pointer at ``--role both``.  Omit
-``--role`` for the classic colocated engine.
+price the transfer path); ``decode --connect HOST:PORT`` runs the decode
+worker of a two-process deployment over the TCP wire transport
+(serve/transport.py), adopting handoffs off the socket and streaming
+RESULTs back — standalone decode without ``--connect`` is still
+rejected.  Omit ``--role`` for the classic colocated engine.
+
+``--router`` runs the cluster front-end (serve/router.py) over
+``--engines`` prefill/decode pairs with ``--placement`` choosing where
+sessions land; ``--transport memory|tcp`` makes engine 0 a wire pair
+(every page byte-serialized through frames), ``--listen PORT`` makes it
+the prefill half of a two-process pair (start the peer with ``--role
+decode --connect``), ``--drain-after N`` gracefully drains
+``--drain-engine`` after N router steps (the CI smoke asserts zero
+dropped sessions), and ``--trace N`` replays N sessions of the synthetic
+diurnal/burst/shared-prefix traffic mix (sim/workloads.py) instead of
+the uniform synthetic requests.
 """
 from __future__ import annotations
 
@@ -94,13 +107,43 @@ def main() -> None:
     ap.add_argument("--transfer-depth", type=int, default=None,
                     help="max handoffs parked in the transfer queue "
                          "(prefill admission stalls past it)")
+    ap.add_argument("--router", action="store_true",
+                    help="run the cluster router over --engines pairs")
+    ap.add_argument("--engines", type=int, default=2,
+                    help="prefill/decode pairs behind the router")
+    ap.add_argument("--placement", default="least_loaded",
+                    help="placement policy "
+                         "(least_loaded/prefix_affinity/round_robin)")
+    ap.add_argument("--transport", default=None,
+                    choices=("memory", "tcp"),
+                    help="make router engine 0 a wire pair over this "
+                         "byte channel (pages cross as serialized frames)")
+    ap.add_argument("--listen", type=int, default=None,
+                    help="two-process mode: engine 0 (or --role prefill) "
+                         "serves prefill over TCP on this port (0: "
+                         "ephemeral, printed); peer runs --role decode "
+                         "--connect")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="with --role decode: adopt handoffs from this "
+                         "prefill/router process")
+    ap.add_argument("--drain-after", type=int, default=None,
+                    help="router mode: gracefully drain --drain-engine "
+                         "after N router steps")
+    ap.add_argument("--drain-engine", type=int, default=0)
+    ap.add_argument("--trace", type=int, default=None,
+                    help="router mode: replay N synthetic traffic "
+                         "sessions (diurnal/burst/shared-prefix mix)")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
-    if args.role == "decode":
+    if args.role == "decode" and args.connect is None:
         ap.error("--role decode needs a peer feeding the transfer queue; "
-                 "use --role both for the in-process loopback")
-    if args.role is not None and not args.page_size:
-        ap.error("--role ships page-shaped KV: pass --page-size")
+                 "use --role both for the in-process loopback, or pass "
+                 "--connect HOST:PORT for the two-process wire")
+    if (args.role is not None or args.router) and not args.page_size:
+        ap.error("--role/--router ship page-shaped KV: pass --page-size")
+    if args.listen is not None and args.batch is None:
+        ap.error("--listen needs explicit --batch/--max-len (the remote "
+                 "decode geometry cannot be negotiated over the wire)")
     logging.basicConfig(level=logging.INFO)
 
     cfg = get_arch(args.arch)
@@ -122,6 +165,13 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(0))
 
     quota = quota_from_cli(args.tenant_quota, args.page_codec)
+
+    if args.role == "decode":
+        _run_decode_worker(model, params, args)
+        return
+    if args.router:
+        _run_router(model, params, cfg, quota, args)
+        return
 
     sched = (build_scheduler("fair", quantum=args.quantum)
              if args.scheduler == "fair" else build_scheduler(args.scheduler))
@@ -214,6 +264,131 @@ def main() -> None:
     sched_obj = eng.decode.scheduler if args.role == "both" else eng.scheduler
     if hasattr(sched_obj, "miss_report"):
         print("deadlines:", sched_obj.miss_report())
+
+
+def _run_decode_worker(model, params, args) -> None:
+    """``--role decode --connect HOST:PORT``: the remote decode half."""
+    from repro.core.runtime import fmt_bytes
+    from repro.serve.transport import run_decode_worker, tcp_connect
+
+    host, _, port = args.connect.rpartition(":")
+    channel = tcp_connect(host or "127.0.0.1", int(port))
+    print(f"decode worker: connected to {args.connect}", flush=True)
+    eng = run_decode_worker(model, params, channel, batch=args.batch,
+                            max_len=args.max_len, page_size=args.page_size,
+                            pages=args.pages, scheduler=args.scheduler,
+                            spill=args.spill,
+                            temperature=args.temperature)
+    rep = eng.transfer.traffic_report()
+    tq = rep["transfer"]
+    wire = rep.get("kv_wire", {"wire_bytes": 0.0, "calls": 0})
+    print(f"decode worker done: adopted {tq['adopted_pages']} pages "
+          f"({tq['published']} handoffs), sent "
+          f"{fmt_bytes(wire['wire_bytes'])} of result/ack frames")
+
+
+def _run_router(model, params, cfg, quota, args) -> None:
+    """``--router``: the cluster front-end over N engine pairs."""
+    from repro.serve.quota import QuotaManager
+    from repro.serve.router import Router, replay_trace
+    from repro.serve.transport import (build_wire_pair, build_wire_prefill,
+                                       tcp_accept, tcp_listen)
+
+    shared = quota if isinstance(quota, QuotaManager) else \
+        (QuotaManager(dict(quota)) if quota else None)
+    pair_kw = dict(batch=args.batch, max_len=args.max_len,
+                   page_size=args.page_size, pages=args.pages,
+                   scheduler=args.scheduler, spill=args.spill,
+                   quota=shared, temperature=args.temperature)
+    pairs = []
+    for i in range(args.engines):
+        if i == 0 and args.listen is not None:
+            listener, port = tcp_listen(port=args.listen)
+            print(f"router: engine 0 listening on {port}", flush=True)
+            channel = tcp_accept(listener)
+            print("router: decode worker attached", flush=True)
+            pairs.append(build_wire_prefill(
+                model, params, channel, max_len=args.max_len,
+                page_size=args.page_size, scheduler=args.scheduler,
+                quota=shared, window_hint=2 * (args.batch or 4),
+                temperature=args.temperature, seed=0))
+        elif i == 0 and args.transport is not None:
+            pairs.append(build_wire_pair(model, params,
+                                         transport=args.transport,
+                                         seed=0, **pair_kw))
+        else:
+            pairs.append(build_disagg(model, params,
+                                      transfer=args.transfer_tier,
+                                      max_depth=args.transfer_depth,
+                                      seed=2 * i, **pair_kw))
+    router = Router(pairs, placement=args.placement)
+    print(router.describe())
+
+    t0 = time.perf_counter()
+    first_tok_s = {}
+
+    def on_token(sess, tok):
+        first_tok_s.setdefault(sess.uid, time.perf_counter() - t0)
+
+    if args.trace:
+        from repro.sim.workloads import TrafficSpec, generate_traffic
+        trace = generate_traffic(TrafficSpec(sessions=args.trace,
+                                             horizon_s=3600.0))
+        done = replay_trace(router, trace, cfg.vocab_size,
+                            arrivals_per_step=2.0,
+                            on_step=_drain_hook(args))
+    else:
+        rng = np.random.default_rng(0)
+        sessions = []
+        for i in range(args.requests):
+            sessions.append(router.submit(Request(
+                uid=i,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    size=(args.prompt_len,)
+                                    ).astype(np.int32),
+                max_new_tokens=args.new_tokens + i * args.stagger,
+                tenant=f"t{i % max(1, args.tenants)}"), on_token=on_token))
+        done = router.run(on_step=_drain_hook(args))
+    dt = time.perf_counter() - t0
+
+    total_new = sum(len(r.out_tokens) for r in done)
+    dropped = sum(1 for s in router.sessions.values() if not s.done)
+    print(f"router served {len(done)}/{len(router.sessions)} sessions, "
+          f"{total_new} tokens in {dt:.2f}s ({total_new / dt:.1f} tok/s), "
+          f"{dropped} dropped, {router.requeues} requeued")
+    by_engine = {}
+    for _, idx in router.placement_log:
+        by_engine[idx] = by_engine.get(idx, 0) + 1
+    print(f"placement[{args.placement}]: {by_engine}; "
+          f"ttft(steps): {router.ttft_report()}")
+    if first_tok_s:
+        vals = sorted(first_tok_s.values())
+        print(f"ttft(wall): mean {1e3 * sum(vals) / len(vals):.1f}ms, "
+              f"max {1e3 * vals[-1]:.1f}ms")
+    if any(s.request.deadline is not None
+           for s in router.sessions.values()):
+        print("slo:", router.slo_report())
+    for eng in router.engines:
+        print(" ", eng.describe())
+        if hasattr(eng.pair, "close"):      # wire prefill: BYE the worker
+            eng.pair.close()
+    if shared is not None:
+        print("tenants:", dict(shared.usage()))
+    assert dropped == 0, f"{dropped} sessions dropped"
+
+
+def _drain_hook(args):
+    state = {"done": False}
+
+    def hook(router) -> None:
+        if (args.drain_after is not None and not state["done"]
+                and router.now >= args.drain_after):
+            state["done"] = True
+            router.drain(args.drain_engine)
+            print(f"drained engine {args.drain_engine} "
+                  f"at step {router.now}", flush=True)
+
+    return hook
 
 
 if __name__ == "__main__":

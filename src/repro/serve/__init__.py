@@ -1,6 +1,7 @@
 """Serving: Scheduler / KVCacheManager / Session behind the Engine facade,
 over pooled (optionally paged) KV caches, colocated or disaggregated
-across prefill/decode roles (DESIGN.md §6)."""
+across prefill/decode roles, clustered behind the Router over loopback or
+byte-framed wire transports (DESIGN.md §6)."""
 from repro.serve.cache_manager import (KVCacheManager,      # noqa: F401
                                        PagedKVCacheManager)
 from repro.serve.disagg import (DisaggPair, KVHandoff,      # noqa: F401
@@ -15,3 +16,15 @@ from repro.serve.scheduler import (DeadlineScheduler,       # noqa: F401
                                    SRPTScheduler, build_scheduler,
                                    register_scheduler)
 from repro.serve.session import Session, SessionState       # noqa: F401
+# transport/router import the engine layer above; order matters here
+from repro.serve.transport import (Channel,                 # noqa: F401
+                                   InMemoryChannel, TcpChannel,
+                                   TransportError, WireFormatError,
+                                   WirePair, WirePrefill, WireReceiver,
+                                   WireSender, build_transport,
+                                   build_wire_pair, build_wire_prefill,
+                                   register_transport, run_decode_worker)
+from repro.serve.router import (EngineView,                 # noqa: F401
+                                PlacementPolicy, Router, RouterEngine,
+                                build_placement, build_router,
+                                register_placement, replay_trace)

@@ -251,17 +251,29 @@ class Engine:
         self._prefill_paged = jax.jit(prefill_paged, donate_argnums=(1, 2))
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request, on_token=None) -> Session:
-        """Queue a request; returns its :class:`Session` (token stream)."""
+    def submit(self, req: Optional[Request] = None, on_token=None,
+               session: Optional[Session] = None) -> Session:
+        """Queue a request; returns its :class:`Session` (token stream).
+
+        Pass ``session=`` to hand over an existing session instead of
+        minting one — the router does this so a session keeps its
+        cluster-wide ``seq`` (and token stream identity) across placement,
+        drain redistribution, and engine-loss requeue."""
         if self.role == "decode":
             raise RuntimeError(
                 "a decode-role engine adopts sessions from the transfer "
                 "queue; submit prompts to the prefill engine (or the "
                 "DisaggPair facade)")
-        sess = Session(request=req, seq=self._seq, on_token=on_token)
-        self._seq += 1
-        self.sessions.append(sess)
-        self._by_uid[sess.uid] = sess
+        if session is None:
+            sess = Session(request=req, seq=self._seq, on_token=on_token)
+        else:
+            sess = session
+            if on_token is not None:
+                sess.on_token = on_token
+        self._seq = max(self._seq, sess.seq) + 1
+        if self._by_uid.get(sess.uid) is not sess:
+            self.sessions.append(sess)
+            self._by_uid[sess.uid] = sess
         self.scheduler.submit(sess)
         return sess
 
@@ -515,8 +527,25 @@ class Engine:
             slot_one = rest if jax.tree_util.tree_leaves(rest) else None
             self.cache.release(sess)
             sess.state = SessionState.QUEUED    # in transit
-            self.transfer.publish(
-                KVHandoff(session=sess, length=sess.length), pages, slot_one)
+            try:
+                self.transfer.publish(
+                    KVHandoff(session=sess, length=sess.length), pages,
+                    slot_one)
+            except Exception as e:              # noqa: BLE001
+                from repro.serve.transport import TransportError
+                if not isinstance(e, TransportError):
+                    raise
+                # mid-transfer failure: nothing reached the peer, so the
+                # per-uid quota reservation must not leak — release it and
+                # requeue for a fresh prefill (re-charged at readmission)
+                log.warning("publish failed for uid=%d, requeueing: %s",
+                            sess.uid, e)
+                self._release_quota(sess)
+                if not sess.done:
+                    del sess.tokens[:]
+                    sess.length = 0
+                    self.scheduler.submit(sess)
+                continue
             self.scheduler.on_handoff(sess)
             shipped += 1
         return shipped

@@ -1,0 +1,1108 @@
+"""Wire transport for KV handoffs — the cross-host serving fabric leg.
+
+serve/disagg.py ships prefilled KV between roles through an in-process
+:class:`~repro.serve.disagg.TransferQueue`; its docstring names the wire
+transport as the out-of-scope remainder.  This module is that transport:
+the same handoff unit (pickleable header + page-shaped arrays), serialized
+into length-prefixed frames over a pluggable byte :class:`Channel`, so the
+prefill and decode engines can live in different processes (or different
+hosts) and still produce the bit-identical token streams the cross-role
+trace-equivalence suite pins.
+
+Wire format (versioned — satellite of PR 7)::
+
+    frame := magic "KW" | schema u16 | kind u8 | len u32 | payload | crc u32
+
+The CRC32 covers the header AND payload; a schema mismatch or a failed CRC
+raises :class:`WireFormatError` *before* any unpickling — garbage frames
+never reach ``pickle.loads``.  Payloads are pickled dicts of numpy leaves;
+float page leaves optionally pass through a ``core/compress.py`` codec so
+compressed pages cross the wire compressed (``_WireLeaf`` carries the
+quantized data + scale + codec name).
+
+Frame kinds: ``HANDOFF`` (prefill→decode: header + pages), ``ACK``
+(decode→prefill on adoption/discard — drives the sender's ``max_depth``
+credit window), ``CANCEL`` (prefill→decode: cancelled in transit),
+``RESULT`` (decode→prefill on retire: the full token stream + finish
+reason, applied to the original session so the submitter's ``Session``
+object completes exactly as in the loopback), ``BYE`` (clean shutdown).
+
+Metering: every frame a side *sends* is metered on that side's
+:class:`~repro.core.runtime.MemoryRuntime` as ``kv_wire`` with the exact
+frame byte count (``wire_bytes == raw_bytes == len(frame)``), via
+``MemoryRuntime.meter_transfer``.  Page payloads additionally meter as
+``kv_publish`` (serialize side: raw = tensor bytes, wire = encoded bytes)
+and ``kv_adopt`` (decode side, same convention) so the wire reconciles
+against the loopback accounting: summed over both runtimes, ``kv_wire``
+equals the bytes that crossed the channel exactly, and
+``kv_wire >= kv_publish.wire`` (framing + header overhead).
+
+Partial reads retry with exponential backoff — the ``train/fault.py``
+``retry_step`` idiom: ``backoff * 2**attempt`` between attempts, no
+terminal sleep, ``sleep`` injectable for fake-clock tests — and exhaust
+into :class:`TransportError`.  Channels come from a registry mirroring
+the scheduler/codec registries: ``"memory"`` (in-process pair, test
+default; ``max_chunk`` simulates fragmented reads) and ``"tcp"``
+(loopback socket pair; :func:`tcp_listen`/:func:`tcp_connect` build the
+two-process halves).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import pickle
+import select
+import socket
+import struct
+import threading
+import time
+import zlib
+from collections import deque
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple, Union)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MemoryPlan
+from repro.core.compress import decode_tensor, encode_tensor, get_codec
+from repro.core.runtime import MemoryRuntime
+from repro.serve.disagg import KVHandoff
+from repro.serve.quota import QuotaManager, TenantQuota
+from repro.serve.session import FINISH_CANCELLED, Session, SessionState
+
+log = logging.getLogger(__name__)
+
+#: bump on any change to the frame layout or the HANDOFF payload schema
+SCHEMA_VERSION = 1
+
+_MAGIC = b"KW"
+_HEADER = struct.Struct(">2sHBI")        # magic, schema, kind, payload len
+_CRC = struct.Struct(">I")
+
+K_HANDOFF, K_ACK, K_CANCEL, K_RESULT, K_BYE = range(1, 6)
+_KIND_NAMES = {K_HANDOFF: "HANDOFF", K_ACK: "ACK", K_CANCEL: "CANCEL",
+               K_RESULT: "RESULT", K_BYE: "BYE"}
+
+
+class TransportError(RuntimeError):
+    """A channel failed mid-transfer (closed peer, exhausted retries)."""
+
+
+class WireFormatError(TransportError):
+    """A frame failed validation (magic/schema/CRC) — never unpickled."""
+
+
+# ---------------------------------------------------------------------------
+# framing
+def pack_frame(kind: int, payload: bytes) -> bytes:
+    head = _HEADER.pack(_MAGIC, SCHEMA_VERSION, kind, len(payload))
+    crc = zlib.crc32(payload, zlib.crc32(head)) & 0xFFFFFFFF
+    return head + payload + _CRC.pack(crc)
+
+
+def _read_exact(channel: "Channel", n: int, *, started: bool,
+                retries: int, backoff: float, sleep) -> Optional[bytes]:
+    """Read exactly ``n`` bytes from ``channel``.
+
+    Returns None when ``started`` is False and nothing at all is buffered
+    (no frame on the wire — the polling case).  Once any byte of a frame
+    has been read, an empty read retries with exponential backoff
+    (``backoff * 2**attempt``, no sleep after the terminal attempt) and
+    exhausts into :class:`TransportError` — a frame, once begun, must
+    complete."""
+    buf = bytearray()
+    attempt = 0
+    while len(buf) < n:
+        chunk = channel.recv(n - len(buf))
+        if chunk:
+            buf += chunk
+            attempt = 0
+            continue
+        if not buf and not started:
+            return None
+        if channel.closed and attempt >= retries:
+            raise TransportError(
+                f"channel closed mid-frame: got {len(buf)}/{n} bytes")
+        if attempt >= retries:
+            raise TransportError(
+                f"partial read: {len(buf)}/{n} bytes after "
+                f"{retries + 1} attempts")
+        sleep(backoff * (2 ** attempt))
+        attempt += 1
+    return bytes(buf)
+
+
+def recv_frame(channel: "Channel", *, retries: int = 10,
+               backoff: float = 0.005, sleep=time.sleep
+               ) -> Optional[Tuple[int, bytes]]:
+    """Read one validated frame; None when no frame is on the wire.
+
+    Validation order is deliberate: magic, then schema, then CRC — a
+    mismatched schema or corrupted frame raises :class:`WireFormatError`
+    with a clear message instead of handing garbage to ``pickle``."""
+    head = _read_exact(channel, _HEADER.size, started=False,
+                       retries=retries, backoff=backoff, sleep=sleep)
+    if head is None:
+        return None
+    magic, schema, kind, n = _HEADER.unpack(head)
+    if magic != _MAGIC:
+        raise WireFormatError(
+            f"bad frame magic {magic!r} (want {_MAGIC!r}): not a KV wire "
+            "frame, refusing to unpickle")
+    if schema != SCHEMA_VERSION:
+        raise WireFormatError(
+            f"wire schema v{schema} from peer, this build speaks "
+            f"v{SCHEMA_VERSION} — upgrade the older side (refusing to "
+            "unpickle a mismatched layout)")
+    payload = _read_exact(channel, n, started=True, retries=retries,
+                          backoff=backoff, sleep=sleep)
+    (crc,) = _CRC.unpack(_read_exact(channel, _CRC.size, started=True,
+                                     retries=retries, backoff=backoff,
+                                     sleep=sleep))
+    want = zlib.crc32(payload, zlib.crc32(head)) & 0xFFFFFFFF
+    if crc != want:
+        raise WireFormatError(
+            f"frame CRC mismatch (got {crc:#010x}, computed {want:#010x}): "
+            "corrupted frame, refusing to unpickle")
+    return kind, payload
+
+
+# ---------------------------------------------------------------------------
+# channels
+class Channel:
+    """One endpoint of a byte pipe.
+
+    ``send`` writes the whole buffer or raises :class:`TransportError`;
+    ``recv(n)`` returns *up to* n bytes — possibly fewer, possibly ``b""``
+    when nothing is buffered (framing handles reassembly + retry)."""
+
+    def send(self, data: bytes) -> None:
+        raise NotImplementedError
+
+    def recv(self, n: int) -> bytes:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    @property
+    def closed(self) -> bool:
+        raise NotImplementedError
+
+
+class _Pipe:
+    """One direction of an in-memory channel pair (lock-guarded)."""
+
+    def __init__(self, max_chunk: Optional[int] = None):
+        self.buf = bytearray()
+        self.max_chunk = max_chunk
+        self.closed = False
+        self.lock = threading.Lock()
+
+
+class InMemoryChannel(Channel):
+    """In-process byte pipe: the test/loopback transport.
+
+    ``max_chunk`` bounds one ``recv`` — set it small to exercise the
+    partial-read reassembly path without a real socket.  ``bytes_sent``
+    counts every byte pushed through ``send``, the ground truth the
+    ``kv_wire`` reconciliation tests compare against."""
+
+    def __init__(self, rx: _Pipe, tx: _Pipe):
+        self._rx = rx
+        self._tx = tx
+        self._closed = False
+        self.bytes_sent = 0
+
+    def send(self, data: bytes) -> None:
+        if self._closed:
+            raise TransportError("send on closed channel")
+        with self._tx.lock:
+            if self._tx.closed:
+                raise TransportError("peer closed the channel")
+            self._tx.buf += data
+        self.bytes_sent += len(data)
+
+    def recv(self, n: int) -> bytes:
+        with self._rx.lock:
+            take = min(n, len(self._rx.buf))
+            if self._rx.max_chunk is not None:
+                take = min(take, self._rx.max_chunk)
+            out = bytes(self._rx.buf[:take])
+            del self._rx.buf[:take]
+            return out
+
+    def close(self) -> None:
+        self._closed = True
+        with self._tx.lock:
+            self._tx.closed = True
+        with self._rx.lock:
+            self._rx.closed = True
+
+    @property
+    def closed(self) -> bool:
+        return self._closed or self._rx.closed
+
+
+def memory_pair(max_chunk: Optional[int] = None
+                ) -> Tuple[InMemoryChannel, InMemoryChannel]:
+    """A connected in-memory channel pair (a→b, b→a)."""
+    ab, ba = _Pipe(max_chunk), _Pipe(max_chunk)
+    return InMemoryChannel(rx=ba, tx=ab), InMemoryChannel(rx=ab, tx=ba)
+
+
+class TcpChannel(Channel):
+    """A connected TCP socket as a Channel (non-blocking reads)."""
+
+    def __init__(self, sock: socket.socket):
+        sock.setblocking(True)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.sock = sock
+        self._closed = False
+        self.bytes_sent = 0
+
+    def send(self, data: bytes) -> None:
+        if self._closed:
+            raise TransportError("send on closed channel")
+        try:
+            self.sock.sendall(data)
+        except OSError as e:
+            self._closed = True
+            raise TransportError(f"socket send failed: {e}") from e
+        self.bytes_sent += len(data)
+
+    def recv(self, n: int) -> bytes:
+        if self._closed:
+            return b""
+        try:
+            ready, _, _ = select.select([self.sock], [], [], 0)
+            if not ready:
+                return b""
+            data = self.sock.recv(n)
+        except OSError as e:
+            self._closed = True
+            raise TransportError(f"socket recv failed: {e}") from e
+        if data == b"":
+            self._closed = True      # orderly peer shutdown
+        return data
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+
+def tcp_listen(host: str = "127.0.0.1", port: int = 0
+               ) -> Tuple[socket.socket, int]:
+    """Bind a listener (port 0: ephemeral); returns (socket, bound port)."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind((host, port))
+    srv.listen(1)
+    return srv, srv.getsockname()[1]
+
+
+def tcp_accept(listener: socket.socket, timeout: float = 60.0) -> TcpChannel:
+    listener.settimeout(timeout)
+    try:
+        conn, _ = listener.accept()
+    except socket.timeout as e:
+        raise TransportError(f"no peer connected within {timeout}s") from e
+    finally:
+        listener.close()
+    return TcpChannel(conn)
+
+
+def tcp_connect(host: str, port: int, *, retries: int = 20,
+                backoff: float = 0.1, sleep=time.sleep) -> TcpChannel:
+    """Connect with retry — the worker side may start before the listener."""
+    err: Optional[Exception] = None
+    for attempt in range(retries + 1):
+        try:
+            return TcpChannel(socket.create_connection((host, port),
+                                                       timeout=30.0))
+        except OSError as e:
+            err = e
+            if attempt < retries:
+                sleep(backoff * (2 ** min(attempt, 6)))
+    raise TransportError(f"connect to {host}:{port} failed: {err}") from err
+
+
+def tcp_pair() -> Tuple[TcpChannel, TcpChannel]:
+    """A connected loopback TCP pair in one process (real sockets)."""
+    srv, port = tcp_listen()
+    cli = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    cli.connect(("127.0.0.1", port))
+    conn, _ = srv.accept()
+    srv.close()
+    return TcpChannel(conn), TcpChannel(cli)
+
+
+# ---------------------------------------------------------------------------
+# transport registry (mirrors the scheduler/codec registries)
+_TRANSPORTS: Dict[str, Callable[..., Tuple[Channel, Channel]]] = {}
+
+
+def register_transport(name: str,
+                       factory: Callable[..., Tuple[Channel, Channel]]
+                       ) -> None:
+    _TRANSPORTS[name] = factory
+
+
+def build_transport(name: str, **kwargs) -> Tuple[Channel, Channel]:
+    """Build a connected channel pair (prefill end, decode end)."""
+    if name not in _TRANSPORTS:
+        raise KeyError(f"unknown transport {name!r}; "
+                       f"registered: {registered_transports()}")
+    return _TRANSPORTS[name](**kwargs)
+
+
+def registered_transports() -> Tuple[str, ...]:
+    return tuple(sorted(_TRANSPORTS))
+
+
+register_transport("memory", memory_pair)
+register_transport("tcp", tcp_pair)
+
+
+# ---------------------------------------------------------------------------
+# leaf/tree serialization (optionally through a tenant codec)
+@dataclasses.dataclass
+class _WireLeaf:
+    """One tensor leaf in wire form: raw numpy, or codec (q, scale)."""
+
+    data: np.ndarray
+    scale: Optional[np.ndarray]
+    dtype: str
+    codec: Optional[str]
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.nbytes + (self.scale.nbytes
+                                   if self.scale is not None else 0)
+
+
+def _is_wire_leaf(x) -> bool:
+    return isinstance(x, _WireLeaf)
+
+
+def _encode_leaf(x, codec: Optional[str]) -> _WireLeaf:
+    dtype = str(np.dtype(x.dtype))
+    if codec is not None and jnp.issubdtype(x.dtype, jnp.floating):
+        q, scale = encode_tensor(get_codec(codec), jnp.asarray(x))
+        return _WireLeaf(np.asarray(q), np.asarray(scale), dtype, codec)
+    return _WireLeaf(np.asarray(x), None, dtype, None)
+
+
+def _decode_leaf(leaf: _WireLeaf) -> np.ndarray:
+    if leaf.codec is None:
+        return leaf.data
+    x = decode_tensor(get_codec(leaf.codec), jnp.asarray(leaf.data),
+                      jnp.asarray(leaf.scale), dtype=jnp.dtype(leaf.dtype))
+    return np.asarray(x)
+
+
+def _encode_tree(tree, codec: Optional[str]) -> Tuple[Any, float, float, int]:
+    """→ (wired tree, raw tensor bytes, encoded wire bytes, leaf count)."""
+    raw = wire = 0.0
+    calls = 0
+
+    def enc(x):
+        nonlocal raw, wire, calls
+        leaf = _encode_leaf(x, codec)
+        raw += float(np.prod(np.shape(x)) or 1) * np.dtype(x.dtype).itemsize
+        wire += leaf.nbytes
+        calls += 1
+        return leaf
+
+    return jax.tree.map(enc, tree), raw, wire, calls
+
+
+def _decode_tree(tree) -> Any:
+    return jax.tree.map(_decode_leaf, tree, is_leaf=_is_wire_leaf)
+
+
+# ---------------------------------------------------------------------------
+class WireHandoff:
+    """Decode-side view of one in-flight session, reconstructed off the
+    wire.  Duck-types the :class:`~repro.serve.disagg.KVHandoff` surface
+    the decode engine and ``PagedKVCacheManager.adopt`` consume."""
+
+    def __init__(self, session: Session, length: int, pages: List[Any],
+                 slot_one: Any, requeues: int = 0):
+        self.session = session
+        self.length = length
+        self.pages = pages               # wired trees, decoded at fetch
+        self.slot_one = slot_one
+        self.requeues = requeues
+
+    @property
+    def uid(self) -> int:
+        return self.session.uid
+
+    @property
+    def num_pages(self) -> int:
+        return len(self.pages)
+
+
+def _control(channel: Channel, runtime: MemoryRuntime, kind: int,
+             msg: Dict[str, Any]) -> None:
+    frame = pack_frame(kind, pickle.dumps(msg, pickle.HIGHEST_PROTOCOL))
+    channel.send(frame)
+    runtime.meter_transfer("kv_wire", len(frame), len(frame))
+
+
+class WireSender:
+    """Prefill-side half of the wire: duck-types the ``TransferQueue``
+    surface the prefill-role Engine drives (``has_room`` / ``publish`` /
+    ``depth`` / ``sweep_cancelled`` / ``traffic_report``).
+
+    ``max_depth`` is enforced as a *credit window*: a published handoff
+    occupies a credit until the decode side ACKs its adoption (or
+    discard), so queue pressure backs up into the prefill scheduler
+    exactly as in the loopback.  ``codec_for`` (tenant → codec name, e.g.
+    ``QuotaManager.codec_for``) routes float page leaves through the
+    tenant codec so compressed pages cross the wire compressed."""
+
+    def __init__(self, channel: Channel, runtime: MemoryRuntime, *,
+                 max_depth: Optional[int] = None,
+                 codec_for: Optional[Callable[[str],
+                                              Optional[str]]] = None,
+                 quota: Optional[QuotaManager] = None,
+                 retries: int = 10, backoff: float = 0.005,
+                 sleep=time.sleep):
+        if max_depth is not None and max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1: {max_depth}")
+        self.channel = channel
+        self.runtime = runtime
+        self.max_depth = max_depth
+        self.codec_for = codec_for
+        self.quota = quota
+        self._retries, self._backoff, self._sleep = retries, backoff, sleep
+        self._inflight: Dict[int, Session] = {}   # published, not adopted
+        self._adopted: Dict[int, Session] = {}    # ACKed, awaiting RESULT
+        self.completed: List[Session] = []        # RESULT applied
+        self.peer_done = False
+        # counters named like TransferQueue's (trace suites cross-check)
+        self.published = 0
+        self.delivered = 0          # ACKs applied (adopted by the peer)
+        self.requeued = 0
+        self.swept = 0
+        self.results = 0
+        self.shipped_pages = 0
+
+    # ------------------------------------------------------------------
+    def depth(self) -> int:
+        self.pump()
+        return len(self._inflight)
+
+    def outstanding(self) -> int:
+        """Sessions the peer still owes a RESULT for."""
+        return len(self._inflight) + len(self._adopted)
+
+    def has_room(self, pending: int = 0) -> bool:
+        self.pump()
+        return self.max_depth is None or \
+            len(self._inflight) + pending < self.max_depth
+
+    def parked_uids(self) -> Tuple[int, ...]:
+        return tuple(self._inflight)
+
+    # ------------------------------------------------------------------
+    def publish(self, handoff: KVHandoff, pages: List[Any],
+                slot_one: Any = None) -> None:
+        """Serialize + send one handoff as a HANDOFF frame.
+
+        Metering happens only after a successful send — a
+        :class:`TransportError` leaves the report, the credit window and
+        the counters untouched (the engine requeues the session and
+        releases its quota charge; see ``Engine._publish_handoffs``)."""
+        sess = handoff.session
+        req = sess.request
+        codec = self.codec_for(sess.tenant) if self.codec_for else None
+        wired_pages, raw, wire, calls = [], 0.0, 0.0, 0
+        for page in pages:
+            w, r, b, c = _encode_tree(page, codec)
+            wired_pages.append(w)
+            raw, wire, calls = raw + r, wire + b, calls + c
+        wired_slot = None
+        if slot_one is not None:
+            wired_slot, r, b, c = _encode_tree(slot_one, codec)
+            raw, wire, calls = raw + r, wire + b, calls + c
+        msg = {
+            "schema": SCHEMA_VERSION,
+            "uid": sess.uid,
+            "tenant": sess.tenant,
+            "prompt": np.asarray(req.prompt),
+            "max_new_tokens": int(req.max_new_tokens),
+            "eos_id": int(req.eos_id),
+            "priority": int(getattr(req, "priority", 0)),
+            "deadline": getattr(req, "deadline", None),
+            "tokens": list(sess.tokens),
+            "length": int(handoff.length),
+            "requeues": int(handoff.requeues),
+            "pages": wired_pages,
+            "slot_one": wired_slot,
+        }
+        frame = pack_frame(K_HANDOFF,
+                           pickle.dumps(msg, pickle.HIGHEST_PROTOCOL))
+        self.channel.send(frame)
+        self.runtime.meter_transfer("kv_publish", raw, wire, calls=calls)
+        self.runtime.meter_transfer("kv_wire", len(frame), len(frame))
+        self._inflight[sess.uid] = sess
+        self.published += 1
+        self.shipped_pages += len(pages)
+
+    # ------------------------------------------------------------------
+    def pump(self) -> None:
+        """Drain control frames (ACK / RESULT / BYE) off the channel."""
+        while True:
+            got = recv_frame(self.channel, retries=self._retries,
+                             backoff=self._backoff, sleep=self._sleep)
+            if got is None:
+                return
+            kind, payload = got
+            msg = pickle.loads(payload)
+            if kind == K_ACK:
+                sess = self._inflight.pop(msg["uid"], None)
+                if sess is not None:
+                    self._adopted[msg["uid"]] = sess
+                    self.delivered += 1
+            elif kind == K_RESULT:
+                self._apply_result(msg)
+            elif kind == K_BYE:
+                self.peer_done = True
+            else:
+                raise WireFormatError(
+                    f"unexpected frame kind {_KIND_NAMES.get(kind, kind)} "
+                    "on the prefill side")
+
+    def _apply_result(self, msg: Dict[str, Any]) -> None:
+        uid = msg["uid"]
+        sess = self._adopted.pop(uid, None) or self._inflight.pop(uid, None)
+        self.results += 1
+        if self.quota is not None:
+            self.quota.release_uid(uid)
+        if sess is None:
+            return
+        if not sess.done:
+            # same list object: keep the Request.out_tokens alias intact
+            del sess.tokens[:]
+            sess.tokens.extend(msg["tokens"])
+            sess.length = int(msg["length"])
+            sess.finish(msg["finish_reason"])
+        self.completed.append(sess)
+
+    # ------------------------------------------------------------------
+    def sweep_cancelled(self) -> List[Session]:
+        """CANCEL in-flight sessions whose submitter cancelled them;
+        returns the swept sessions (the engine releases their quota)."""
+        self.pump()
+        swept: List[Session] = []
+        for store in (self._inflight, self._adopted):
+            for uid, sess in list(store.items()):
+                if sess.done:
+                    del store[uid]
+                    _control(self.channel, self.runtime, K_CANCEL,
+                             {"uid": uid})
+                    self.swept += 1
+                    swept.append(sess)
+        return swept
+
+    def send_bye(self) -> None:
+        _control(self.channel, self.runtime, K_BYE, {})
+
+    # ------------------------------------------------------------------
+    def traffic_report(self) -> Dict[str, Any]:
+        report = dict(self.runtime.traffic_report())
+        report["transfer"] = {
+            "published": self.published,
+            "delivered": self.delivered,
+            "requeued": self.requeued,
+            "swept": self.swept,
+            "depth": len(self._inflight),
+            "shipped_pages": self.shipped_pages,
+            "adopted_pages": 0,
+            "results": self.results,
+        }
+        return report
+
+    def describe(self) -> str:
+        cap = "" if self.max_depth is None else f"/{self.max_depth}"
+        return (f"wire-out[depth={len(self._inflight)}{cap} "
+                f"shipped={self.shipped_pages}p results={self.results}]")
+
+
+class WireReceiver:
+    """Decode-side half of the wire: duck-types the ``TransferQueue``
+    surface the decode-role Engine and ``PagedKVCacheManager.adopt``
+    consume (``next_ready`` / ``requeue`` / ``fetch_pages`` /
+    ``fetch_slot_leaves`` / ``discard`` / ``sweep_cancelled``).
+
+    HANDOFF frames reconstruct the session (Request fields + the tokens
+    emitted so far) and park a :class:`WireHandoff`; adoption ACKs back
+    (freeing a sender credit), retirement sends RESULT with the full
+    token stream.  ``flush_results`` runs inside ``sweep_cancelled`` so a
+    plain ``Engine.step`` loop needs no extra wiring."""
+
+    def __init__(self, channel: Channel, runtime: MemoryRuntime, *,
+                 retries: int = 10, backoff: float = 0.005,
+                 sleep=time.sleep):
+        self.channel = channel
+        self.runtime = runtime
+        self._retries, self._backoff, self._sleep = retries, backoff, sleep
+        self._parked: Deque[WireHandoff] = deque()
+        self._sessions: Dict[int, Session] = {}
+        self._result_sent: set = set()
+        self._seq = 0
+        self.peer_done = False
+        self.published = 0          # HANDOFF frames received
+        self.delivered = 0
+        self.requeued = 0
+        self.swept = 0
+        self.shipped_pages = 0
+        self.adopted_pages = 0
+
+    # ------------------------------------------------------------------
+    def _restore_session(self, msg: Dict[str, Any]) -> Session:
+        from repro.serve.engine import Request
+        req = Request(uid=msg["uid"], prompt=msg["prompt"],
+                      max_new_tokens=msg["max_new_tokens"],
+                      eos_id=msg["eos_id"], priority=msg["priority"],
+                      tenant=msg["tenant"], deadline=msg["deadline"])
+        sess = Session(request=req, seq=self._seq)
+        self._seq += 1
+        sess.tokens.extend(msg["tokens"])
+        sess.length = msg["length"]
+        return sess
+
+    def pump(self) -> None:
+        while True:
+            got = recv_frame(self.channel, retries=self._retries,
+                             backoff=self._backoff, sleep=self._sleep)
+            if got is None:
+                return
+            kind, payload = got
+            msg = pickle.loads(payload)
+            if kind == K_HANDOFF:
+                if msg["schema"] != SCHEMA_VERSION:
+                    raise WireFormatError(
+                        f"handoff header schema v{msg['schema']} != "
+                        f"v{SCHEMA_VERSION}")
+                sess = self._restore_session(msg)
+                self._sessions[sess.uid] = sess
+                self._parked.append(WireHandoff(
+                    sess, msg["length"], msg["pages"], msg["slot_one"],
+                    requeues=msg["requeues"]))
+                self.published += 1
+                self.shipped_pages += len(msg["pages"])
+            elif kind == K_CANCEL:
+                sess = self._sessions.get(msg["uid"])
+                if sess is not None and not sess.done:
+                    sess.cancel()
+            elif kind == K_BYE:
+                self.peer_done = True
+            else:
+                raise WireFormatError(
+                    f"unexpected frame kind {_KIND_NAMES.get(kind, kind)} "
+                    "on the decode side")
+
+    # ------------------------------------------------------------------
+    def depth(self) -> int:
+        self.pump()
+        return len(self._parked)
+
+    def has_room(self, pending: int = 0) -> bool:
+        return True                  # the sender's credit window bounds us
+
+    def parked_uids(self) -> Tuple[int, ...]:
+        return tuple(h.uid for h in self._parked)
+
+    def next_ready(self) -> Optional[WireHandoff]:
+        self.pump()
+        if not self._parked:
+            return None
+        self.delivered += 1
+        return self._parked.popleft()
+
+    def requeue(self, handoff: WireHandoff) -> None:
+        handoff.requeues += 1
+        self.requeued += 1
+        self._parked.append(handoff)
+
+    # ------------------------------------------------------------------
+    def _ack(self, handoff: WireHandoff) -> None:
+        _control(self.channel, self.runtime, K_ACK, {"uid": handoff.uid})
+
+    def fetch_pages(self, handoff: WireHandoff) -> List[Any]:
+        """Decode the shipped pages (metered ``kv_adopt``: raw = tensor
+        bytes, wire = encoded bytes) and ACK the adoption — the sender's
+        credit frees once the pages have landed."""
+        pages = []
+        raw = wire = 0.0
+        calls = 0
+        for tree in handoff.pages:
+            for leaf in jax.tree.leaves(tree, is_leaf=_is_wire_leaf):
+                raw += float(np.prod(leaf.data.shape) or 1) * \
+                    np.dtype(leaf.dtype).itemsize if leaf.codec else \
+                    float(leaf.data.nbytes)
+                wire += leaf.nbytes
+                calls += 1
+            pages.append(_decode_tree(tree))
+        self.runtime.meter_transfer("kv_adopt", raw, wire, calls=calls)
+        self.adopted_pages += len(pages)
+        handoff.pages = []
+        self._ack(handoff)
+        return pages
+
+    def fetch_slot_leaves(self, handoff: WireHandoff) -> Any:
+        if handoff.slot_one is None:
+            return None
+        raw = wire = 0.0
+        calls = 0
+        for leaf in jax.tree.leaves(handoff.slot_one, is_leaf=_is_wire_leaf):
+            raw += float(np.prod(leaf.data.shape) or 1) * \
+                np.dtype(leaf.dtype).itemsize if leaf.codec else \
+                float(leaf.data.nbytes)
+            wire += leaf.nbytes
+            calls += 1
+        self.runtime.meter_transfer("kv_adopt", raw, wire, calls=calls)
+        out = _decode_tree(handoff.slot_one)
+        handoff.slot_one = None
+        return out
+
+    def discard(self, handoff: WireHandoff) -> None:
+        """Drop an unconsumed handoff (cancelled in transit) and ACK so
+        the sender's credit window frees anyway."""
+        handoff.pages = []
+        handoff.slot_one = None
+        self._ack(handoff)
+
+    # ------------------------------------------------------------------
+    def sweep_cancelled(self) -> List[Session]:
+        self.pump()
+        swept: List[Session] = []
+        for handoff in [h for h in self._parked if h.session.done]:
+            self._parked.remove(handoff)
+            self.discard(handoff)
+            self.swept += 1
+            swept.append(handoff.session)
+        self.flush_results()
+        return swept
+
+    def flush_results(self) -> None:
+        """Send RESULT for every locally retired session, exactly once."""
+        parked = {h.uid for h in self._parked}
+        for uid, sess in list(self._sessions.items()):
+            if not sess.done or uid in self._result_sent or uid in parked:
+                continue
+            _control(self.channel, self.runtime, K_RESULT, {
+                "uid": uid,
+                "tokens": list(sess.tokens),
+                "length": int(sess.length),
+                "finish_reason": sess.finish_reason or FINISH_CANCELLED,
+            })
+            self._result_sent.add(uid)
+
+    def pending_results(self) -> int:
+        parked = {h.uid for h in self._parked}
+        return sum(1 for uid, s in self._sessions.items()
+                   if s.done and uid not in self._result_sent
+                   and uid not in parked)
+
+    def send_bye(self) -> None:
+        _control(self.channel, self.runtime, K_BYE, {})
+
+    # ------------------------------------------------------------------
+    def traffic_report(self) -> Dict[str, Any]:
+        report = dict(self.runtime.traffic_report())
+        report["transfer"] = {
+            "published": self.published,
+            "delivered": self.delivered,
+            "requeued": self.requeued,
+            "swept": self.swept,
+            "depth": len(self._parked),
+            "shipped_pages": self.shipped_pages,
+            "adopted_pages": self.adopted_pages,
+        }
+        return report
+
+    def describe(self) -> str:
+        return (f"wire-in[depth={len(self._parked)} "
+                f"adopted={self.adopted_pages}p requeued={self.requeued}]")
+
+
+# ---------------------------------------------------------------------------
+def _wire_runtime(model) -> MemoryRuntime:
+    """A metering runtime for one wire endpoint (kv_wire / kv_publish /
+    kv_adopt accounting; nothing is stashed through its tier)."""
+    return MemoryRuntime(
+        model.plan,
+        MemoryPlan(policy="host", placement=model.memory.placement),
+        model.mesh, planner=model.planner)
+
+
+class WirePrefill:
+    """Prefill half of a cross-process pair: local prefill engine + the
+    :class:`WireSender`; the decode engine lives behind the channel.
+    Steppable/routable like a :class:`~repro.serve.disagg.DisaggPair`
+    (``decode is None`` marks the remote half)."""
+
+    decode = None
+
+    def __init__(self, prefill, sender: WireSender,
+                 window_hint: Optional[int] = None):
+        if prefill.role != "prefill" or prefill.transfer is not sender:
+            raise ValueError("need a prefill-role engine driving THIS "
+                             "WireSender")
+        self.prefill = prefill
+        self.transfer = sender
+        self.window_hint = window_hint
+
+    def submit(self, req=None, on_token=None, session=None) -> Session:
+        return self.prefill.submit(req, on_token=on_token, session=session)
+
+    def step(self) -> int:
+        shipped = self.prefill.step()
+        self.transfer.pump()
+        return shipped + self.transfer.outstanding()
+
+    def has_work(self) -> bool:
+        return (self.prefill.scheduler.has_waiting()
+                or bool(self.prefill.cache.running())
+                or self.transfer.outstanding() > 0)
+
+    def run(self, max_steps: int = 100_000, idle_sleep: float = 0.002,
+            sleep=time.sleep) -> List[Any]:
+        for _ in range(max_steps):
+            busy = self.step()
+            if not self.has_work():
+                break
+            if busy == 0:
+                sleep(idle_sleep)     # waiting on the remote decode
+        return self.prefill.finished + \
+            [s.request for s in self.transfer.completed]
+
+    def close(self) -> None:
+        self.transfer.send_bye()
+
+    def traffic_report(self) -> Dict[str, Any]:
+        return {"transfer": self.transfer.traffic_report(),
+                "prefill": self.prefill.traffic_report()}
+
+    def quota_report(self) -> Dict[str, Any]:
+        return self.prefill.quota_report()
+
+    def describe(self) -> str:
+        return (f"wire-prefill[{self.prefill.describe()} -> "
+                f"{self.transfer.describe()}]")
+
+
+class WirePair:
+    """Both halves in one process, joined by a real (byte-serialized)
+    channel pair — the wire twin of the loopback
+    :class:`~repro.serve.disagg.DisaggPair`, and the harness the
+    bit-identity suite drives: every page crosses the channel as frames,
+    yet the token streams must match the loopback exactly."""
+
+    def __init__(self, prefill, decode, sender: WireSender,
+                 receiver: WireReceiver):
+        if prefill.role != "prefill" or decode.role != "decode":
+            raise ValueError(f"need (prefill, decode) roles, got "
+                             f"({prefill.role!r}, {decode.role!r})")
+        if prefill.transfer is not sender or decode.transfer is not receiver:
+            raise ValueError("engines must drive THIS sender/receiver pair")
+        if prefill._page_size != decode.cache.page_size:
+            raise ValueError(
+                f"page_size mismatch: prefill ships {prefill._page_size}-row "
+                f"pages, decode pools {decode.cache.page_size}-row frames")
+        if prefill.max_len != decode.max_len:
+            raise ValueError(f"max_len mismatch: {prefill.max_len} vs "
+                             f"{decode.max_len}")
+        self.prefill = prefill
+        self.decode = decode
+        self.sender = sender
+        self.receiver = receiver
+        # router-facing alias: the pair's transfer depth is the sender's
+        # credit window (parked on either side of the wire)
+        self.transfer = sender
+
+    # ------------------------------------------------------------------
+    def submit(self, req=None, on_token=None, session=None) -> Session:
+        return self.prefill.submit(req, on_token=on_token, session=session)
+
+    def step(self) -> int:
+        shipped = self.prefill.step()
+        active = self.decode.step()
+        self.receiver.flush_results()
+        self.sender.pump()
+        return shipped + active
+
+    def has_work(self) -> bool:
+        return (self.prefill.scheduler.has_waiting()
+                or bool(self.prefill.cache.running())
+                or self.sender.outstanding() > 0
+                or self.receiver.depth() > 0
+                or self.receiver.pending_results() > 0
+                or self.decode.scheduler.has_waiting()
+                or bool(self.decode.cache.running()))
+
+    def run(self, max_steps: int = 10_000) -> List[Any]:
+        for _ in range(max_steps):
+            self.step()
+            if not self.has_work():
+                break
+        return self.prefill.finished + \
+            [s.request for s in self.sender.completed]
+
+    # ------------------------------------------------------------------
+    def traffic_report(self) -> Dict[str, Any]:
+        return {"wire_out": self.sender.traffic_report(),
+                "wire_in": self.receiver.traffic_report(),
+                "decode": self.decode.traffic_report(),
+                "prefill": self.prefill.traffic_report()}
+
+    def quota_report(self) -> Dict[str, Any]:
+        return self.prefill.quota_report()
+
+    def describe(self) -> str:
+        return (f"wire[{self.prefill.describe()} -> "
+                f"{self.sender.describe()} | {self.receiver.describe()} "
+                f"-> {self.decode.describe()}]")
+
+
+# ---------------------------------------------------------------------------
+def build_wire_pair(model, params, *,
+                    transport: str = "memory",
+                    channels: Optional[Tuple[Channel, Channel]] = None,
+                    batch: Optional[int] = None,
+                    max_len: Optional[int] = None,
+                    page_size: int = 16,
+                    pages: Optional[int] = None,
+                    prefill_batch: int = 1,
+                    max_depth: Optional[int] = None,
+                    scheduler: Union[str, Any] = "fcfs",
+                    decode_scheduler: Union[str, Any, None] = None,
+                    spill: Union[str, Any, None] = "spill",
+                    quota: Union[QuotaManager, TenantQuota,
+                                 Dict[str, TenantQuota], None] = None,
+                    wire_codec: Union[bool, str, None] = None,
+                    temperature: float = 0.0, seed: int = 0,
+                    **cache_kwargs) -> WirePair:
+    """Wire a prefill/decode pair over a real byte channel.
+
+    Mirrors :func:`~repro.serve.disagg.build_disagg` (same seed
+    discipline: decode samples from ``seed + 1``) with the loopback
+    ``TransferQueue`` replaced by a serialized channel.  ``wire_codec``:
+    None — raw pages; ``True`` — each tenant's quota codec
+    (``QuotaManager.codec_for``, lossy codecs trade wire bytes for
+    fidelity); a codec name — that codec for every tenant."""
+    from repro.serve.engine import Engine   # circular-at-import avoidance
+
+    tx, rx = channels if channels is not None else build_transport(transport)
+
+    if quota is None or isinstance(quota, QuotaManager):
+        shared_quota = quota
+    elif isinstance(quota, TenantQuota):
+        shared_quota = QuotaManager(default_quota=quota)
+    else:
+        shared_quota = QuotaManager(dict(quota))
+
+    if wire_codec is True:
+        codec_for = shared_quota.codec_for if shared_quota else None
+    elif isinstance(wire_codec, str):
+        get_codec(wire_codec)               # raise early on unknown codec
+        codec_for = lambda tenant: wire_codec   # noqa: E731
+    else:
+        codec_for = None
+
+    if decode_scheduler is None:
+        decode_scheduler = scheduler if isinstance(scheduler, str) else "fcfs"
+
+    sender = WireSender(tx, _wire_runtime(model), max_depth=max_depth,
+                        codec_for=codec_for, quota=shared_quota)
+    receiver = WireReceiver(rx, _wire_runtime(model))
+
+    decode = Engine(model, params, batch=batch, max_len=max_len,
+                    temperature=temperature, seed=seed + 1,
+                    scheduler=decode_scheduler, spill=spill,
+                    page_size=page_size, pages=pages, quota=shared_quota,
+                    role="decode", transfer=receiver, **cache_kwargs)
+    prefill = Engine(model, params, batch=prefill_batch,
+                     max_len=decode.max_len,
+                     temperature=temperature, seed=seed,
+                     scheduler=scheduler, spill=None,
+                     page_size=page_size, quota=shared_quota,
+                     role="prefill", transfer=sender)
+    return WirePair(prefill, decode, sender, receiver)
+
+
+def build_wire_prefill(model, params, channel: Channel, *,
+                       max_len: Optional[int] = None,
+                       page_size: int = 16,
+                       prefill_batch: int = 1,
+                       max_depth: Optional[int] = None,
+                       scheduler: Union[str, Any] = "fcfs",
+                       quota: Optional[QuotaManager] = None,
+                       wire_codec: Optional[str] = None,
+                       window_hint: Optional[int] = None,
+                       temperature: float = 0.0,
+                       seed: int = 0) -> WirePrefill:
+    """The prefill half for a two-process deployment (decode is remote)."""
+    from repro.serve.engine import Engine
+
+    codec_for = (lambda tenant: wire_codec) if wire_codec else None
+    sender = WireSender(channel, _wire_runtime(model), max_depth=max_depth,
+                        codec_for=codec_for, quota=quota)
+    prefill = Engine(model, params, batch=prefill_batch, max_len=max_len,
+                     temperature=temperature, seed=seed,
+                     scheduler=scheduler, spill=None, page_size=page_size,
+                     quota=quota, role="prefill", transfer=sender)
+    return WirePrefill(prefill, sender, window_hint=window_hint)
+
+
+def run_decode_worker(model, params, channel: Channel, *,
+                      batch: Optional[int] = None,
+                      max_len: Optional[int] = None,
+                      page_size: int = 16,
+                      pages: Optional[int] = None,
+                      scheduler: Union[str, Any] = "fcfs",
+                      spill: Union[str, Any, None] = "spill",
+                      temperature: float = 0.0, seed: int = 1,
+                      max_steps: int = 1_000_000,
+                      idle_sleep: float = 0.002, sleep=time.sleep):
+    """Decode-worker main loop for the two-process deployment.
+
+    Adopts handoffs off ``channel``, decodes, RESULTs back; exits when the
+    prefill side says BYE and everything local has retired.  ``seed``
+    must be the prefill side's ``seed + 1`` for the cross-process streams
+    to match the loopback (``build_disagg`` seed discipline).  Returns
+    the decode engine (its traffic report prices the adopted bytes)."""
+    from repro.serve.engine import Engine
+
+    receiver = WireReceiver(channel, _wire_runtime(model))
+    eng = Engine(model, params, batch=batch, max_len=max_len,
+                 temperature=temperature, seed=seed, scheduler=scheduler,
+                 spill=spill, page_size=page_size, pages=pages,
+                 role="decode", transfer=receiver)
+    for _ in range(max_steps):
+        busy = eng.step()
+        receiver.flush_results()
+        idle = (busy == 0 and not eng.scheduler.has_waiting()
+                and not eng.cache.running() and receiver.depth() == 0
+                and receiver.pending_results() == 0)
+        if idle and receiver.peer_done:
+            break
+        if idle:
+            sleep(idle_sleep)        # poll the channel for the next frame
+    receiver.send_bye()
+    channel.close()
+    return eng

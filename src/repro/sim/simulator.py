@@ -21,8 +21,10 @@ batch sensitivity, and §V-D scalability.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Tuple
 
+from repro import hw
 from repro.core.dag import LayerDAG
 from repro.sim.topology import SystemConfig
 
@@ -303,3 +305,180 @@ def speedup_table(workloads: Dict[str, LayerDAG], systems,
 
 def harmonic_mean(xs: List[float]) -> float:
     return len(xs) / sum(1.0 / x for x in xs)
+
+
+# ---------------------------------------------------------------------------
+# Cluster serving model (PR 7): the synthetic traffic of
+# sim/workloads.generate_traffic evaluated analytically against DC/HC/MC
+# tier configurations — the same placement policies the real Router runs,
+# at a session count no single host can replay.
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """Per-token costs of the served model (decoder-only defaults sized
+    like a 7B at bf16)."""
+
+    flops_per_token: float = 2.0 * 7e9       # 2 * params per token
+    weight_bytes: float = 14e9               # resident weights (bf16)
+    kv_bytes_per_token: float = 524_288.0    # 32 layers x 2 x 4096 x bf16
+
+    def kv_bytes(self, tokens: int) -> float:
+        return self.kv_bytes_per_token * tokens
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """What one (trace, system, policy) evaluation produced."""
+
+    policy: str
+    system: str
+    engines: int
+    sessions: int
+    finished: int
+    tok_per_s: float
+    ttft_mean_s: float
+    ttft_p99_s: float
+    slo_miss_rate: float
+    mean_engine_util: float
+
+    def rows(self):
+        """Benchmark rows (name, value, note) for BENCH_router.json."""
+        tag = f"{self.system}/{self.policy}"
+        return [
+            (f"{tag}/tok_per_s", self.tok_per_s,
+             f"{self.engines} engines, {self.sessions} sessions"),
+            (f"{tag}/ttft_mean_ms", self.ttft_mean_s * 1e3, "analytic"),
+            (f"{tag}/ttft_p99_ms", self.ttft_p99_s * 1e3, "analytic"),
+            (f"{tag}/slo_miss_rate", self.slo_miss_rate,
+             "deadline classes only"),
+            (f"{tag}/engine_util", self.mean_engine_util, "busy fraction"),
+        ]
+
+
+def simulate_serving(trace, sys: SystemConfig, *,
+                     engines: int = 8,
+                     placement: str = "least_loaded",
+                     model: ModelProfile = ModelProfile(),
+                     decode_slots: int = 16,
+                     prefix_len: int = 8) -> ServingReport:
+    """Session-level analytic replay of a synthetic trace.
+
+    Each engine is a disaggregated pair abstracted to three resources,
+    priced exactly as the step simulator prices layers: a serial prefill
+    server (``max(FLOP-limited, HBM-limited)`` over the prompt), the KV
+    handoff over the system's backing tier (``effective_bw`` under
+    concurrent streamers, plus one DCN hop of latency — the wire), and
+    ``decode_slots`` decode lanes whose per-token time is HBM-bound with
+    the weight read amortized across resident lanes.  Placement reuses
+    the REAL registry from serve/router.py (EngineView duck-typing), so
+    the policy evaluated here is the policy the live cluster runs.
+
+    O(N log N) in sessions: one pass in arrival order with per-engine
+    finish-time heaps — a million-session day evaluates in seconds.
+    """
+    import heapq
+
+    from repro.serve.router import EngineView, build_placement
+
+    dev = sys.device
+    tier = sys.backing_tier
+    # every engine's handoff leg streams concurrently in the worst case
+    handoff_bw = min(tier.effective_bw(engines, sys.n_sockets), hw.DCN_BW)
+
+    policy = build_placement(placement, **(
+        {"prefix_len": prefix_len} if placement == "prefix_affinity" else {}))
+
+    class _Probe:
+        """Duck-types the Session surface placement policies touch."""
+
+        class _Req:
+            __slots__ = ("prompt",)
+
+        def __init__(self, s):
+            self.request = _Probe._Req()
+            self.request.prompt = list(range(
+                s.prefix_id * 1000, s.prefix_id * 1000 + prefix_len)) \
+                if s.prefix_id is not None else [s.uid]
+
+    prefill_free = [0.0] * engines
+    decode_free = [[0.0] * decode_slots for _ in range(engines)]
+    busy_s = [0.0] * engines
+    inflight = [[] for _ in range(engines)]     # finish-time heaps
+    window = decode_slots * 4                   # router-style backlog bound
+
+    ttfts: List[float] = []
+    missed = met = 0
+    total_tokens = 0
+    t_end = 0.0
+
+    for s in sorted(trace, key=lambda x: (x.arrival, x.uid)):
+        now = s.arrival
+        for h in inflight:
+            while h and h[0] <= now:
+                heapq.heappop(h)
+        views = [EngineView(i, len(inflight[i]),
+                            window - len(inflight[i]))
+                 for i in range(engines)]
+        idx = policy.choose(views, _Probe(s))
+
+        p_time = _compute_time(s.prompt_len * model.flops_per_token,
+                               model.weight_bytes +
+                               model.kv_bytes(s.prompt_len), sys)
+        p_start = max(now, prefill_free[idx])
+        p_end = p_start + p_time
+        prefill_free[idx] = p_end
+
+        handoff = model.kv_bytes(s.prompt_len) / handoff_bw \
+            + hw.DCN_LATENCY_S
+
+        lanes = decode_free[idx]
+        lane = min(range(decode_slots), key=lanes.__getitem__)
+        mid_len = s.prompt_len + s.decode_len / 2.0
+        tok_time = max(
+            model.flops_per_token / (dev.peak_flops * PE_EFFICIENCY),
+            (model.weight_bytes / decode_slots +
+             model.kv_bytes(int(mid_len))) / dev.hbm_bw)
+        d_start = max(p_end + handoff, lanes[lane])
+        first_tok = d_start + tok_time
+        d_end = d_start + s.decode_len * tok_time
+        lanes[lane] = d_end
+
+        ttfts.append(first_tok - now)
+        busy_s[idx] += p_time + s.decode_len * tok_time
+        heapq.heappush(inflight[idx], d_end)
+        total_tokens += s.decode_len
+        t_end = max(t_end, d_end)
+
+        if math.isfinite(s.slack_steps):
+            deadline = now + s.slack_steps * tok_time
+            if d_end <= deadline:
+                met += 1
+            else:
+                missed += 1
+
+    ttfts.sort()
+    n = len(ttfts)
+    span = max(t_end - min(s.arrival for s in trace), 1e-9) if trace else 1.0
+    return ServingReport(
+        policy=getattr(policy, "name", str(placement)),
+        system=sys.name,
+        engines=engines,
+        sessions=len(trace),
+        finished=n,
+        tok_per_s=total_tokens / span,
+        ttft_mean_s=sum(ttfts) / n if n else 0.0,
+        ttft_p99_s=ttfts[min(n - 1, int(0.99 * n))] if n else 0.0,
+        slo_miss_rate=missed / (met + missed) if (met + missed) else 0.0,
+        mean_engine_util=sum(busy_s) / (engines * span),
+    )
+
+
+def serving_table(trace, systems, *, policies=("least_loaded",
+                                               "prefix_affinity",
+                                               "round_robin"),
+                  engines: int = 8, **kwargs) -> List[ServingReport]:
+    """The policy x system sweep behind BENCH_router.json."""
+    return [simulate_serving(trace, sys, engines=engines,
+                             placement=pol, **kwargs)
+            for sys in systems for pol in policies]

@@ -436,7 +436,7 @@ def _mk_handoff(uid, n_pages):
     return KVHandoff(session=sess, length=n_pages), pages
 
 
-def run_transfer_queue_trace(ops, max_depth=None):
+def run_transfer_queue_trace(ops, max_depth=None, make_queue=None):
     """Drive a TransferQueue through publish/adopt/defer/cancel steps.
 
     Invariants asserted (the ISSUE's list):
@@ -447,9 +447,24 @@ def run_transfer_queue_trace(ops, max_depth=None):
       then parked is offered before the requeued one comes around again;
     * no payload leak — at drain, every stashed page was fetched or
       discarded and the ledger is empty.
+
+    ``make_queue(max_depth) -> (queue, leak_check)`` swaps the queue
+    under test: the default is the in-process loopback; the wire suite
+    (tests/test_router.py) passes a byte-serialized sender/receiver glue
+    so the SAME invariants pin the transport.  The queue must expose the
+    TransferQueue surface plus ``_parked`` (handoffs with ``.uid`` /
+    ``.session``) and ``adopted_pages``.
     """
-    runtime = LedgerRuntime()
-    q = TransferQueue(runtime, max_depth=max_depth)
+    if make_queue is None:
+        def make_queue(depth):
+            runtime = LedgerRuntime()
+            queue = TransferQueue(runtime, max_depth=depth)
+
+            def leak_check():
+                assert not runtime.store, \
+                    "payloads leaked in the transfer tier"
+            return queue, leak_check
+    q, leak_check = make_queue(max_depth)
     uid = 0
     published, adopted, cancelled = {}, set(), set()
     waiting_for = {}        # uid -> uids that must be offered before it
@@ -516,7 +531,7 @@ def run_transfer_queue_trace(ops, max_depth=None):
              if u not in adopted and u not in cancelled}
     # cancelled-in-queue sessions were swept by sweep_cancelled
     assert all(u not in adopted for u in swept)
-    assert not runtime.store, "payloads leaked in the transfer tier"
+    leak_check()
     assert q.adopted_pages == sum(len(published[u]) for u in adopted)
     return q, adopted
 

@@ -128,3 +128,42 @@ def test_deadline_misses_monotone_in_slack(jobs, slots, slacks):
     assert tight.met + tight.misses == loose.met + loose.misses
     if lo == hi:
         assert (tight.met, tight.misses) == (loose.met, loose.misses)
+
+
+# ---------------------------------------------------------------------------
+# cluster router (drivers from tests/test_router.py): no session is ever
+# placed on a non-ACTIVE engine (the SpyPolicy asserts on every choice),
+# every drain terminates, and nothing is dropped — under arbitrary
+# submit/drain/fail interleavings on every placement policy.
+from test_router import (_assert_invariants, _make_wire_queue,  # noqa: E402
+                         _run_ops)
+
+router_ops = st.lists(
+    st.tuples(st.sampled_from(["submit", "submit", "submit", "drain",
+                               "fail"]),
+              st.integers(min_value=0, max_value=31)),
+    min_size=1, max_size=60)
+
+
+@given(ops=router_ops,
+       n_engines=st.integers(min_value=1, max_value=5),
+       slots=st.integers(min_value=1, max_value=4),
+       policy=st.sampled_from(["least_loaded", "round_robin",
+                               "prefix_affinity"]))
+@settings(max_examples=120, deadline=None)
+def test_no_placement_on_draining_and_drain_terminates(
+        ops, n_engines, slots, policy):
+    _assert_invariants(_run_ops(ops, n_engines=n_engines, slots=slots,
+                                policy=policy))
+
+
+@given(ops=queue_ops,
+       max_depth=st.one_of(st.none(), st.integers(min_value=1, max_value=6)))
+@settings(max_examples=60, deadline=None)
+def test_wire_queue_traces_match_loopback_invariants(ops, max_depth):
+    """The byte-serialized wire transport driven through the SAME trace
+    driver that pins the loopback TransferQueue: FIFO pages, exactly-once
+    delivery, no starvation, no leaked payloads — now across frames."""
+    q, adopted = run_transfer_queue_trace(
+        ops, max_depth=max_depth, make_queue=_make_wire_queue)
+    assert q.depth() == 0

@@ -1,0 +1,155 @@
+"""Synthetic traffic generator (sim/workloads.py) and the analytic
+serving replay (sim/simulator.simulate_serving) that evaluates the REAL
+placement registry against DC/HC/MC system configs at full scale."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.sim.simulator import (ModelProfile, ServingReport,
+                                 serving_table, simulate_serving)
+from repro.sim.topology import DC_DLA, HC_DLA, MC_DLA_B
+from repro.sim.workloads import (SyntheticSession, TrafficSpec,
+                                 generate_traffic, traffic_summary)
+
+SPEC = TrafficSpec(sessions=2000, horizon_s=86_400.0, seed=11)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return generate_traffic(SPEC)
+
+
+def test_generator_deterministic(trace):
+    again = generate_traffic(SPEC)
+    assert again == trace                   # frozen dataclasses compare
+    other = generate_traffic(
+        TrafficSpec(sessions=2000, horizon_s=86_400.0, seed=12))
+    assert other != trace
+
+
+def test_trace_shape(trace):
+    assert len(trace) == SPEC.sessions
+    arrivals = [s.arrival for s in trace]
+    assert arrivals == sorted(arrivals)
+    assert 0.0 <= min(arrivals) and max(arrivals) <= SPEC.horizon_s
+    for s in trace:
+        assert 1 <= s.prompt_len <= SPEC.prompt_max
+        assert 1 <= s.decode_len <= SPEC.decode_max
+        assert s.slo in ("interactive", "standard", "batch")
+        assert s.tenant in SPEC.tenants
+        if s.prefix_id is None:
+            assert s.prefix_len == 0
+        else:
+            assert 0 <= s.prefix_id < SPEC.prefix_pool
+            # a shared prefix only exists inside a longer prompt
+            assert s.prompt_len > s.prefix_len == SPEC.prefix_len
+
+
+def test_slo_slack_contract(trace):
+    slack_of = {name: slack for name, _, slack in SPEC.slo_classes}
+    for s in trace:
+        if slack_of[s.slo] is None:
+            assert math.isinf(s.slack_steps)        # batch: no deadline
+        else:
+            assert s.slack_steps == slack_of[s.slo] * s.decode_len
+
+
+def test_mix_matches_spec(trace):
+    summary = traffic_summary(trace)
+    assert summary["sessions"] == SPEC.sessions
+    # weights are sampled; on 2000 sessions the mix lands within a few %
+    assert abs(summary["by_slo"]["standard"] / SPEC.sessions - 0.5) < 0.1
+    assert abs(summary["by_tenant"]["default"] / SPEC.sessions - 0.6) < 0.1
+    assert abs(summary["shared_prefix_frac"] - SPEC.shared_prefix_frac) < 0.1
+    assert summary["mean_prompt"] < SPEC.prompt_max
+
+
+def test_diurnal_concentration():
+    """With a strong diurnal cycle and no bursts, the peak hour gets
+    several times the traffic of the trough hour."""
+    spec = TrafficSpec(sessions=5000, diurnal_amplitude=0.9,
+                       peak_hour=14.0, burst_rate_per_hour=0.0, seed=3)
+    trace = generate_traffic(spec)
+    hour = lambda s: int(s.arrival // 3600) % 24
+    counts = [0] * 24
+    for s in trace:
+        counts[hour(s)] += 1
+    assert counts[14] > 3 * max(counts[2], 1)       # trough is ~2am
+
+
+def test_bursts_cluster_arrivals():
+    """Burst events concentrate arrivals into tight windows: the busiest
+    minute of a bursty trace far exceeds the flat trace's."""
+
+    def busiest_minute(spec):
+        trace = generate_traffic(spec)
+        counts = {}
+        for s in trace:
+            counts[int(s.arrival // 60)] = counts.get(
+                int(s.arrival // 60), 0) + 1
+        return max(counts.values())
+
+    flat = busiest_minute(TrafficSpec(
+        sessions=3000, diurnal_amplitude=0.0, burst_rate_per_hour=0.0,
+        seed=7))
+    bursty = busiest_minute(TrafficSpec(
+        sessions=3000, diurnal_amplitude=0.0, burst_rate_per_hour=4.0,
+        burst_size=100, burst_spread_s=10.0, seed=7))
+    assert bursty > 3 * flat
+
+
+# ---------------------------------------------------------------------------
+def test_simulate_serving_basic(trace):
+    rep = simulate_serving(trace, MC_DLA_B, engines=4)
+    assert isinstance(rep, ServingReport)
+    assert rep.finished == len(trace)
+    assert rep.tok_per_s > 0
+    assert 0.0 < rep.ttft_mean_s <= rep.ttft_p99_s
+    assert 0.0 <= rep.slo_miss_rate <= 1.0
+    assert 0.0 < rep.mean_engine_util <= 1.0
+    rows = rep.rows()
+    assert len(rows) == 5
+    assert all(name.startswith(f"{rep.system}/{rep.policy}")
+               for name, _, _ in rows)
+
+
+def test_serving_table_sweeps_policies_and_systems(trace):
+    reports = serving_table(trace, [DC_DLA, HC_DLA, MC_DLA_B], engines=4)
+    assert len(reports) == 9                    # 3 systems x 3 policies
+    assert {r.policy for r in reports} == {
+        "least_loaded", "prefix_affinity", "round_robin"}
+    assert {r.system for r in reports} == {
+        DC_DLA.name, HC_DLA.name, MC_DLA_B.name}
+
+
+def test_memory_centric_tier_helps_handoff(trace):
+    """The paper's thesis at serving scale: the memory-centric pool's
+    fatter backing tier shortens the prefill->decode KV handoff, so
+    TTFT under the same policy is no worse than the DC baseline."""
+    dc = simulate_serving(trace, DC_DLA, engines=4)
+    mc = simulate_serving(trace, MC_DLA_B, engines=4)
+    assert mc.ttft_mean_s <= dc.ttft_mean_s
+    assert mc.slo_miss_rate <= dc.slo_miss_rate
+
+
+def test_heavier_model_is_slower(trace):
+    small = simulate_serving(trace, MC_DLA_B, engines=4,
+                             model=ModelProfile())
+    big = simulate_serving(trace, MC_DLA_B, engines=4,
+                           model=ModelProfile(
+                               flops_per_token=2.0 * 70e9,
+                               weight_bytes=140e9,
+                               kv_bytes_per_token=2 * 524_288.0))
+    assert big.ttft_mean_s > small.ttft_mean_s
+    assert big.tok_per_s < small.tok_per_s
+
+
+def test_replay_and_analytic_see_same_trace():
+    """The same spec yields the same sessions for both consumers — the
+    scaled-down router replay and the analytic sweep (determinism is the
+    contract that makes the two comparable)."""
+    spec = TrafficSpec(sessions=50, horizon_s=600.0, seed=9)
+    a, b = generate_traffic(spec), generate_traffic(spec)
+    assert [s.uid for s in a] == [s.uid for s in b]
+    assert traffic_summary(a) == traffic_summary(b)

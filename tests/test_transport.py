@@ -1,0 +1,368 @@
+"""Wire transport for KV handoffs: framing, corruption, retry, and the
+acceptance twin — disagg-over-wire streams bit-identical to the loopback
+with ``kv_wire`` metering reconciling exactly against the channel.
+
+Satellite coverage (ISSUE 7): the versioned frame header (schema + CRC32
+— a corrupted or mismatched frame raises :class:`WireFormatError` before
+any unpickling) and the quota-leak fix (a transport send that fails after
+prefill must release the per-uid reservation when the session requeues).
+"""
+import pickle
+import struct
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, MemoryPlan, RunConfig
+from repro.configs.base import MeshPlan, ShapeConfig
+from repro.models.model import build_model
+from repro.serve.disagg import build_disagg
+from repro.serve.engine import Engine, Request
+from repro.serve.quota import QuotaManager, TenantQuota
+from repro.serve import transport as tp
+from repro.serve.transport import (Channel, InMemoryChannel, TransportError,
+                                   WireFormatError, build_transport,
+                                   build_wire_pair, memory_pair, pack_frame,
+                                   recv_frame, registered_transports,
+                                   run_decode_worker, tcp_pair)
+
+CFG = ARCHS["smollm-135m"].reduced()
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    run = RunConfig(model=CFG, shape=ShapeConfig("t", 64, 2, "decode"),
+                    mesh=MeshPlan((1,), ("data",)),
+                    memory=MemoryPlan(policy="none"))
+    m = build_model(run)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompts(n, base=4):
+    return [((np.arange(base + i, dtype=np.int32) * (i + 2) + 1)
+             % CFG.vocab_size) for i in range(n)]
+
+
+def _no_sleep(_):
+    raise AssertionError("framing slept on a healthy channel")
+
+
+# ---------------------------------------------------------------------------
+# framing
+def test_frame_roundtrip_all_kinds():
+    a, b = memory_pair()
+    for kind in (tp.K_HANDOFF, tp.K_ACK, tp.K_CANCEL, tp.K_RESULT,
+                 tp.K_BYE):
+        payload = pickle.dumps({"kind": kind, "blob": b"x" * kind})
+        a.send(pack_frame(kind, payload))
+        got = recv_frame(b, sleep=_no_sleep)
+        assert got == (kind, payload)
+    assert recv_frame(b, sleep=_no_sleep) is None   # drained
+
+
+def test_recv_none_when_idle():
+    _, b = memory_pair()
+    assert recv_frame(b, sleep=_no_sleep) is None
+
+
+def test_corrupted_frame_raises_before_unpickle():
+    """Satellite: flip one payload byte — the CRC must catch it and the
+    error must be raised BEFORE pickle sees the garbage."""
+    class Bomb:
+        def __reduce__(self):
+            return (pytest.fail, ("corrupted frame was unpickled",))
+
+    frame = bytearray(pack_frame(tp.K_RESULT, pickle.dumps(Bomb())))
+    frame[tp._HEADER.size + 2] ^= 0xFF
+    a, b = memory_pair()
+    a.send(bytes(frame))
+    with pytest.raises(WireFormatError, match="CRC"):
+        recv_frame(b, sleep=_no_sleep)
+
+
+def test_schema_mismatch_raises():
+    payload = pickle.dumps({})
+    head = tp._HEADER.pack(tp._MAGIC, tp.SCHEMA_VERSION + 1, tp.K_ACK,
+                           len(payload))
+    import zlib
+    crc = zlib.crc32(payload, zlib.crc32(head)) & 0xFFFFFFFF
+    a, b = memory_pair()
+    a.send(head + payload + tp._CRC.pack(crc))
+    with pytest.raises(WireFormatError, match="schema"):
+        recv_frame(b, sleep=_no_sleep)
+
+
+def test_bad_magic_raises():
+    a, b = memory_pair()
+    a.send(b"XXzzzzzzz" + b"\0" * 20)
+    with pytest.raises(WireFormatError, match="magic"):
+        recv_frame(b, sleep=_no_sleep)
+
+
+def test_partial_reads_reassemble_with_backoff():
+    """A fragmented channel (1-byte reads) delivers the frame intact;
+    the retry loop backs off exponentially, fault.py-style."""
+    a, b = memory_pair(max_chunk=1)
+    payload = pickle.dumps(list(range(50)))
+    a.send(pack_frame(tp.K_RESULT, payload))
+    naps = []
+    got = recv_frame(b, retries=3, backoff=0.5, sleep=naps.append)
+    assert got == (tp.K_RESULT, payload)
+    assert not naps        # bytes kept arriving: no empty read, no sleep
+
+
+def test_mid_frame_starvation_exhausts_to_transport_error():
+    a, b = memory_pair()
+    frame = pack_frame(tp.K_ACK, pickle.dumps({"uid": 1}))
+    a.send(frame[:len(frame) // 2])     # never send the rest
+    naps = []
+    with pytest.raises(TransportError, match="partial read"):
+        recv_frame(b, retries=3, backoff=0.5, sleep=naps.append)
+    assert naps == [0.5, 1.0, 2.0]      # backoff * 2**attempt, no final nap
+
+
+def test_registry_mirrors_other_registries():
+    assert set(registered_transports()) >= {"memory", "tcp"}
+    a, b = build_transport("memory")
+    a.send(b"hi")
+    assert b.recv(10) == b"hi"
+    with pytest.raises(KeyError, match="unknown transport"):
+        build_transport("carrier-pigeon")
+
+
+def test_tcp_pair_roundtrips_frames():
+    a, b = tcp_pair()
+    try:
+        payload = pickle.dumps(np.arange(1000))
+        a.send(pack_frame(tp.K_HANDOFF, payload))
+        got = recv_frame(b, retries=20, backoff=0.001)
+        assert got == (tp.K_HANDOFF, payload)
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance twin: wire == loopback == (by PR 4) colocated/solo
+def _drive(pair, prompts, new_tokens=6):
+    ss = [pair.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
+          for i, p in enumerate(prompts)]
+    pair.run()
+    return [s.result() for s in ss]
+
+
+@pytest.mark.parametrize("transport", ["memory", "tcp"])
+def test_wire_streams_identical_to_loopback(model_and_params, transport):
+    m, params = model_and_params
+    prompts = _prompts(5)
+    loop = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host")
+    want = _drive(loop, prompts)
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", transport=transport)
+    assert _drive(wire, prompts) == want
+    # counters mirror the loopback queue's cross-checked set
+    out = wire.traffic_report()["wire_out"]["transfer"]
+    inn = wire.traffic_report()["wire_in"]["transfer"]
+    assert out["published"] == inn["published"] == 5
+    assert inn["adopted_pages"] == inn["shipped_pages"]
+    assert out["depth"] == inn["depth"] == 0
+
+
+def test_wire_streams_identical_through_fragmented_channel(
+        model_and_params):
+    """127-byte reads: reassembly never corrupts a page."""
+    m, params = model_and_params
+    prompts = _prompts(3)
+    loop = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host")
+    want = _drive(loop, prompts)
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host",
+                           channels=memory_pair(max_chunk=127))
+    assert _drive(wire, prompts) == want
+
+
+def test_kv_wire_bytes_reconcile_exactly(model_and_params):
+    """Acceptance: summed ``kv_wire`` equals every byte that crossed the
+    channel, and the publish/adopt legs see identical payload bytes."""
+    m, params = model_and_params
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host")
+    _drive(wire, _prompts(4, base=18))
+    rep = wire.traffic_report()
+    out_wire = rep["wire_out"]["kv_wire"]
+    in_wire = rep["wire_in"]["kv_wire"]
+    assert out_wire["wire_bytes"] == wire.sender.channel.bytes_sent
+    assert in_wire["wire_bytes"] == wire.receiver.channel.bytes_sent
+    # raw == wire for frames (already serialized), and the frame leg must
+    # carry at least the payload the publish leg metered
+    assert out_wire["raw_bytes"] == out_wire["wire_bytes"]
+    pub = rep["wire_out"]["kv_publish"]
+    adopt = rep["wire_in"]["kv_adopt"]
+    assert pub["wire_bytes"] == adopt["wire_bytes"] > 0
+    assert pub["raw_bytes"] == adopt["raw_bytes"]
+    assert out_wire["wire_bytes"] > pub["wire_bytes"]
+
+
+def test_wire_codec_compresses_pages(model_and_params):
+    """Pages routed through a tenant codec cross the wire compressed:
+    fewer wire bytes than raw, streams still close to lossless (fp8 is
+    lossy, so only the byte accounting is pinned here)."""
+    m, params = model_and_params
+    raw = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                          spill="host")
+    _drive(raw, _prompts(3, base=18))
+    fp8 = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                          spill="host", wire_codec="fp8")
+    _drive(fp8, _prompts(3, base=18))
+    raw_pub = raw.traffic_report()["wire_out"]["kv_publish"]
+    fp8_pub = fp8.traffic_report()["wire_out"]["kv_publish"]
+    assert fp8_pub["raw_bytes"] == raw_pub["raw_bytes"]
+    assert fp8_pub["wire_bytes"] < raw_pub["wire_bytes"]
+
+
+def test_cancel_in_transit_over_wire(model_and_params):
+    """A session cancelled while parked on the wire is CANCELed on the
+    remote, its quota released on both sides."""
+    m, params = model_and_params
+    quota = QuotaManager(default_quota=TenantQuota(max_pages=64))
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", quota=quota)
+    ss = [wire.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+          for i, p in enumerate(_prompts(3))]
+    # prefill + publish, but do not let decode adopt yet
+    wire.prefill.step()
+    ss[1].cancel()
+    wire.run()
+    assert ss[1].finish_reason == "cancelled"
+    assert ss[0].done and ss[2].done
+    assert quota.charged_uids() == ()
+
+
+# ---------------------------------------------------------------------------
+# satellite: quota release on mid-transfer failure
+class FlakyChannel(Channel):
+    """Fails the Nth send, transparently wrapping a real channel."""
+
+    def __init__(self, inner, fail_on: int):
+        self.inner = inner
+        self.fail_on = fail_on
+        self.sends = 0
+
+    def send(self, data: bytes) -> None:
+        self.sends += 1
+        if self.sends == self.fail_on:
+            raise TransportError("injected send failure")
+        self.inner.send(data)
+
+    def recv(self, n: int) -> bytes:
+        return self.inner.recv(n)
+
+    def close(self) -> None:
+        self.inner.close()
+
+    @property
+    def closed(self) -> bool:
+        return self.inner.closed
+
+    @property
+    def bytes_sent(self) -> int:
+        return self.inner.bytes_sent
+
+
+def test_publish_failure_releases_quota_and_requeues(model_and_params):
+    """Satellite: a transport send that dies mid-handoff must not leak
+    the per-uid page reservation — the session requeues, re-charges at
+    its next admission, and still finishes with the right stream."""
+    m, params = model_and_params
+    prompts = _prompts(3)
+    loop = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host")
+    want = _drive(loop, prompts)
+
+    quota = QuotaManager(default_quota=TenantQuota(max_pages=64))
+    tx, rx = memory_pair()
+    flaky = FlakyChannel(tx, fail_on=1)     # first handoff send dies
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", quota=quota, channels=(flaky, rx))
+    ss = [wire.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+          for i, p in enumerate(prompts)]
+    wire.prefill.step()                     # publish attempt: uid 0 fails
+    assert 0 not in quota.charged_uids(), \
+        "failed publish leaked its quota reservation"
+    wire.run()
+    assert [s.result() for s in ss] == want
+    assert quota.charged_uids() == ()
+    # the failure never double-registered or dropped the session
+    assert all(s.finish_reason == "length" for s in ss)
+
+
+def test_publish_failure_then_cancel_releases_quota(model_and_params):
+    """The other failure path: the requeued session is cancelled before
+    its retry — the ledger must still come back empty."""
+    m, params = model_and_params
+    quota = QuotaManager(default_quota=TenantQuota(max_pages=64))
+    tx, rx = memory_pair()
+    flaky = FlakyChannel(tx, fail_on=1)
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", quota=quota, channels=(flaky, rx))
+    sess = wire.submit(Request(uid=0, prompt=_prompts(1)[0],
+                               max_new_tokens=6))
+    wire.prefill.step()
+    sess.cancel()
+    wire.run()
+    assert sess.finish_reason == "cancelled"
+    assert quota.charged_uids() == ()
+
+
+# ---------------------------------------------------------------------------
+# in-process worker loop (the two-process CI smoke runs the CLI twin)
+def test_run_decode_worker_loop(model_and_params):
+    """Drive the worker main loop against a WirePrefill half in-process:
+    the exact topology of the two-process deployment, minus fork."""
+    import threading
+
+    from repro.serve.transport import build_wire_prefill
+
+    m, params = model_and_params
+    prompts = _prompts(4)
+    loop = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host")
+    want = _drive(loop, prompts)
+
+    tx, rx = memory_pair()
+    half = build_wire_prefill(m, params, tx, max_len=64, page_size=16)
+    worker = threading.Thread(
+        target=run_decode_worker,
+        args=(m, params, rx),
+        kwargs=dict(batch=2, max_len=64, page_size=16, spill="host",
+                    idle_sleep=0.001))
+    worker.start()
+    try:
+        ss = [half.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+              for i, p in enumerate(prompts)]
+        half.run()
+        assert [s.result() for s in ss] == want
+    finally:
+        half.close()
+        worker.join(timeout=60)
+    assert not worker.is_alive()
+
+
+def test_engine_submit_session_passthrough(model_and_params):
+    """Router contract: ``submit(session=)`` keeps the object, its seq,
+    and the Request.out_tokens alias."""
+    from repro.serve.session import Session
+
+    m, params = model_and_params
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16,
+                 spill="host")
+    req = Request(uid=7, prompt=_prompts(1)[0], max_new_tokens=3)
+    sess = Session(request=req, seq=42)
+    got = eng.submit(session=sess)
+    assert got is sess and got.seq == 42
+    eng.run()
+    assert sess.done and req.out_tokens is sess.tokens
+    assert len(req.out_tokens) == 3
