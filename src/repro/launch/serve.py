@@ -89,6 +89,12 @@ def main() -> None:
                          "smaller overcommits)")
     ap.add_argument("--page-codec", default=None,
                     help="default spill codec for cold pages (fp8/int8/...)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="share common prompt-prefix pages copy-on-write "
+                         "across sessions (paged cache only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="draw the first N prompt tokens from a common "
+                         "prefix so --prefix-share has something to hit")
     ap.add_argument("--tenant-quota", default=None,
                     help="per-tenant caps, e.g. 'pages=16,sessions=2' or "
                          "'a:pages=8;b:sessions=1,codec=int8'")
@@ -141,6 +147,10 @@ def main() -> None:
                  "--connect HOST:PORT for the two-process wire")
     if (args.role is not None or args.router) and not args.page_size:
         ap.error("--role/--router ship page-shaped KV: pass --page-size")
+    if args.prefix_share and not args.page_size:
+        ap.error("--prefix-share reuses whole pages: pass --page-size")
+    if args.prefix_share and (args.role is not None or args.router):
+        ap.error("--prefix-share is a colocated-engine feature for now")
     if args.listen is not None and args.batch is None:
         ap.error("--listen needs explicit --batch/--max-len (the remote "
                  "decode geometry cannot be negotiated over the wire)")
@@ -199,19 +209,27 @@ def main() -> None:
         eng = Engine(model, params, batch=args.batch, max_len=args.max_len,
                      temperature=args.temperature, scheduler=sched,
                      spill=args.spill, page_size=args.page_size,
-                     pages=args.pages, quota=quota)
+                     pages=args.pages, quota=quota,
+                     prefix_share=args.prefix_share)
     print(eng.describe())
     rng = np.random.default_rng(0)
+    shared_head = rng.integers(
+        0, cfg.vocab_size,
+        size=(max(0, args.shared_prefix),)).astype(np.int32)
     t0 = time.perf_counter()
     first_token_at = {}
     sessions = []
     for i in range(args.requests):
         deadline = (args.deadline_slack + (i + 1) * args.new_tokens
                     if args.deadline_slack is not None else None)
+        tail_len = max(1, args.prompt_len - len(shared_head))
+        prompt = np.concatenate([
+            shared_head,
+            rng.integers(0, cfg.vocab_size,
+                         size=(tail_len,)).astype(np.int32)])
         sessions.append(eng.submit(Request(
             uid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                size=(args.prompt_len,)).astype(np.int32),
+            prompt=prompt,
             max_new_tokens=args.new_tokens + i * args.stagger,
             priority=i % 3 if args.scheduler == "priority" else 0,
             tenant=f"t{i % max(1, args.tenants)}",
@@ -259,6 +277,11 @@ def main() -> None:
               f"{p['evictions']} evicted, {p['refetches']} refetched, "
               f"{p['readmits_free']} readmitted copy-free, "
               f"{p['adoptions']} adopted")
+    if report.get("prefix", {}).get("enabled"):
+        pf = report["prefix"]
+        print(f"prefix: {pf['hits']} page hits, {pf['forks']} forks, "
+              f"{pf['rows_reused']}/{pf['rows_prompted']} prompt rows "
+              f"reused (hit rate {pf['hit_rate']:.1%})")
     if quota is not None:
         print("tenants:", {t: u for t, u in eng.quota_report().items()})
     sched_obj = eng.decode.scheduler if args.role == "both" else eng.scheduler

@@ -197,13 +197,53 @@ def decode_attention(q, k_cache, v_cache, cache_index, *, window: int = 0,
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def prefix_prefill_attention(q, k_cache, v_cache, positions, *,
+                             window: int = 0,
+                             softcap: float = 0.0) -> jax.Array:
+    """Multi-token attention over a cache holding a reused prefix.
+
+    The suffix-prefill twin of :func:`decode_attention`: ``q`` holds the
+    S2 suffix tokens of a prompt whose first rows were grafted from the
+    prefix cache (prefix-sharing admission), the K/V caches hold the
+    grafted rows plus the just-written suffix rows, and each query at
+    absolute position ``positions[b, i]`` attends causally to cache rows
+    ``[0, positions[b, i]]`` — rows beyond are masked (stale frames).
+
+    q: (B, S2, H, hd); caches: (B, T, K, hd); positions: (B, S2) int32.
+    """
+    B, S2, H, hd = q.shape
+    T, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qq = q.reshape(B, S2, K, G, hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qq, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    t = jnp.arange(T)
+    # (B, 1, 1, S2, T): row t visible to query at absolute position p
+    # iff t <= p (and within the sliding window when one is set)
+    mask = t[None, None, None, None, :] <= \
+        positions[:, None, None, :, None]
+    if window > 0:
+        mask &= t[None, None, None, None, :] > \
+            positions[:, None, None, :, None] - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S2, H, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 def attention_block(params: dict, ctx: ModelContext, x: jax.Array,
                     positions: jax.Array, *, causal: bool = True,
                     cache: Optional[Cache] = None,
                     cache_index: Optional[jax.Array] = None,
                     kv_x: Optional[jax.Array] = None,
-                    use_rope: bool = True) -> Tuple[jax.Array, Optional[Cache]]:
+                    use_rope: bool = True,
+                    prefix_attend: bool = False
+                    ) -> Tuple[jax.Array, Optional[Cache]]:
     """Full attention sub-block: projections + rope + attend + output proj.
 
     kv_x: source of K/V for cross-attention (encoder states); when given with
@@ -252,9 +292,13 @@ def attention_block(params: dict, ctx: ModelContext, x: jax.Array,
     new_cache = cache
     if cache is not None:
         # self-attention with cache: decode (S==1) writes one slot; prefill
-        # writes the whole prefix.
+        # writes the whole prefix at 0 — except a prefix-sharing suffix
+        # prefill (prefix_attend), which writes the S suffix rows at
+        # cache_index and attends over the cache (grafted prefix rows
+        # included) instead of only the in-flight tokens.
         kc, vc = cache["k"], cache["v"]
-        idx = cache_index if (cache_index is not None and S == 1) else 0
+        idx = cache_index if (cache_index is not None
+                              and (S == 1 or prefix_attend)) else 0
         kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), idx, 1)
         vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), idx, 1)
         kc = ctx.act(kc, "batch", "seq", None, None)   # pooled KV (MC-DLA)
@@ -263,6 +307,9 @@ def attention_block(params: dict, ctx: ModelContext, x: jax.Array,
         if S == 1:
             o = decode_attention(q, kc, vc, cache_index, window=window,
                                  softcap=cfg.logit_softcap)
+        elif prefix_attend:
+            o = prefix_prefill_attention(q, kc, vc, positions, window=window,
+                                         softcap=cfg.logit_softcap)
         else:
             o = blockwise_attention(q, k, v, causal=causal, window=window,
                                     softcap=cfg.logit_softcap)

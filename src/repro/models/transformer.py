@@ -150,7 +150,8 @@ def run_sublayer(kind: str, params: dict, ctx: ModelContext, x: jax.Array,
                  positions: jax.Array, enc_out: Optional[jax.Array] = None,
                  cache: Optional[dict] = None,
                  cache_index: Optional[jax.Array] = None,
-                 causal: bool = True, use_rope: bool = True
+                 causal: bool = True, use_rope: bool = True,
+                 prefix_attend: bool = False
                  ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
     """Returns (x_out, aux_loss, new_cache)."""
     cfg = ctx.cfg
@@ -184,7 +185,8 @@ def run_sublayer(kind: str, params: dict, ctx: ModelContext, x: jax.Array,
     h = apply_norm(cfg, params["ln1"], x)
     a, new_cache = attention_block(
         params["attn"], ctx, h, positions, causal=causal, cache=cache,
-        cache_index=cache_index, use_rope=use_rope)
+        cache_index=cache_index, use_rope=use_rope,
+        prefix_attend=prefix_attend)
     # constrain TP-contraction outputs to the sequence-parallel layout at
     # the point of production: GSPMD then emits reduce-scatter (+ the
     # all-gather already inside the next layer's projections) instead of a
@@ -465,8 +467,14 @@ def forward_serve(params: Params, ctx: ModelContext, tokens: jax.Array,
                   cache_index: jax.Array,
                   frames: Optional[jax.Array] = None,
                   patches: Optional[jax.Array] = None,
-                  enc_out: Optional[jax.Array] = None
+                  enc_out: Optional[jax.Array] = None,
+                  prefix_attend: bool = False
                   ) -> Tuple[jax.Array, Params]:
+    """``prefix_attend=True`` (static) runs the prefix-sharing *suffix*
+    prefill: the S>1 tokens are the prompt's tail, written into the cache
+    at ``cache_index`` with attention over the cache rows (the grafted
+    shared-prefix pages included) instead of only the in-flight tokens —
+    see attention.prefix_prefill_attention."""
     cfg = ctx.cfg
     group, n_groups = arch_group(cfg)
     if cfg.is_encoder_decoder:
@@ -492,7 +500,8 @@ def forward_serve(params: Params, ctx: ModelContext, tokens: jax.Array,
             x, _, nc = run_sublayer(kind, p, ctx, x, positions,
                                     enc_out=enc_out, cache=c,
                                     cache_index=cache_index,
-                                    use_rope=use_rope)
+                                    use_rope=use_rope,
+                                    prefix_attend=prefix_attend)
             if nc is not None:
                 new_g[f"sub_{j}"] = nc
         return x, new_g

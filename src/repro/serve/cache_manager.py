@@ -51,10 +51,38 @@ from repro.core.tiers import TransferHints
 from repro.models import transformer as tfm
 from repro.serve.kv_cache import (DEFAULT_HBM_FRAC, DEFAULT_MAX_BATCH,
                                   DEFAULT_MAX_LEN, derive_cache_shape)
-from repro.serve.paging import PageError, PageTable
+from repro.serve.paging import PageError, PageTable, SharedPayload
 from repro.serve.session import Session, SessionState
 
 log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of matching a new prompt against the prefix index.
+
+    ``pids`` are fully-matched pages the admission binds **read-only**
+    (refcount bump, no copy, no prefill compute for their rows);
+    ``fork_pid`` is the donor frame whose first ``rows - len(pids) *
+    page_size`` rows match — it is **copied** into a private frame before
+    the prefill scatter (copy-on-write fork at the first divergent
+    token).  ``rows`` is the total prompt rows covered; the suffix
+    prefill starts there."""
+
+    pids: List[int]
+    fork_pid: Optional[int]
+    rows: int
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages bound read-only — the quota charge excludes these."""
+        return len(self.pids)
+
+    @property
+    def write_from(self) -> int:
+        """First page column the prefill scatter may write (the forked
+        page is private and writable; the shared ones route to scratch)."""
+        return len(self.pids)
 
 
 @dataclasses.dataclass
@@ -153,9 +181,22 @@ class KVCacheManager:
         budgets only bind in paged mode)."""
         return 0
 
-    def prepare_slot(self, slot: int, sess: Session, rows: int) -> None:
+    def match_prefix(self, prompt) -> Optional[PrefixMatch]:
+        """Hook: look the prompt up in the prefix index (paged manager
+        with ``prefix_share=True`` only).  Read-only — admission calls it
+        before the quota check so shared pages are not charged."""
+        return None
+
+    def note_prefilled(self, sess: Session, prompt,
+                       match: Optional[PrefixMatch] = None) -> None:
+        """Hook: an admission finished its prefill — register its full
+        prompt pages in the prefix index (paged manager only)."""
+
+    def prepare_slot(self, slot: int, sess: Session, rows: int,
+                     match: Optional[PrefixMatch] = None) -> None:
         """Hook: back ``rows`` cache rows for a fresh admission (paged:
-        allocate the prompt's pages before the prefill gather)."""
+        allocate the prompt's pages before the prefill gather, binding
+        ``match``'s shared pages read-only first)."""
 
     def abort_prepare(self, sess: Session) -> None:
         """Hook: undo a failed :meth:`prepare_slot` (paged: return the
@@ -297,6 +338,15 @@ class PagedKVCacheManager(KVCacheManager):
       ``core/compress.py`` registry (None: raw pages).  ``codec_kernel``
       routes the quantize/pack through the Pallas kernel twin
       (``kernels/offload_pack.py``) instead of the jnp reference.
+    * ``prefix_share=True`` turns on the radix prefix index: admission
+      matches a new prompt against cached prefixes page-by-page
+      (:meth:`match_prefix`), binds fully-matched pages read-only
+      (refcount bump in the :class:`~repro.serve.paging.PageTable`), and
+      forks — copies into a private frame — the page holding the first
+      divergent token.  Only models whose serving state is pure KV can
+      share (recurrent SSM/conv slot state is a running summary of the
+      whole prefix and cannot be grafted mid-sequence); the flag
+      self-disables otherwise.
     """
 
     paged = True
@@ -307,6 +357,7 @@ class PagedKVCacheManager(KVCacheManager):
                  pages: Optional[int] = None,
                  codec_for: Optional[Callable[[str], Optional[str]]] = None,
                  codec_kernel: bool = False,
+                 prefix_share: bool = False,
                  **kwargs):
         self.page_size = int(page_size)
         self._pages_override = pages
@@ -314,7 +365,26 @@ class PagedKVCacheManager(KVCacheManager):
         self.codec_kernel = codec_kernel
         self._sessions: Dict[int, Session] = {}       # uid -> owner
         self._codec_by_uid: Dict[int, Optional[str]] = {}
+        self.prefix_share = bool(prefix_share)
+        # radix index over page-sized token chunks: node maps a page's
+        # token tuple -> [pid, child_node]; a page's KV depends only on
+        # the token chain up to its last row (causal attention), so the
+        # chain IS the cache key
+        self._prefix_root: Dict[Tuple[int, ...], List[Any]] = {}
+        self._pid_nodes: Dict[int, Tuple[Dict, Tuple[int, ...]]] = {}
+        self.prefix_hits = 0           # pages bound read-only
+        self.prefix_forks = 0          # COW page copies
+        self.prefix_rows_reused = 0    # prompt rows skipped at prefill
+        self.prefix_rows_prompted = 0  # prompt rows seen (hit-rate denom)
         super().__init__(model, batch, max_len, **kwargs)
+        cfg = model.cfg
+        if self.prefix_share and (
+                self._has_slot_leaves or cfg.is_encoder_decoder
+                or getattr(cfg, "mrope_sections", None)):
+            log.warning("prefix sharing disabled: model carries recurrent "
+                        "slot state (or enc-dec/mrope positions) that "
+                        "cannot be grafted mid-sequence")
+            self.prefix_share = False
 
     def _init_storage(self) -> None:
         caches = self.model.init_cache(self.batch, self.max_len)
@@ -333,6 +403,9 @@ class PagedKVCacheManager(KVCacheManager):
                 lambda c: jnp.concatenate([c[:, :num], c[:, -1:]], axis=1),
                 self.pool)
         self.table = PageTable(num, self.page_size)
+        # frames die (evicted / freed) -> the prefix index must forget
+        # them before the frame id is reused for different contents
+        self.table.on_release = self._drop_prefix_pid
         self.scratch_id = num                     # pool holds num+1 frames
         self._pmap_cache = None
         self.report["num_pages"] = num
@@ -344,13 +417,115 @@ class PagedKVCacheManager(KVCacheManager):
         """Worst-case reservation: rows the session can ever occupy."""
         return self.table.pages_for(min(self.max_len, prompt_len + max_new))
 
-    def prepare_slot(self, slot: int, sess: Session, rows: int) -> None:
+    # ------------------------------------------------------------------
+    # prefix sharing: radix index over page-sized token chunks
+    def _drop_prefix_pid(self, pid: int) -> None:
+        entry = self._pid_nodes.pop(pid, None)
+        if entry is None:
+            return
+        parent, key = entry
+        child = parent.get(key)
+        if child is not None and child[0] == pid:
+            # drops the whole subtree with it: a child chain without its
+            # parent chain is unreachable by construction
+            del parent[key]
+
+    def match_prefix(self, prompt) -> Optional[PrefixMatch]:
+        """Walk the radix index page-by-page along the prompt.
+
+        Fully-matched pages are returned for read-only binding; at the
+        first divergence the best partially-matching sibling becomes the
+        COW fork donor.  At least one prompt token is always left to the
+        suffix prefill (its logits sample the first new token), so a
+        fully-cached prompt still matches only ``len(prompt) - 1``
+        rows.  Read-only: admission calls this *before* the quota check
+        (shared pages are not charged) and nothing mutates the table
+        between the match and :meth:`prepare_slot`."""
+        if not self.prefix_share:
+            return None
+        toks = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        ps = self.page_size
+        limit = len(toks) - 1
+        node = self._prefix_root
+        pids: List[int] = []
+        i = 0
+        while i + ps <= limit:
+            child = node.get(tuple(toks[i:i + ps]))
+            if child is None or not self.table.is_resident_pid(child[0]):
+                break
+            pids.append(child[0])
+            node = child[1]
+            i += ps
+        fork_pid, fork_rows = None, 0
+        for key, (pid, _child) in node.items():
+            if not self.table.is_resident_pid(pid):
+                continue
+            depth, cap = 0, min(len(key), limit - i)
+            while depth < cap and key[depth] == toks[i + depth]:
+                depth += 1
+            if depth > fork_rows:
+                fork_rows, fork_pid = depth, pid
+        if not pids and not fork_rows:
+            return None
+        if not fork_rows:
+            fork_pid = None
+        return PrefixMatch(pids=pids, fork_pid=fork_pid, rows=i + fork_rows)
+
+    def note_prefilled(self, sess: Session, prompt,
+                       match: Optional[PrefixMatch] = None) -> None:
+        """Register the admission's full prompt pages in the prefix index
+        (shared pages are already there under the donor's pid; a forked
+        page registers as a sibling chain) and tally the hit-rate."""
+        if not self.prefix_share:
+            return
+        toks = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        self.prefix_rows_prompted += len(toks)
+        if match is not None:
+            self.prefix_rows_reused += match.rows
+        ps = self.page_size
+        pids = self.table.resident_pids(sess.uid)
+        node = self._prefix_root
+        for p in range(len(toks) // ps):
+            key = tuple(toks[p * ps:(p + 1) * ps])
+            child = node.get(key)
+            if child is None:
+                pid = pids[p]
+                if pid is None:
+                    break
+                child = [pid, {}]
+                node[key] = child
+                self._pid_nodes[pid] = (node, key)
+            node = child[1]
+
+    def prepare_slot(self, slot: int, sess: Session, rows: int,
+                     match: Optional[PrefixMatch] = None) -> None:
         """Back the prompt's rows with pages before the prefill gather.
 
-        Raises :class:`~repro.serve.paging.PageError` when the pool cannot
-        cover them (every page hot) — the Engine then defers admission."""
+        With a prefix ``match``: the fully-matched pages bind read-only
+        (refcount bump, logical positions 0..n-1), the fork donor — if
+        any — is copied into a fresh private frame (copy-on-write,
+        *before* the prefill scatter ever runs), and only the remaining
+        positions allocate fresh frames.  Raises
+        :class:`~repro.serve.paging.PageError` when the pool cannot
+        cover them (every page hot) — the Engine then aborts (undoing
+        the shared binds) and defers admission."""
         self._sessions[sess.uid] = sess
         self._codec_by_uid[sess.uid] = self.codec_for(sess.tenant)
+        if match is not None:
+            for pid in match.pids:
+                self.table.share(sess.uid, pid)
+            if match.fork_pid is not None:
+                new_pid = self.table.alloc(sess.uid, self._evict_cb)
+                # COW fork: the donor's rows up to the divergence are
+                # valid as-is; the suffix prefill overwrites the tail.
+                # (If the alloc just evicted the donor itself, the frame
+                # still holds the donor's bytes — the copy is the
+                # identity and stays correct.)
+                self.pool = tfm.page_insert(
+                    self.pool, tfm.page_slice(self.pool, match.fork_pid),
+                    new_pid)
+                self.prefix_forks += 1
+            self.prefix_hits += len(match.pids)
         self.table.ensure(sess.uid, rows, self._evict_cb)
 
     def abort_prepare(self, sess: Session) -> None:
@@ -427,6 +602,10 @@ class PagedKVCacheManager(KVCacheManager):
         return _SpilledPage(treedef, items, codec_name)
 
     def _unstash_page(self, entry: _SpilledPage):
+        """Fetch + decode a spilled page, all-or-nothing: the stashed
+        payloads are only discarded after EVERY leaf fetched and decoded,
+        so a mid-tree failure leaves the payload intact and the caller
+        can re-park the position for a later retry."""
         codec = get_codec(entry.codec) if entry.codec else None
         interpret = jax.default_backend() != "tpu"
         leaves = []
@@ -440,6 +619,7 @@ class PagedKVCacheManager(KVCacheManager):
                                   kernel=self.codec_kernel,
                                   interpret=interpret)
             leaves.append(q)
+        for payload, _, _ in entry.items:
             self._discard(payload)
         return jax.tree_util.tree_unflatten(entry.treedef, leaves)
 
@@ -461,17 +641,31 @@ class PagedKVCacheManager(KVCacheManager):
 
     def resume(self, sess: Session, slot: int) -> None:
         """Re-bind a paused session: surviving pages readmit copy-free,
-        evicted ones are fetched (and decoded) into fresh frames."""
+        evicted ones are fetched (and decoded) into fresh frames.  A
+        page evicted while *shared* carries one payload for all holders:
+        the single fetch re-homes every holder onto the fresh frame."""
         uid = sess.uid
         self.table.mark_hot(uid)
         try:
-            for pos, entry in enumerate(self.table.entries(uid)):
-                if entry.resident:
-                    continue
-                parked = entry.payload
+            while True:
+                spilled = self.table.spilled_positions(uid)
+                if not spilled:
+                    break
+                pos = spilled[0]
+                parked = self.table.entries(uid)[pos].payload
+                inner = parked.payload \
+                    if isinstance(parked, SharedPayload) else parked
                 pid = self.table.set_resident(uid, pos, self._evict_cb)
-                self.pool = tfm.page_insert(self.pool,
-                                            self._unstash_page(parked), pid)
+                try:
+                    page = self._unstash_page(inner)
+                except Exception:
+                    # the fetch failed AFTER the position went resident:
+                    # roll it back to spilled over the (still intact)
+                    # payload — leaving it resident would park garbage
+                    # in the pool and a later resume would serve it
+                    self.table.unset_resident(uid, pos, parked)
+                    raise
+                self.pool = tfm.page_insert(self.pool, page, pid)
         except Exception:
             # pool too hot to re-home every page: stay paused, pages
             # return to the eviction queue, the Engine retries later
@@ -547,6 +741,17 @@ class PagedKVCacheManager(KVCacheManager):
             "refetches": self.table.refetches,
             "readmits_free": self.table.readmits_free,
             "adoptions": self.table.adoptions,
+            "shared_binds": self.table.shared_binds,
+        }
+        prompted = self.prefix_rows_prompted
+        report["prefix"] = {
+            "enabled": self.prefix_share,
+            "hits": self.prefix_hits,
+            "forks": self.prefix_forks,
+            "rows_reused": self.prefix_rows_reused,
+            "rows_prompted": prompted,
+            "hit_rate": (self.prefix_rows_reused / prompted
+                         if prompted else 0.0),
         }
         return report
 

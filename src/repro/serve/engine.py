@@ -115,6 +115,7 @@ class Engine:
                               Dict[str, TenantQuota], None] = None,
                  role: str = "both",
                  transfer: Optional[Any] = None,
+                 prefix_share: bool = False,
                  **cache_kwargs):
         if role not in ("both", "prefill", "decode"):
             raise ValueError(f"role must be both/prefill/decode: {role!r}")
@@ -148,7 +149,8 @@ class Engine:
             self.cache: KVCacheManager = PagedKVCacheManager(
                 model, batch, max_len, spill=spill, page_size=page_size,
                 pages=pages, codec_for=codec_for,
-                codec_kernel=codec_kernel, **cache_kwargs)
+                codec_kernel=codec_kernel, prefix_share=prefix_share,
+                **cache_kwargs)
         else:
             # the prefill role computes in plain contiguous slots (no pool
             # indirection on its hot path); page_size only shapes the
@@ -245,10 +247,43 @@ class Engine:
                                      new_slot)
             return logits[0], pool, slot_tree
 
+        def prefill_paged_shared(params, pool, slot_tree, page_map, tokens,
+                                 positions, slot, mask, cache_index,
+                                 write_from):
+            """Suffix prefill for a prefix-sharing admission: rows below
+            ``cache_index`` were grafted from shared (or forked) pages and
+            are NOT recomputed — the tokens here are the prompt's tail,
+            written at ``cache_index`` and attending over the gathered
+            cache rows.  The scatter routes page columns below
+            ``write_from`` (the read-only shared pages) to scratch:
+            writers never touch a shared frame."""
+            ctx = model.ctx("prefill")
+            view = tfm.gather_pages(pool, slot_tree, page_map)
+            # slot_cache, not fresh_slot: the grafted prefix rows must be
+            # readable; rows past the suffix stay masked by position (the
+            # prefix gate in the cache manager guarantees there is no
+            # recurrent slot state to leak)
+            one = tfm.slot_cache(view, slot)
+            h, new_one = tfm.forward_serve(
+                params, ctx, tokens, positions, one,
+                cache_index=cache_index, prefix_attend=True)
+            logits = tfm.unembed(params, ctx, h[:, -1:, :])[:, 0, :]
+            view = tfm.merge_slot_cache(view, new_one, slot)
+            cols = jnp.arange(page_map.shape[1], dtype=jnp.int32)
+            writable = mask[:, None] & (cols[None, :] >= write_from)
+            eff = jnp.where(writable, page_map, scratch)
+            pool = tfm.scatter_pages(pool, view, eff)
+            _, new_slot = tfm.split_paged(view)
+            slot_tree = jax.tree.map(_masked_merge(mask), slot_tree,
+                                     new_slot)
+            return logits[0], pool, slot_tree
+
         # donate the pool/slot storage: the scatter then updates the page
         # frames in place instead of copying the whole pool every step
         self._decode_paged = jax.jit(decode_paged, donate_argnums=(1, 2))
         self._prefill_paged = jax.jit(prefill_paged, donate_argnums=(1, 2))
+        self._prefill_paged_shared = jax.jit(prefill_paged_shared,
+                                             donate_argnums=(1, 2))
 
     # ------------------------------------------------------------------
     def submit(self, req: Optional[Request] = None, on_token=None,
@@ -466,39 +501,64 @@ class Engine:
                 continue
             pages_needed = self._session_pages(
                 len(prompt), sess.request.max_new_tokens)
+            # prefix-sharing: match BEFORE the quota gate — pages bound
+            # read-only from the prefix cache are pooled capacity another
+            # session already paid for, so the tenant is charged only the
+            # private remainder (always >= 1: the suffix prefill needs at
+            # least one writable page)
+            match = self.cache.match_prefix(prompt)
+            charge_pages = pages_needed - (match.shared_pages
+                                           if match is not None else 0)
             if self.quota is not None:
-                if not self.quota.admissible(sess.tenant, pages_needed):
+                if not self.quota.admissible(sess.tenant, charge_pages):
                     log.warning("req %d: demand (%d pages) can never fit "
                                 "tenant %r quota — rejected",
-                                sess.uid, pages_needed, sess.tenant)
+                                sess.uid, charge_pages, sess.tenant)
                     self._retire(sess, FINISH_QUOTA)
                     continue
-                if not self.quota.can_admit(sess.tenant, pages_needed):
+                if not self.quota.can_admit(sess.tenant, charge_pages):
                     deferred.append(sess)
                     continue
             try:
-                self.cache.prepare_slot(slot, sess, max(1, len(prompt)))
+                self.cache.prepare_slot(slot, sess, max(1, len(prompt)),
+                                        match=match)
             except PageError:
                 self.cache.abort_prepare(sess)
                 deferred.append(sess)
                 break                   # pool too hot; retry next step
             if self.quota is not None:
-                self.quota.charge(sess.uid, sess.tenant, pages_needed)
+                self.quota.charge(sess.uid, sess.tenant, charge_pages)
             toks = jnp.asarray(prompt, jnp.int32)[None, :]
             S = toks.shape[1]
-            pos = self._positions(S, 0, 1)
             if self.cache.paged:
                 hot = np.zeros((self.batch,), bool)
                 hot[slot] = True
                 pm = jnp.asarray(self.cache.page_map_for(slot, sess))
-                logits, self.cache.pool, self.cache.slot_tree = \
-                    self._prefill_paged(
-                        self.params, self.cache.pool, self.cache.slot_tree,
-                        pm, toks, pos, slot, jnp.asarray(hot))
+                if match is not None:
+                    # suffix prefill: matched rows are already in the
+                    # page map (shared read-only + the forked copy) —
+                    # compute only the tail
+                    spos = self._positions(S - match.rows, match.rows, 1)
+                    logits, self.cache.pool, self.cache.slot_tree = \
+                        self._prefill_paged_shared(
+                            self.params, self.cache.pool,
+                            self.cache.slot_tree, pm,
+                            toks[:, match.rows:], spos, slot,
+                            jnp.asarray(hot), jnp.int32(match.rows),
+                            jnp.int32(match.write_from))
+                else:
+                    pos = self._positions(S, 0, 1)
+                    logits, self.cache.pool, self.cache.slot_tree = \
+                        self._prefill_paged(
+                            self.params, self.cache.pool,
+                            self.cache.slot_tree, pm, toks, pos, slot,
+                            jnp.asarray(hot))
             else:
+                pos = self._positions(S, 0, 1)
                 logits, self.cache.caches = self._prefill(
                     self.params, self.cache.caches, toks, pos, slot)
             self.cache.bind(slot, sess, S)
+            self.cache.note_prefilled(sess, prompt, match)
             nxt = self._sample(logits)
             sess.emit(nxt)
             if nxt == sess.request.eos_id:

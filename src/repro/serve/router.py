@@ -100,15 +100,24 @@ class LeastLoaded(PlacementPolicy):
 
 
 class RoundRobin(PlacementPolicy):
+    """Rotate by engine *identity*, not list position: when an engine
+    drains or is lost the placeable list shrinks, and a positional
+    ``turn % len(views)`` cursor would shift onto whichever engine
+    happens to inherit the vacated slot — double-placing on it while
+    skipping another.  Remembering the last-placed engine index and
+    advancing to the next-larger live index keeps the rotation fair
+    across membership changes."""
+
     name = "round_robin"
 
     def __init__(self):
-        self._turn = 0
+        self._last = -1                 # engine index placed last
 
     def choose(self, views: List[EngineView], sess: Session) -> int:
-        view = views[self._turn % len(views)]
-        self._turn += 1
-        return view.index
+        order = sorted(v.index for v in views)
+        nxt = next((i for i in order if i > self._last), order[0])
+        self._last = nxt
+        return nxt
 
 
 class PrefixAffinity(PlacementPolicy):

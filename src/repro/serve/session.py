@@ -52,6 +52,7 @@ class Session:
     length: int = 0                    # tokens currently cached (slot/spill)
     steps_since_admit: int = 0         # preemption quantum bookkeeping
     preemptions: int = 0               # times this session was paused
+    emitted: int = 0                   # high-water mark of on_token notifies
 
     def __post_init__(self):
         # alias the legacy output list: one list, two names
@@ -94,10 +95,17 @@ class Session:
 
     # ------------------------------------------------------------------
     def emit(self, token: int) -> None:
-        """Append one generated token to the stream (and notify)."""
+        """Append one generated token to the stream (and notify).
+
+        ``on_token`` fires only for stream positions not yet notified:
+        when a failed handoff rewinds ``tokens`` and the session is
+        replayed, re-generated positions are appended silently instead
+        of streaming the same token to the client twice.
+        """
         self.tokens.append(token)
         self.steps_since_admit += 1
-        if self.on_token is not None:
+        if self.on_token is not None and len(self.tokens) > self.emitted:
+            self.emitted = len(self.tokens)
             self.on_token(self, token)
 
     def finish(self, reason: str) -> None:

@@ -102,6 +102,35 @@ def test_disagg_streams_with_staggered_retires(model_and_params):
     assert all(s.finish_reason == "length" for s in ss)
 
 
+def test_publish_retry_does_not_duplicate_first_token(model_and_params):
+    """Bugfix: a TransportError mid-publish requeues the session for a
+    fresh prefill, which re-samples and re-emits the first token — the
+    client-facing on_token stream used to see it twice."""
+    from repro.serve.transport import TransportError
+    m, params = model_and_params
+    prompt = _prompts(1)[0]
+    want = _solo(m, params, prompt, 5)
+    pair = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host")
+    real_publish = pair.transfer.publish
+    state = {"failed": False}
+
+    def fail_once(*args, **kw):
+        if not state["failed"]:
+            state["failed"] = True
+            raise TransportError("wire dropped mid-frame")
+        return real_publish(*args, **kw)
+
+    pair.transfer.publish = fail_once
+    streamed = []
+    s = pair.submit(Request(uid=0, prompt=prompt, max_new_tokens=5),
+                    on_token=lambda sess, tok: streamed.append(tok))
+    pair.run()
+    assert state["failed"]                  # the wire really dropped once
+    assert s.result() == want
+    assert streamed == want                 # first token streamed ONCE
+
+
 def test_disagg_transfer_bytes_metered(model_and_params):
     """Acceptance: transferred bytes == page bytes x shipped pages, on
     both legs (publish and adopt), with no page lost or duplicated."""

@@ -19,7 +19,7 @@ from repro.configs.base import ShapeConfig
 from repro.models import transformer as tfm
 from repro.models.model import build_model
 from repro.serve.engine import Engine, Request
-from repro.serve.paging import PageError, PageTable
+from repro.serve.paging import PageError, PageTable, SharedPayload
 from repro.serve.quota import (QuotaManager, TenantQuota, parse_quota_spec)
 from repro.serve.scheduler import FairScheduler, build_scheduler
 from repro.serve.session import Session
@@ -102,20 +102,34 @@ def run_table_trace(ops, num_pages=6, page_size=4):
     """Drive a PageTable through (op, sid) steps with a fake spill ledger.
 
     Model: sessions own rows; 'pause' marks cold, 'resume' re-homes
-    spilled positions, 'free' retires.  After every step the table's
+    spilled positions, 'free' retires, 'share' binds another session's
+    resident page read-only (prefix-cache hit) and 'fork' models the
+    copy-on-write divergence: a share immediately followed by a private
+    allocation for the diverging tail.  After every step the table's
     internal invariants are checked and the spill ledger is cross-checked:
     a page fetched on resume must return exactly the payload its eviction
-    stored, and metered transfers must equal the table's counters.
+    stored (for a shared page: the ONE payload every holder references),
+    and metered transfers must equal the table's counters.
     """
     t = PageTable(num_pages=num_pages, page_size=page_size)
-    ledger = {}                             # (sid, pos) -> payload
+    ledger = set()                          # outstanding spill payloads
     stashes, fetches = [], []
 
     def evict_cb(sid, pos, pid):
-        payload = ("page", sid, pos, pid)
-        ledger[(sid, pos)] = payload
+        payload = ("page", sid, pos, pid, len(stashes))
+        ledger.add(payload)
         stashes.append(payload)
         return payload
+
+    def share_donor(sid):
+        """A resident pid of some other session that sid doesn't hold."""
+        for other in t.sessions():
+            if other == sid:
+                continue
+            for pid in t.resident_pids(other):
+                if pid is not None and pid not in t.resident_pids(sid):
+                    return pid
+        return None
 
     state = {}                              # sid -> "live" | "paused"
     for op, sid in ops:
@@ -125,19 +139,36 @@ def run_table_trace(ops, num_pages=6, page_size=4):
                 t.ensure(sid, rows, evict_cb)
             except PageError:
                 pass                        # all hot: legal, nothing changed
+        elif op in ("share", "fork") and state.get(sid) != "paused":
+            pid = share_donor(sid)
+            if pid is not None:
+                t.share(sid, pid)
+                state[sid] = "live"
+                if op == "fork":            # diverging tail: private page
+                    try:
+                        t.alloc(sid, evict_cb)
+                    except PageError:
+                        pass
         elif op == "pause" and state.get(sid) == "live":
             t.mark_cold(sid)
             state[sid] = "paused"
         elif op == "resume" and state.get(sid) == "paused":
             t.mark_hot(sid)
             try:
-                for pos in t.spilled_positions(sid):
-                    want = ledger[(sid, pos)]
-                    entry = t.entries(sid)[pos]
-                    assert entry.payload == want, "payload mixed up"
+                while True:
+                    # re-computed each round: refetching a shared page
+                    # re-homes OTHER holders' positions in the same call
+                    spilled = t.spilled_positions(sid)
+                    if not spilled:
+                        break
+                    pos = spilled[0]
+                    parked = t.entries(sid)[pos].payload
+                    inner = parked.payload \
+                        if isinstance(parked, SharedPayload) else parked
+                    assert inner in ledger, "payload mixed up"
                     t.set_resident(sid, pos, evict_cb)
-                    ledger.pop((sid, pos))
-                    fetches.append(want)
+                    ledger.discard(inner)
+                    fetches.append(inner)
                 t.note_resumed(sid)
                 state[sid] = "live"
             except PageError:
@@ -145,7 +176,8 @@ def run_table_trace(ops, num_pages=6, page_size=4):
                 state[sid] = "paused"
         elif op == "free" and sid in state:
             for payload in t.free_session(sid):
-                ledger.pop((payload[1], payload[2]))
+                assert payload in ledger, "orphaned payload unknown"
+                ledger.discard(payload)
             state.pop(sid)
         elif op == "new" and sid not in state:
             try:
@@ -171,6 +203,169 @@ def test_page_table_random_traces_seeded():
             t.free_session(sid)
             t.check()
         assert t.num_free() == t.num_pages  # whole pool recovered
+
+
+def test_page_table_random_shared_traces_seeded():
+    """Same recovery invariant with prefix sharing in the op mix: shared
+    holds, forks, shared evictions/refetches — still no leaked frames."""
+    rng = random.Random(99)
+    shared_seen = 0
+    for _ in range(25):
+        ops = [(rng.choice(["new", "grow", "pause", "resume", "free",
+                            "share", "fork"]),
+                rng.randrange(5)) for _ in range(120)]
+        t, state = run_table_trace(ops)
+        shared_seen += t.shared_binds
+        for sid in list(state):
+            t.free_session(sid)
+            t.check()
+        assert t.num_free() == t.num_pages
+    assert shared_seen > 0                  # the mix actually shared
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: refcounted pages, COW bookkeeping
+def test_share_refcounts_and_last_holder_frees():
+    t = PageTable(num_pages=4, page_size=4)
+    pid = t.alloc(1)
+    assert t.refcount(pid) == 1 and t.num_shared() == 0
+    assert t.share(2, pid) == 0             # bound at 2's position 0
+    assert t.share(3, pid) == 0
+    assert t.refcount(pid) == 3 and t.num_shared() == 1
+    assert t.shared_binds == 2
+    t.check()
+    t.free_session(1)                       # two holders survive
+    assert t.refcount(pid) == 2 and t.num_free() == 3
+    t.free_session(2)
+    assert t.refcount(pid) == 1 and t.num_shared() == 0
+    t.free_session(3)                       # last holder out: frame returns
+    assert t.num_free() == 4
+    t.check()
+
+
+def test_share_requires_resident_page():
+    t = PageTable(num_pages=2, page_size=4)
+    with pytest.raises(PageError):
+        t.share(1, 0)                       # nobody owns page 0 yet
+    pid = t.alloc(1)
+    with pytest.raises(ValueError):
+        t.share(1, pid)                     # self-share would alias
+    t.share(2, pid)
+    with pytest.raises(ValueError):
+        t.share(2, pid)                     # double bind would alias
+    t.check()
+
+
+def test_shared_page_evictable_only_when_all_holders_pause():
+    t = PageTable(num_pages=2, page_size=4)
+    pid = t.alloc(1)
+    t.share(2, pid)
+    t.alloc(3)
+    t.mark_cold(1)                          # holder 2 still hot
+    assert t.num_cold() == 0
+    with pytest.raises(PageError):
+        t.alloc(4, evict=lambda *a: "p")    # nothing evictable
+    t.mark_cold(2)
+    assert t.num_cold() == 1                # now every holder is paused
+    log = []
+    t.alloc(4, evict=lambda sid, pos, vpid: log.append((sid, pos, vpid))
+            or "spilled-bytes")
+    assert len(log) == 1                    # ONE stash for both holders
+    assert t.evictions == 1
+    # both holders' entries reference the one SharedPayload
+    p1, p2 = t.entries(1)[0].payload, t.entries(2)[0].payload
+    assert isinstance(p1, SharedPayload) and p1 is p2
+    assert p1.payload == "spilled-bytes"
+    assert sorted(p1.holders) == [(1, 0), (2, 0)]
+    t.check()
+
+
+def test_shared_refetch_rehomes_every_holder():
+    t = PageTable(num_pages=2, page_size=4)
+    pid = t.alloc(1)
+    t.share(2, pid)
+    t.alloc(3)
+    t.mark_cold(1), t.mark_cold(2)
+    t.alloc(4, evict=lambda *a: "bytes")    # shared page spilled once
+    t.free_session(3), t.free_session(4)
+    t.mark_hot(1)
+    new = t.set_resident(1, 0)              # ONE fetch...
+    assert t.refetches == 1
+    assert t.resident_pids(1) == [new]
+    assert t.resident_pids(2) == [new]      # ...re-homed holder 2 too
+    assert t.refcount(new) == 2
+    # holder 2 is still paused; the frame is pinned by hot holder 1
+    assert t.num_cold() == 0
+    t.mark_hot(2)
+    assert t.spilled_positions(2) == []     # nothing left to fetch
+    t.check()
+    # the shared spill payload was consumed: frees orphan nothing
+    assert t.free_session(1) == [] and t.free_session(2) == []
+    assert t.num_free() == t.num_pages
+
+
+def test_shared_payload_discarded_only_by_last_holder():
+    t = PageTable(num_pages=2, page_size=4)
+    pid = t.alloc(1)
+    t.share(2, pid)
+    t.alloc(3)
+    t.mark_cold(1), t.mark_cold(2)
+    t.alloc(4, evict=lambda *a: "bytes")
+    assert t.free_session(1) == []          # payload still referenced by 2
+    assert t.free_session(2) == ["bytes"]   # last holder surrenders it
+    t.check()
+
+
+def test_set_resident_on_resident_position_raises():
+    t = PageTable(num_pages=2, page_size=4)
+    t.alloc(1)
+    with pytest.raises(ValueError):
+        t.set_resident(1, 0)
+
+
+def test_free_session_double_free_guard_raises():
+    t = PageTable(num_pages=2, page_size=4)
+    pid = t.alloc(1)
+    t._free.append(pid)                     # corrupt: frame freed underfoot
+    with pytest.raises(ValueError):
+        t.free_session(1)
+
+
+def test_claim_alias_guard_raises_value_error():
+    t = PageTable(num_pages=4, page_size=4)
+    t.alloc(7)
+    with pytest.raises(ValueError):         # not an assert: survives -O
+        t.claim(7, 1)
+
+
+def test_unset_resident_rolls_back_failed_fetch():
+    """Bugfix: when the spill-tier fetch dies after set_resident handed
+    out a frame, the rollback must return the frame and re-park the
+    position over the SAME payload so a retry can still fetch it."""
+    t = PageTable(num_pages=1, page_size=4)
+    t.alloc(1)
+    t.mark_cold(1)
+    t.alloc(2, evict=lambda *a: "bytes")    # 1's page spilled
+    t.free_session(2)
+    t.mark_hot(1)
+    pid = t.set_resident(1, 0)
+    assert t.refetches == 1
+    t.unset_resident(1, 0, "bytes")         # fetch failed: roll back
+    assert t.refetches == 0                 # metering undone
+    assert t.spilled_positions(1) == [0]
+    assert t.entries(1)[0].payload == "bytes"
+    t.check()
+    assert t.set_resident(1, 0) is not None  # retry succeeds
+    t.check()
+
+
+def test_unset_resident_rejects_spilled_position():
+    t = PageTable(num_pages=1, page_size=4)
+    t.alloc(1)
+    t.mark_cold(1)
+    t.alloc(2, evict=lambda *a: "bytes")    # 1's only page spilled
+    with pytest.raises(ValueError):         # nothing to roll back
+        t.unset_resident(1, 0, "bytes")
 
 
 def run_scheduler_trace(name, ops, slots=2, **kwargs):
@@ -664,6 +859,188 @@ def test_failed_resume_does_not_inflate_readmit_count(model_and_params):
     assert mgr.table.readmits_free == before + 1    # one true readmit
     assert mgr.table.refetches == 1
     mgr.table.check()
+
+
+def test_failed_fetch_mid_resume_reparks_position(model_and_params):
+    """Bugfix: a spill-tier fetch dying AFTER set_resident handed out a
+    frame used to leave the position resident over an unfilled frame —
+    the rolled-back position must stay spilled (same payload) and a
+    retry with a healed tier must succeed."""
+    m, params = model_and_params
+    from repro.serve.cache_manager import PagedKVCacheManager
+    mgr = PagedKVCacheManager(m, 2, 32, page_size=16, pages=3,
+                              spill="spill")
+    mk = lambda uid: Session(request=Request(
+        uid=uid, prompt=np.zeros(2, np.int32)), seq=uid)
+    a, b = mk(0), mk(1)
+    mgr.prepare_slot(0, a, rows=32)         # a: 2 pages
+    mgr.bind(0, a, 32)
+    mgr.pause(a)
+    mgr.prepare_slot(1, b, rows=32)         # free page + evict one of a's
+    mgr.bind(1, b, 32)
+    assert mgr.table.spilled_positions(0) == [0]
+    mgr.release(b)
+    real_fetch = mgr.spill_runtime.fetch
+    calls = {"n": 0}
+
+    def flaky_fetch(*args, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:                 # die mid-tree (leaf 2 of N)
+            raise RuntimeError("spill tier glitch")
+        return real_fetch(*args, **kw)
+
+    mgr.spill_runtime.fetch = flaky_fetch
+    with pytest.raises(RuntimeError):
+        mgr.resume(a, 0)
+    # rolled back: still spilled over the intact payload, fetch un-metered
+    assert mgr.table.spilled_positions(0) == [0]
+    assert mgr.table.refetches == 0
+    assert mgr.table.entries(0)[0].payload is not None
+    mgr.table.check()
+    mgr.spill_runtime.fetch = real_fetch    # tier heals: retry works
+    mgr.resume(a, 0)
+    assert mgr.table.spilled_positions(0) == []
+    assert mgr.table.refetches == 1
+    mgr.table.check()
+
+
+@pytest.mark.parametrize("codec", [None, "fp8", "int8"])
+def test_shared_page_spill_refetch_roundtrip_codecs(model_and_params, codec):
+    """A SHARED page through the real spill tier, per codec: evicted once
+    (one stash funds every holder), refetched once (re-homing all of
+    them), and the bytes that come back are the codec's round-trip of the
+    frame that left — table invariants checked after every step.  (The
+    hypothesis suite drives the same share/fork machinery through random
+    traces; this pins the array/codec surgery deterministically.)"""
+    from repro.core.compress import decode_tensor, encode_tensor, get_codec
+    from repro.serve.cache_manager import PagedKVCacheManager
+    m, _ = model_and_params
+    mgr = PagedKVCacheManager(m, 2, 32, page_size=16, pages=3,
+                              spill="spill",
+                              codec_for=lambda tenant: codec)
+    mk = lambda uid: Session(request=Request(
+        uid=uid, prompt=np.zeros(2, np.int32)), seq=uid)
+    a, b, c = mk(0), mk(1), mk(2)
+    mgr.prepare_slot(0, a, rows=16)         # a: one private page
+    mgr.bind(0, a, 16)
+    pid = mgr.table.resident_pids(0)[0]
+    # fill the frame with deterministic non-trivial bytes
+    proto = tfm.page_slice(mgr.pool, pid)
+    filled = jax.tree_util.tree_map(
+        lambda x: (jnp.arange(x.size, dtype=jnp.float32)
+                   .reshape(x.shape) % 7 - 3).astype(x.dtype), proto)
+    mgr.pool = tfm.page_insert(mgr.pool, filled, pid)
+    # b shares the page read-only (what prepare_slot does on a hit)
+    mgr._sessions[1] = b
+    mgr._codec_by_uid[1] = codec
+    mgr.table.share(1, pid)
+    assert mgr.table.refcount(pid) == 2
+    mgr.table.check()
+    mgr.pause(a)                            # a paused...
+    mgr.table.mark_cold(1)                  # ...and so is sharer b
+    mgr.table.check()
+    stash_before = mgr.spill_runtime.traffic_report().get(
+        "kv_stash", {"calls": 0})["calls"]
+    mgr.prepare_slot(1, c, rows=48)         # 2 free frames + evict shared
+    mgr.bind(1, c, 48)
+    assert mgr.table.evictions == 1         # ONE spill for both holders
+    from repro.serve.paging import SharedPayload as SP
+    parked = mgr.table.entries(0)[0].payload
+    assert isinstance(parked, SP)
+    assert mgr.table.entries(1)[0].payload is parked
+    n_leaves = len(jax.tree_util.tree_leaves(proto))
+    stash_calls = mgr.spill_runtime.traffic_report()["kv_stash"]["calls"]
+    assert stash_calls - stash_before == n_leaves   # one page's leaves
+    mgr.table.check()
+    mgr.release(c)                          # room to come back
+    mgr.resume(a, 0)                        # ONE fetch re-homes b too
+    assert mgr.table.refetches == 1
+    new_pid = mgr.table.resident_pids(0)[0]
+    assert mgr.table.resident_pids(1) == [new_pid]
+    assert mgr.table.refcount(new_pid) == 2
+    mgr.table.check()
+    # bytes round-trip: exactly the codec's encode->decode of what left
+    got = tfm.page_slice(mgr.pool, new_pid)
+    cdc = get_codec(codec) if codec else None
+    for want_leaf, got_leaf in zip(jax.tree_util.tree_leaves(filled),
+                                   jax.tree_util.tree_leaves(got)):
+        if cdc is not None and cdc.applies_to(want_leaf):
+            q, scale = encode_tensor(cdc, want_leaf, interpret=True)
+            want_leaf = decode_tensor(cdc, q, scale, want_leaf.dtype,
+                                      interpret=True)
+        np.testing.assert_array_equal(np.asarray(want_leaf),
+                                      np.asarray(got_leaf))
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing through the real engine
+def _shared_prefix_prompts(n=4, head_len=20, tail_len=12):
+    # head crosses one full page (rows 0-15) and diverges INSIDE the
+    # second registered page (row 20 of 16..31): hits page 0, forks page 1
+    head = (np.arange(head_len, dtype=np.int32) * 3 + 5) % CFG.vocab_size
+    return [np.concatenate([
+        head, (np.arange(tail_len, dtype=np.int32) * (i + 2) + i)
+        % CFG.vocab_size]).astype(np.int32) for i in range(n)]
+
+
+def test_prefix_share_streams_identical_and_hit(model_and_params):
+    """Acceptance: --prefix-share is a pure storage optimisation — the
+    streams match the sharing-off and unpaged runs bit-for-bit while the
+    prefix cache actually hits (shared binds + forks observed)."""
+    m, params = model_and_params
+    prompts = _shared_prefix_prompts()
+    want = [_solo(m, params, p, 6) for p in prompts]
+
+    def drive(**kw):
+        eng = Engine(m, params, batch=2, max_len=64, spill="host", **kw)
+        ss = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+              for i, p in enumerate(prompts)]
+        eng.run()
+        return eng, [s.result() for s in ss]
+
+    _, base = drive(page_size=16)
+    eng, got = drive(page_size=16, prefix_share=True)
+    assert got == want and base == want
+    rep = eng.traffic_report()["prefix"]
+    assert rep["enabled"] and rep["hits"] > 0 and rep["forks"] > 0
+    assert rep["hit_rate"] > 0
+    assert eng.cache.table.shared_binds > 0
+    eng.cache.table.check()
+
+
+def test_prefix_share_identical_under_eviction_pressure(model_and_params):
+    """Shared pages spilling once and re-homing on refetch must not
+    perturb the streams even when the overcommitted pool thrashes."""
+    m, params = model_and_params
+    prompts = _shared_prefix_prompts()
+    want = [_solo(m, params, p, 6) for p in prompts]
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16, pages=4,
+                 spill="host", prefix_share=True,
+                 scheduler=FairScheduler(quantum=2))
+    ss = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+          for i, p in enumerate(prompts)]
+    eng.run()
+    assert [s.result() for s in ss] == want
+    eng.cache.table.check()
+
+
+def test_prefix_share_charges_only_private_pages(model_and_params):
+    """Quota: pages bound read-only from the prefix cache were already
+    paid for by the donor — a matching session is charged less."""
+    m, params = model_and_params
+    prompts = _shared_prefix_prompts(n=2)
+    quota = QuotaManager({"default": TenantQuota(max_pages=64)})
+    eng = Engine(m, params, batch=2, max_len=64, page_size=16,
+                 spill="host", prefix_share=True, quota=quota)
+    ss = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+          for i, p in enumerate(prompts)]
+    eng.step()                              # both admitted together
+    used = quota.usage()["default"]["pages"]
+    # solo demand: ceil(34/16)=3 pages each; the second session matched
+    # at least the first full prefix page, so the pair charged < 6
+    assert used < 6
+    eng.run()
+    assert all(s.finish_reason == "length" for s in ss)
 
 
 def test_overcommitted_pool_is_physically_smaller(model_and_params):

@@ -85,6 +85,26 @@ def test_round_robin_rotates():
     assert got == [0, 1, 2, 0, 1, 2]
 
 
+def test_round_robin_survives_drain_mid_rotation():
+    """Bugfix: the positional ``turn % len(views)`` cursor shifted when an
+    engine drained mid-rotation — the rotation must continue from the
+    last-placed engine *identity* over the survivors."""
+    pol = RoundRobin()
+    assert pol.choose(_views(0, 0, 0), _sess(0)) == 0
+    assert pol.choose(_views(0, 0, 0), _sess(1)) == 1
+    # engine 1 drains: views shrink to {0, 2}; a positional cursor
+    # (turn=2) would pick views[0] == engine 0 — double-placing on 0
+    # while engine 2 starves
+    survivors = [v for v in _views(0, 0, 0) if v.index != 1]
+    assert pol.choose(survivors, _sess(2)) == 2
+    assert pol.choose(survivors, _sess(3)) == 0
+    assert pol.choose(survivors, _sess(4)) == 2
+    # engine 1 comes back: it rejoins the rotation in index order
+    assert pol.choose(_views(0, 0, 0), _sess(5)) == 0
+    assert pol.choose(_views(0, 0, 0), _sess(6)) == 1
+    assert pol.choose(_views(0, 0, 0), _sess(7)) == 2
+
+
 def test_prefix_affinity_is_sticky_and_minimally_disruptive():
     pol = PrefixAffinity(prefix_len=4)
     same = [_sess(i, prompt=[7, 7, 7, 7, i]) for i in range(10)]

@@ -35,9 +35,12 @@ from test_paging import (SCHED_NAMES, run_scheduler_trace,  # noqa: E402
                          run_table_trace)
 
 # ---------------------------------------------------------------------------
-# PageTable traces
+# PageTable traces — share/fork in the mix exercises the copy-on-write
+# refcounts: shared holds, shared evictions (one payload for N holders)
+# and re-homing refetches, with table.check() after every step
 table_ops = st.lists(
-    st.tuples(st.sampled_from(["new", "grow", "pause", "resume", "free"]),
+    st.tuples(st.sampled_from(["new", "grow", "pause", "resume", "free",
+                               "share", "fork"]),
               st.integers(min_value=0, max_value=6)),
     max_size=200)
 
@@ -54,9 +57,11 @@ def test_page_table_traces(ops, num_pages, page_size):
         for payload in table.free_session(sid):
             assert payload[0] == "page"
         table.check()
-    assert table.num_free() + sum(
-        1 for s in table.sessions() for e in table.entries(s)
-        if e.resident) == table.num_pages
+    # conservation counts DISTINCT frames: a shared page backs many
+    # entries but occupies one frame
+    resident = {e.pid for s in table.sessions() for e in table.entries(s)
+                if e.resident}
+    assert table.num_free() + len(resident) == table.num_pages
 
 
 # ---------------------------------------------------------------------------
