@@ -41,11 +41,20 @@ def direction(name: str) -> Optional[int]:
     return None
 
 
-def load_rows(path: str) -> Dict[str, Tuple[float, str]]:
+def load_rows(path: str) -> Dict[str, Tuple[Optional[float], str]]:
+    """Rows by name.  A null / non-numeric value loads as ``None``
+    (benches emit null for 'metric not applicable' — e.g. hit_rate with
+    sharing off) and is reported but never diffed."""
+    rows: Dict[str, Tuple[Optional[float], str]] = {}
     with open(path) as f:
         payload = json.load(f)
-    return {r["name"]: (float(r["value"]), r.get("note", ""))
-            for r in payload.get("rows", [])}
+    for r in payload.get("rows", []):
+        try:
+            val: Optional[float] = float(r["value"])
+        except (TypeError, ValueError):
+            val = None
+        rows[r["name"]] = (val, r.get("note", ""))
+    return rows
 
 
 def pair_files(old: str, new: str) -> List[Tuple[str, str, str]]:
@@ -81,8 +90,18 @@ def compare(old: str, new: str, threshold: float = 0.05
                      f"{len(added)} added, {len(removed)} removed ==")
         for name in shared:
             ov, nv = a[name][0], b[name][0]
+            if ov is None or nv is None:
+                lines.append(f"  {name}: {_fmt(ov)} -> {_fmt(nv)} "
+                             "(n/a: null value)")
+                continue
             delta = nv - ov
-            rel = delta / abs(ov) if ov else float("inf") if delta else 0.0
+            if ov == 0:
+                # a zero baseline has no meaningful relative delta; the
+                # old inf/NaN ratio here poisoned the regression flags
+                lines.append(f"  {name}: {ov:.6g} -> {nv:.6g} "
+                             "(n/a: zero baseline)")
+                continue
+            rel = delta / abs(ov)
             d = direction(name)
             flag = ""
             if d is not None and abs(rel) > threshold:
@@ -92,10 +111,14 @@ def compare(old: str, new: str, threshold: float = 0.05
             lines.append(f"  {name}: {ov:.6g} -> {nv:.6g} "
                          f"({rel:+.1%}){flag}")
         for name in added:
-            lines.append(f"  + {name}: {b[name][0]:.6g}")
+            lines.append(f"  + {name}: {_fmt(b[name][0])}")
         for name in removed:
-            lines.append(f"  - {name}: {a[name][0]:.6g}")
+            lines.append(f"  - {name}: {_fmt(a[name][0])}")
     return lines, regressions
+
+
+def _fmt(v: Optional[float]) -> str:
+    return "null" if v is None else f"{v:.6g}"
 
 
 def main() -> None:

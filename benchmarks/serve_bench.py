@@ -132,6 +132,49 @@ def serve_bench(n_requests: int = 6, batch: int = 2, max_len: int = 64,
                          page_size=page_size, prebuilt=(cfg, model, params),
                          colocated=False)
     rows += prefix_bench(prebuilt=(cfg, model, params))
+    rows += paged_kernel_bench(n_requests=n_requests, batch=batch,
+                               max_len=max_len,
+                               prebuilt=(cfg, model, params))
+    return rows
+
+
+def paged_kernel_bench(n_requests: int = 6, batch: int = 2,
+                       max_len: int = 64,
+                       page_sizes: Tuple[int, ...] = (8, 16, 32),
+                       prebuilt=None) -> List[Row]:
+    """Gather-vs-paged decode across page sizes: the tentpole's number.
+
+    ``gather`` materializes the whole page pool into a contiguous view
+    every decode step (the legacy path); ``kernel`` runs the in-place
+    paged-attention kernel — the block table rides into the kernel and
+    each step touches only the pages its sessions hold.  The
+    ``bytes_touched_frac`` row is the metered ratio of page-frame bytes
+    the attention actually read vs what the full-pool gather reads (the
+    paper's bytes-to-compute vs compute-to-bytes claim, measured)."""
+    from repro.serve.engine import Engine
+
+    cfg, model, params = prebuilt if prebuilt else _build()
+    rows: List[Row] = []
+    for ps in page_sizes:
+        io = None
+        for kernel in (False, True):
+            eng = Engine(model, params, batch=batch, max_len=max_len,
+                         scheduler="fcfs", page_size=ps,
+                         decode_kernel=kernel)
+            dt, total, _ = _drive(model, params, cfg, scheduler="fcfs",
+                                  n_requests=n_requests, new_tokens=24,
+                                  batch=batch, max_len=max_len, engine=eng)
+            mode = "kernel" if kernel else "gather"
+            rows.append((f"serve.paged_decode.{mode}_p{ps}.tok_per_s",
+                         round(total / dt, 1),
+                         f"{total} tokens, batch={batch} (CPU wall-clock)"))
+            if kernel:
+                io = eng.traffic_report()["decode_io"]
+        rows.append((f"serve.paged_decode.kernel_p{ps}.bytes_touched_frac",
+                     round(io["bytes_touched"]
+                           / max(1, io["bytes_gather_equiv"]), 4),
+                     f"{io['pages_touched']}/{io['pages_gather_equiv']} "
+                     "page frames read in place vs full-pool gather"))
     return rows
 
 
@@ -175,13 +218,19 @@ def prefix_bench(page_size: int = 16, max_len: int = 64,
         peak = 0
         while eng.step() or eng.scheduler.has_waiting():
             peak = max(peak, sum(1 for _ in eng.cache.running()))
-        got[share] = (peak, eng.traffic_report().get("prefix", {}))
+        got[share] = (peak, eng.traffic_report().get("prefix"))
     (peak_off, _), (peak_on, prefix) = got[False], got[True]
+    # "feature off" must never read as "0% hits": an engine built with
+    # prefix_share=True must produce a live prefix section — a missing or
+    # disabled one is report-shape drift and fails loudly instead of
+    # silently benching hit_rate=0.0
+    assert prefix is not None and prefix.get("enabled"), \
+        f"prefix-share engine emitted no live prefix report: {prefix!r}"
     rows.append(("serve.prefix_share.hit_rate",
-                 round(prefix.get("hit_rate", 0.0), 3),
-                 f"{prefix.get('rows_reused', 0)}/"
-                 f"{prefix.get('rows_prompted', 0)} prompt rows reused, "
-                 f"{prefix.get('forks', 0)} forks (Zipf shared-prefix mix)"))
+                 round(prefix["hit_rate"], 3),
+                 f"{prefix['rows_reused']}/"
+                 f"{prefix['rows_prompted']} prompt rows reused, "
+                 f"{prefix['forks']} forks (Zipf shared-prefix mix)"))
     rows.append(("serve.prefix_share.admission_capacity_gain",
                  round(peak_on / max(1, peak_off), 2),
                  f"peak concurrent sessions {peak_off} -> {peak_on} "

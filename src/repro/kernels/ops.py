@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import (flash_attention as fa, gemm_os as gos,
-                           offload_pack as op, ssd_scan as ss)
+                           offload_pack as op, paged_attention as pa,
+                           ref as kref, ssd_scan as ss)
 
 
 def _interpret() -> bool:
@@ -45,6 +46,46 @@ def int8_pack(x, *, block_rows: int = 128):
 def int8_unpack(q, scales, *, block_rows: int = 128, dtype=jnp.bfloat16):
     return op.int8_unpack(q, scales, block_rows=block_rows, dtype=dtype,
                           interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention: in-place block-tabled K/V lookup with fused codec
+# decode.  A registry flag (not a bool) so backends stay pluggable: the
+# serving stack routes through ``paged_attention`` and the active impl can
+# be swapped (tests pin pallas == xla) without touching the call sites.
+PAGED_IMPLS = ("pallas", "xla")
+_PAGED_IMPL = {"default": "pallas"}
+
+
+def set_paged_impl(name: str) -> None:
+    """Select the paged-attention backend ('pallas' kernel / 'xla' ref)."""
+    if name not in PAGED_IMPLS:
+        raise ValueError(f"unknown paged-attention impl {name!r}; "
+                         f"registered: {PAGED_IMPLS}")
+    _PAGED_IMPL["default"] = name
+
+
+def paged_attention(q, k_pool, v_pool, page_map, cache_index, *,
+                    window: int = 0, softcap: float = 0.0,
+                    kq_pool=None, vq_pool=None, k_scale=None, v_scale=None,
+                    impl: Optional[str] = None):
+    """q: (B, 1, H, d) over a (P, page, K, d) pool via a (B, pp) page map.
+
+    Ids >= P address the compressed side pool (decoded in the K/V load).
+    Semantics match ``models/attention.decode_attention`` on the gathered
+    view — the ref twin IS that path."""
+    name = impl or _PAGED_IMPL["default"]
+    if name == "pallas":
+        return pa.paged_decode_attention(
+            q, k_pool, v_pool, page_map, cache_index, window=window,
+            softcap=softcap, kq_pool=kq_pool, vq_pool=vq_pool,
+            k_scale=k_scale, v_scale=v_scale, interpret=_interpret())
+    if name == "xla":
+        return kref.paged_decode_attention_ref(
+            q, k_pool, v_pool, page_map, cache_index, window=window,
+            softcap=softcap, kq_pool=kq_pool, vq_pool=vq_pool,
+            k_scale=k_scale, v_scale=v_scale)
+    raise ValueError(f"unknown paged-attention impl {name!r}")
 
 
 # ---------------------------------------------------------------------------

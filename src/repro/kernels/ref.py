@@ -45,6 +45,51 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+def inflate_pages_ref(pool: jax.Array, page_map: jax.Array,
+                      qpool: Optional[jax.Array] = None,
+                      scales: Optional[jax.Array] = None) -> jax.Array:
+    """Gather the contiguous (B, pp*page, K, hd) view a page map describes.
+
+    pool: (P, page, K, hd); page_map: (B, pp) int32.  Ids ``>= P`` address
+    frame ``id - P`` of the compressed side pool ``qpool`` (C, page, K, hd)
+    with per-page ``scales`` (C, 1) and decode as ``q*scale`` cast to the
+    pool dtype — exactly ``core.compress.decode_tensor`` per page.  This is
+    the inflate-then-gather the in-kernel path replaces.
+    """
+    P, page, K, hd = pool.shape
+    B, pp = page_map.shape
+    flat = page_map.reshape(-1)
+    out = jnp.take(pool, jnp.clip(flat, 0, P - 1), axis=0)
+    if qpool is not None:
+        C = qpool.shape[0]
+        ci = jnp.clip(flat - P, 0, C - 1)
+        dec = (jnp.take(qpool, ci, axis=0).astype(jnp.float32)
+               * jnp.take(scales.reshape(-1), ci)[:, None, None, None]
+               ).astype(pool.dtype)
+        out = jnp.where((flat >= P)[:, None, None, None], dec, out)
+    return out.reshape(B, pp * page, K, hd)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, page_map: jax.Array,
+                               cache_index: jax.Array, *,
+                               window: int = 0, softcap: float = 0.0,
+                               kq_pool: Optional[jax.Array] = None,
+                               vq_pool: Optional[jax.Array] = None,
+                               k_scale: Optional[jax.Array] = None,
+                               v_scale: Optional[jax.Array] = None
+                               ) -> jax.Array:
+    """Pure-XLA twin of kernels/paged_attention.paged_decode_attention:
+    inflate+gather the page map, then the exact ``decode_attention`` math
+    of the legacy gather-then-attend decode path."""
+    from repro.models.attention import decode_attention
+    k = inflate_pages_ref(k_pool, page_map, kq_pool, k_scale)
+    v = inflate_pages_ref(v_pool, page_map, vq_pool, v_scale)
+    return decode_attention(q, k, v, cache_index, window=window,
+                            softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
 def ssd_ref(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array
             ) -> Tuple[jax.Array, jax.Array]:
     """Single-(batch,head) SSD recurrence oracle.

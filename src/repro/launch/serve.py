@@ -92,6 +92,10 @@ def main() -> None:
     ap.add_argument("--prefix-share", action="store_true",
                     help="share common prompt-prefix pages copy-on-write "
                          "across sessions (paged cache only)")
+    ap.add_argument("--decode-kernel", action="store_true",
+                    help="decode in place over the page table (paged "
+                         "attention kernel; reads only the pages each "
+                         "session holds instead of gathering the pool)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="draw the first N prompt tokens from a common "
                          "prefix so --prefix-share has something to hit")
@@ -151,6 +155,11 @@ def main() -> None:
         ap.error("--prefix-share reuses whole pages: pass --page-size")
     if args.prefix_share and (args.role is not None or args.router):
         ap.error("--prefix-share is a colocated-engine feature for now")
+    if args.decode_kernel and not args.page_size:
+        ap.error("--decode-kernel reads through the page table: pass "
+                 "--page-size")
+    if args.decode_kernel and (args.role is not None or args.router):
+        ap.error("--decode-kernel is a colocated-engine feature for now")
     if args.listen is not None and args.batch is None:
         ap.error("--listen needs explicit --batch/--max-len (the remote "
                  "decode geometry cannot be negotiated over the wire)")
@@ -210,7 +219,8 @@ def main() -> None:
                      temperature=args.temperature, scheduler=sched,
                      spill=args.spill, page_size=args.page_size,
                      pages=args.pages, quota=quota,
-                     prefix_share=args.prefix_share)
+                     prefix_share=args.prefix_share,
+                     decode_kernel=args.decode_kernel)
     print(eng.describe())
     rng = np.random.default_rng(0)
     shared_head = rng.integers(
@@ -277,6 +287,17 @@ def main() -> None:
               f"{p['evictions']} evicted, {p['refetches']} refetched, "
               f"{p['readmits_free']} readmitted copy-free, "
               f"{p['adoptions']} adopted")
+    if report.get("decode_io", {}).get("in_place"):
+        from repro.core.runtime import fmt_bytes
+        dio = report["decode_io"]
+        frac = (dio["bytes_touched"] / dio["bytes_gather_equiv"]
+                if dio["bytes_gather_equiv"] else 0.0)
+        print(f"decode_io[in-place]: {dio['steps']} steps read "
+              f"{fmt_bytes(dio['bytes_touched'])} of KV "
+              f"({frac:.1%} of the {fmt_bytes(dio['bytes_gather_equiv'])} "
+              f"a full gather touches), "
+              f"{dio['compressed_resident']} pages compressed-resident "
+              f"({dio['compressed_adopts']} adoptions)")
     if report.get("prefix", {}).get("enabled"):
         pf = report["prefix"]
         print(f"prefix: {pf['hits']} page hits, {pf['forks']} forks, "

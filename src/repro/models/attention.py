@@ -190,7 +190,12 @@ def decode_attention(q, k_cache, v_cache, cache_index, *, window: int = 0,
     mask = pos <= cache_index
     if window > 0:
         mask &= pos > cache_index - window
-    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    # finite NEG, not -inf: an inactive slot (cache_index < 0, mask all
+    # false) must yield a finite (discarded) row, not NaN-poison the
+    # batched einsum — same contract as _online_softmax_span.  For any
+    # row with >=1 valid position the result is bit-identical (exp of
+    # -1e30 - m underflows to exactly 0).
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -228,7 +233,9 @@ def prefix_prefill_attention(q, k_cache, v_cache, positions, *,
     if window > 0:
         mask &= t[None, None, None, None, :] > \
             positions[:, None, None, :, None] - window
-    s = jnp.where(mask, s, -jnp.inf)
+    # finite NEG (see decode_attention): a padded query row whose
+    # position masks every cache row must not softmax over all -inf
+    s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -242,7 +249,8 @@ def attention_block(params: dict, ctx: ModelContext, x: jax.Array,
                     cache_index: Optional[jax.Array] = None,
                     kv_x: Optional[jax.Array] = None,
                     use_rope: bool = True,
-                    prefix_attend: bool = False
+                    prefix_attend: bool = False,
+                    paged: Optional[dict] = None
                     ) -> Tuple[jax.Array, Optional[Cache]]:
     """Full attention sub-block: projections + rope + attend + output proj.
 
@@ -290,7 +298,27 @@ def attention_block(params: dict, ctx: ModelContext, x: jax.Array,
         v = ctx.act(v, "batch", None, None, None)
 
     new_cache = cache
-    if cache is not None:
+    if cache is not None and paged is not None:
+        # in-place paged decode: the cache leaves ARE the page pool
+        # (P, page, K, hd) — no batch dim, no gathered view.  The step's
+        # K/V row lands directly in its page frame (write_pid routes
+        # masked slots to the scratch frame) and attention dereferences
+        # the block table inside the kernel, touching only the pages each
+        # session holds.  Compressed side-pool leaves (kq/vq/ks/vs) ride
+        # along read-only; new_cache returns only the mutated raw pool.
+        assert S == 1, "paged decode is single-token"
+        from repro.kernels import ops as kops
+        kc, vc = cache["k"], cache["v"]
+        row = paged["row_off"]
+        kc = kc.at[paged["write_pid"], row].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[paged["write_pid"], row].set(v[:, 0].astype(vc.dtype))
+        o = kops.paged_attention(
+            q, kc, vc, paged["page_map"], cache_index, window=window,
+            softcap=cfg.logit_softcap, kq_pool=cache.get("kq"),
+            vq_pool=cache.get("vq"), k_scale=cache.get("ks"),
+            v_scale=cache.get("vs"))
+        new_cache = {"k": kc, "v": vc}
+    elif cache is not None:
         # self-attention with cache: decode (S==1) writes one slot; prefill
         # writes the whole prefix at 0 — except a prefix-sharing suffix
         # prefill (prefix_attend), which writes the S suffix rows at

@@ -151,7 +151,8 @@ def run_sublayer(kind: str, params: dict, ctx: ModelContext, x: jax.Array,
                  cache: Optional[dict] = None,
                  cache_index: Optional[jax.Array] = None,
                  causal: bool = True, use_rope: bool = True,
-                 prefix_attend: bool = False
+                 prefix_attend: bool = False,
+                 paged: Optional[dict] = None
                  ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
     """Returns (x_out, aux_loss, new_cache)."""
     cfg = ctx.cfg
@@ -186,7 +187,7 @@ def run_sublayer(kind: str, params: dict, ctx: ModelContext, x: jax.Array,
     a, new_cache = attention_block(
         params["attn"], ctx, h, positions, causal=causal, cache=cache,
         cache_index=cache_index, use_rope=use_rope,
-        prefix_attend=prefix_attend)
+        prefix_attend=prefix_attend, paged=paged)
     # constrain TP-contraction outputs to the sequence-parallel layout at
     # the point of production: GSPMD then emits reduce-scatter (+ the
     # all-gather already inside the next layer's projections) instead of a
@@ -468,7 +469,8 @@ def forward_serve(params: Params, ctx: ModelContext, tokens: jax.Array,
                   frames: Optional[jax.Array] = None,
                   patches: Optional[jax.Array] = None,
                   enc_out: Optional[jax.Array] = None,
-                  prefix_attend: bool = False
+                  prefix_attend: bool = False,
+                  paged: Optional[dict] = None
                   ) -> Tuple[jax.Array, Params]:
     """``prefix_attend=True`` (static) runs the prefix-sharing *suffix*
     prefill: the S>1 tokens are the prompt's tail, written into the cache
@@ -501,7 +503,8 @@ def forward_serve(params: Params, ctx: ModelContext, tokens: jax.Array,
                                     enc_out=enc_out, cache=c,
                                     cache_index=cache_index,
                                     use_rope=use_rope,
-                                    prefix_attend=prefix_attend)
+                                    prefix_attend=prefix_attend,
+                                    paged=paged)
             if nc is not None:
                 new_g[f"sub_{j}"] = nc
         return x, new_g

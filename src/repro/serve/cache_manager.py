@@ -357,12 +357,14 @@ class PagedKVCacheManager(KVCacheManager):
                  pages: Optional[int] = None,
                  codec_for: Optional[Callable[[str], Optional[str]]] = None,
                  codec_kernel: bool = False,
+                 decode_kernel: bool = False,
                  prefix_share: bool = False,
                  **kwargs):
         self.page_size = int(page_size)
         self._pages_override = pages
         self.codec_for = codec_for or (lambda tenant: None)
         self.codec_kernel = codec_kernel
+        self.decode_kernel = bool(decode_kernel)
         self._sessions: Dict[int, Session] = {}       # uid -> owner
         self._codec_by_uid: Dict[int, Optional[str]] = {}
         self.prefix_share = bool(prefix_share)
@@ -404,12 +406,43 @@ class PagedKVCacheManager(KVCacheManager):
                 self.pool)
         self.table = PageTable(num, self.page_size)
         # frames die (evicted / freed) -> the prefix index must forget
-        # them before the frame id is reused for different contents
-        self.table.on_release = self._drop_prefix_pid
+        # them — and a compressed side-pool frame must be returned —
+        # before the frame id is reused for different contents
+        self.table.on_release = self._on_pid_release
         self.scratch_id = num                     # pool holds num+1 frames
         self._pmap_cache = None
+        self._pmap_np: Optional[np.ndarray] = None
         self.report["num_pages"] = num
         self._has_slot_leaves = bool(jax.tree_util.tree_leaves(self.slot_tree))
+        # ---- in-kernel decode state (decode_kernel=True) -------------
+        # compressed side pool: int8 payload frames + one scale per
+        # (group-stack row, frame); page-map ids >= num+1 address frame
+        # ``id - (num+1)`` here and the paged-attention kernel dequants
+        # them in the K/V load (fused codec decode).  Only codecs whose
+        # payload is int8 (int8 / blocksparse) are residency-eligible.
+        import jax.numpy as jnp
+        self._cframe_by_pid: Dict[int, Tuple] = {}   # pid -> (ci, codec,
+        self._cframe_free: List[int] = []            #   treedef, scales,
+        if self.decode_kernel:                       #   dtypes)
+            self.cpool = jax.tree.map(
+                lambda c: jnp.zeros(c.shape[:1] + (num,) + c.shape[2:],
+                                    jnp.int8), self.pool)
+            self.cscale = jax.tree.map(
+                lambda c: jnp.zeros(c.shape[:1] + (num, 1), jnp.float32),
+                self.pool)
+            self._cframe_free = list(range(num))
+        self._cframe_adopts = 0
+        # decode-io metering: pages the attention actually reads per step
+        # (the paper's claim is that this scales with rows held, not pool
+        # size — gather_equiv is what the legacy materialize-all path reads)
+        cfg = self.model.cfg
+        self._decode_window = cfg.window if cfg.attention == "swa" else 0
+        self._decode_steps = 0
+        self._decode_pages_touched = 0
+        self._decode_pages_gather = 0
+        self._page_frame_bytes = sum(
+            int(np.prod(c.shape[:1] + c.shape[2:])) * c.dtype.itemsize
+            for c in jax.tree_util.tree_leaves(self.pool))
 
     # ------------------------------------------------------------------
     # page-backed rows
@@ -419,6 +452,17 @@ class PagedKVCacheManager(KVCacheManager):
 
     # ------------------------------------------------------------------
     # prefix sharing: radix index over page-sized token chunks
+    def _on_pid_release(self, pid: int) -> None:
+        """A frame id died (evicted / freed): forget its prefix-index
+        chain and return its compressed side-pool frame, if any.  Runs
+        AFTER the evict callback, so an eviction stashes the compressed
+        payload before the side frame is recycled."""
+        self._drop_prefix_pid(pid)
+        entry = self._cframe_by_pid.pop(pid, None)
+        if entry is not None:
+            self._cframe_free.append(entry[0])
+            self._pmap_cache = None
+
     def _drop_prefix_pid(self, pid: int) -> None:
         entry = self._pid_nodes.pop(pid, None)
         if entry is None:
@@ -549,31 +593,49 @@ class PagedKVCacheManager(KVCacheManager):
         """(batch, pages_per_slot) int32 pool indices for the decode
         gather; unowned positions point at the scratch page.  Cached on
         device — the map only changes on admission/growth/preemption, not
-        per decode step — and invalidated by every mutating path."""
+        per decode step — and invalidated by every mutating path.
+
+        With ``decode_kernel`` the map is *translated*: a page resident
+        in the compressed side pool emits ``scratch_id + 1 + ci`` (ids
+        past the raw pool address side-pool frames; the kernel dequants
+        them in the K/V load)."""
         if self._pmap_cache is None:
-            self._pmap_cache = jax.numpy.asarray(self._build_map())
+            self._pmap_np = self._build_map(translate=self.decode_kernel)
+            self._pmap_cache = jax.numpy.asarray(self._pmap_np)
         return self._pmap_cache
 
-    def _build_map(self) -> np.ndarray:
+    def page_map_host(self) -> np.ndarray:
+        """Host copy of :meth:`page_map` (same translation) — the Engine
+        derives each step's write frame from it without a device sync."""
+        self.page_map()
+        return self._pmap_np
+
+    def _build_map(self, translate: bool = False) -> np.ndarray:
         m = np.full((self.batch, self.pages_per_slot), self.scratch_id,
                     np.int32)
         for slot, sess in enumerate(self.slots):
             if sess is not None:
-                self._fill_row(m, slot, sess)
+                self._fill_row(m, slot, sess, translate)
         return m
 
     def page_map_for(self, slot: int, sess: Session) -> np.ndarray:
         """Page map with a *pending* admission's pages already in ``slot``
-        (the prefill gather runs before :meth:`bind`)."""
+        (the prefill gather runs before :meth:`bind`).  Untranslated: the
+        prefill path gathers the raw pool, and an admission's own pages
+        are always raw (fresh frames or raw prefix pages)."""
         m = self._build_map()
-        self._fill_row(m, slot, sess)
+        self._fill_row(m, slot, sess, False)
         return m
 
-    def _fill_row(self, m: np.ndarray, slot: int, sess: Session) -> None:
+    def _fill_row(self, m: np.ndarray, slot: int, sess: Session,
+                  translate: bool = False) -> None:
         for pos, pid in enumerate(self.table.resident_pids(sess.uid)):
             assert pid is not None, \
                 f"resident session {sess.uid} has a spilled page {pos}"
-            m[slot, pos] = pid
+            if translate and pid in self._cframe_by_pid:
+                m[slot, pos] = self.scratch_id + 1 + self._cframe_by_pid[pid][0]
+            else:
+                m[slot, pos] = pid
 
     # ------------------------------------------------------------------
     # per-page spill path (lazy: only on real pool pressure)
@@ -581,6 +643,23 @@ class PagedKVCacheManager(KVCacheManager):
         assert self.spill_runtime is not None, \
             "page eviction needs a spill tier " \
             "(PagedKVCacheManager(spill=None) cannot overcommit)"
+        centry = self._cframe_by_pid.get(pid)
+        if centry is not None:
+            # the page's live bytes sit in the compressed side pool (the
+            # raw frame is stale): stash the already-quantized payloads
+            # as-is — no re-encode, and the recorded per-leaf scales /
+            # dtypes ride along so a later resume round-trips exactly
+            ci, codec_name, treedef, scales, dtypes = centry
+            qleaves = jax.tree_util.tree_leaves(
+                tfm.page_slice(self.cpool, ci))
+            items = []
+            for q, scale, dtype in zip(qleaves, scales, dtypes):
+                payload = self.spill_runtime.stash(
+                    q, TransferHints(dtype=q.dtype, batch_dim=0,
+                                     allow_compress=False, name="kv_page"),
+                    direction="kv_stash")
+                items.append((payload, scale, dtype))
+            return _SpilledPage(treedef, items, codec_name)
         page = tfm.page_slice(self.pool, pid)
         leaves, treedef = jax.tree_util.tree_flatten(page)
         codec_name = self._codec_by_uid.get(uid)
@@ -628,6 +707,52 @@ class PagedKVCacheManager(KVCacheManager):
             self._discard(payload)
 
     # ------------------------------------------------------------------
+    # compressed residency (decode_kernel=True): a resumed cold page may
+    # stay quantized in the int8 side pool and be dequanted inside the
+    # paged-attention kernel instead of inflating into a raw frame
+    def _compressible_resume(self, sess: Session, pos: int, parked,
+                             entry: _SpilledPage) -> bool:
+        """Eligibility for fused-decode residency.  The tail page (the
+        one the next decode step writes into) must resume raw; shared
+        (prefix) pages stay raw so COW forks always copy live pool
+        bytes; only int8-payload codecs fit the side pool."""
+        return (self.decode_kernel
+                and entry.codec in ("int8", "blocksparse")
+                and bool(self._cframe_free)
+                and not isinstance(parked, SharedPayload)
+                and pos < sess.length // self.page_size
+                and all(s is not None for _, s, _ in entry.items))
+
+    def _adopt_compressed(self, entry: _SpilledPage, pid: int) -> None:
+        """Fetch a quantized page into side-pool frame ``ci`` verbatim
+        (no decode) and record the pid -> ci mapping the page-map
+        translation and a later re-evict both key off."""
+        import jax.numpy as jnp
+        ci = self._cframe_free[-1]          # popped only after all fetches
+        qleaves, scales, dtypes = [], [], []
+        for payload, scale, dtype in entry.items:
+            q = self.spill_runtime.fetch(
+                payload, TransferHints(dtype=dtype, batch_dim=0,
+                                       allow_compress=False, name="kv_page"),
+                direction="kv_fetch")
+            qleaves.append(q)
+            scales.append(scale)
+            dtypes.append(dtype)
+        for payload, _, _ in entry.items:
+            self._discard(payload)
+        self._cframe_free.pop()
+        qpage = jax.tree_util.tree_unflatten(entry.treedef, qleaves)
+        self.cpool = tfm.page_insert(self.cpool, qpage, ci)
+        self.cscale = jax.tree.map(
+            lambda s, sc: s.at[:, ci].set(
+                jnp.asarray(sc, jnp.float32).reshape(())),
+            self.cscale, jax.tree_util.tree_unflatten(entry.treedef, scales))
+        self._cframe_by_pid[pid] = (ci, entry.codec, entry.treedef,
+                                    scales, dtypes)
+        self._cframe_adopts += 1
+        self._pmap_cache = None
+
+    # ------------------------------------------------------------------
     # pause / resume: pages go cold in place; slot-shaped leaves park whole
     def pause(self, sess: Session) -> None:
         assert sess.slot is not None, sess
@@ -657,6 +782,13 @@ class PagedKVCacheManager(KVCacheManager):
                     if isinstance(parked, SharedPayload) else parked
                 pid = self.table.set_resident(uid, pos, self._evict_cb)
                 try:
+                    if self._compressible_resume(sess, pos, parked, inner):
+                        # fused-decode residency: the quantized payload
+                        # lands in the compressed side pool as-is and the
+                        # decode kernel dequants it per attention read —
+                        # no inflate pass, no raw-pool frame bytes
+                        self._adopt_compressed(inner, pid)
+                        continue
                     page = self._unstash_page(inner)
                 except Exception:
                     # the fetch failed AFTER the position went resident:
@@ -726,10 +858,40 @@ class PagedKVCacheManager(KVCacheManager):
     @property
     def caches(self):
         """Debug/legacy view: the contiguous cache tree gathered from the
-        page pool at the current page map (a copy, not the storage)."""
+        page pool at the current page map (a copy, not the storage).
+        Compressed-resident frames are inflated into a pool *copy* first
+        so the gather always reads live bytes (the storage itself stays
+        quantized)."""
         import jax.numpy as jnp
-        pm = jnp.asarray(self.page_map())
-        return tfm.gather_pages(self.pool, self.slot_tree, pm)
+        pool = self.pool
+        for pid, (ci, codec_name, treedef, scales, dtypes) \
+                in self._cframe_by_pid.items():
+            codec = get_codec(codec_name)
+            qleaves = jax.tree_util.tree_leaves(
+                tfm.page_slice(self.cpool, ci))
+            leaves = [decode_tensor(codec, q, s, d)
+                      for q, s, d in zip(qleaves, scales, dtypes)]
+            pool = tfm.page_insert(
+                pool, jax.tree_util.tree_unflatten(treedef, leaves), pid)
+        pm = jnp.asarray(self._build_map())
+        return tfm.gather_pages(pool, self.slot_tree, pm)
+
+    # ------------------------------------------------------------------
+    # decode-io metering: what the attention read this step
+    def note_decode(self, length: int, n_active: int) -> None:
+        """Record one decode step for ``n_active`` sessions at ``length``
+        rows.  In-place decode touches only the pages covering the rows
+        the query can see (sliding window excluded); the gather path
+        reads the whole ``batch x pages_per_slot`` view regardless."""
+        lo = 0
+        if self._decode_window > 0:
+            lo = max(0, length - self._decode_window + 1) // self.page_size
+        touched = self.table.pages_for(length + 1) - lo
+        gather = self.batch * self.pages_per_slot
+        self._decode_steps += 1
+        self._decode_pages_touched += \
+            touched * n_active if self.decode_kernel else gather
+        self._decode_pages_gather += gather
 
     # ------------------------------------------------------------------
     def traffic_report(self) -> Dict[str, Any]:
@@ -742,6 +904,18 @@ class PagedKVCacheManager(KVCacheManager):
             "readmits_free": self.table.readmits_free,
             "adoptions": self.table.adoptions,
             "shared_binds": self.table.shared_binds,
+        }
+        report["decode_io"] = {
+            "in_place": self.decode_kernel,
+            "steps": self._decode_steps,
+            "pages_touched": self._decode_pages_touched,
+            "pages_gather_equiv": self._decode_pages_gather,
+            "bytes_touched":
+                self._decode_pages_touched * self._page_frame_bytes,
+            "bytes_gather_equiv":
+                self._decode_pages_gather * self._page_frame_bytes,
+            "compressed_resident": len(self._cframe_by_pid),
+            "compressed_adopts": self._cframe_adopts,
         }
         prompted = self.prefix_rows_prompted
         report["prefix"] = {

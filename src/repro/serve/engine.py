@@ -111,6 +111,7 @@ class Engine:
                  page_size: Optional[int] = None,
                  pages: Optional[int] = None,
                  codec_kernel: bool = False,
+                 decode_kernel: bool = False,
                  quota: Union[QuotaManager, TenantQuota,
                               Dict[str, TenantQuota], None] = None,
                  role: str = "both",
@@ -144,12 +145,16 @@ class Engine:
         else:
             self.quota = QuotaManager(dict(quota))
 
+        if decode_kernel and not (page_size and role != "prefill"):
+            raise ValueError("decode_kernel needs paged KV: pass page_size "
+                             "(and a decode-capable role)")
         if page_size and role != "prefill":
             codec_for = self.quota.codec_for if self.quota else None
             self.cache: KVCacheManager = PagedKVCacheManager(
                 model, batch, max_len, spill=spill, page_size=page_size,
                 pages=pages, codec_for=codec_for,
-                codec_kernel=codec_kernel, prefix_share=prefix_share,
+                codec_kernel=codec_kernel, decode_kernel=decode_kernel,
+                prefix_share=prefix_share,
                 **cache_kwargs)
         else:
             # the prefill role computes in plain contiguous slots (no pool
@@ -278,9 +283,44 @@ class Engine:
                                      new_slot)
             return logits[0], pool, slot_tree
 
+        def decode_paged_kernel(params, pool, cpool, cscale, slot_tree,
+                                page_map, tok, pos, idx, row_off, write_pid,
+                                mask):
+            """In-place decode: no gather_pages — the pool leaves ride
+            into the forward as the cache and the paged-attention kernel
+            dereferences the block table itself, touching only the pages
+            each session holds.  The compressed side pool (int8 payload +
+            per-frame scales) rides along read-only as kq/vq/ks/vs and is
+            dequanted inside the K/V load."""
+            merged = {}
+            for g in pool:
+                d = dict(pool[g])
+                d["kq"], d["vq"] = cpool[g]["k"], cpool[g]["v"]
+                d["ks"], d["vs"] = cscale[g]["k"], cscale[g]["v"]
+                d.update(slot_tree.get(g, {}))
+                merged[g] = d
+            for g in slot_tree:
+                if g not in merged:
+                    merged[g] = dict(slot_tree[g])
+            ctx = model.ctx("decode")
+            h, new = tfm.forward_serve(
+                params, ctx, tok, pos, merged, cache_index=idx,
+                paged=dict(page_map=page_map, write_pid=write_pid,
+                           row_off=row_off))
+            logits = tfm.unembed(params, ctx, h[:, 0:1, :])[:, 0, :]
+            new_pool = {g: {k: new[g][k] for k in tfm.PAGED_KEYS}
+                        for g in pool}
+            new_slot = jax.tree.map(
+                _masked_merge(mask), slot_tree,
+                {g: {k: new[g][k] for k in slot_tree[g]}
+                 for g in slot_tree})
+            return logits, new_pool, new_slot
+
         # donate the pool/slot storage: the scatter then updates the page
         # frames in place instead of copying the whole pool every step
         self._decode_paged = jax.jit(decode_paged, donate_argnums=(1, 2))
+        self._decode_paged_kernel = jax.jit(decode_paged_kernel,
+                                            donate_argnums=(1, 4))
         self._prefill_paged = jax.jit(prefill_paged, donate_argnums=(1, 2))
         self._prefill_paged_shared = jax.jit(prefill_paged_shared,
                                              donate_argnums=(1, 2))
@@ -379,8 +419,32 @@ class Engine:
             mask = np.zeros((self.batch,), bool)
             mask[idxs] = True
             m = jnp.asarray(mask)
-            if self.cache.paged:
+            if self.cache.paged and getattr(self.cache, "decode_kernel",
+                                            False):
+                # in-place paged decode: the step's K/V row is written
+                # straight into its page frame (masked slots land in
+                # scratch) and attention runs over the pool via the
+                # block table — no per-step gather of the whole pool
+                page = self.cache.page_size
+                wp, ro = divmod(length, page)
+                pm_host = self.cache.page_map_host()
+                write = np.where(mask, pm_host[:, wp],
+                                 self.cache.scratch_id).astype(np.int32)
+                # the write page is raw by construction (tail pages never
+                # resume compressed); a translated id here would scribble
+                # past the pool
+                assert int(write.max()) <= self.cache.scratch_id, write
+                self.cache.note_decode(length, len(idxs))
+                logits, self.cache.pool, self.cache.slot_tree = \
+                    self._decode_paged_kernel(
+                        self.params, self.cache.pool, self.cache.cpool,
+                        self.cache.cscale, self.cache.slot_tree,
+                        self.cache.page_map(), jnp.asarray(tok), pos,
+                        jnp.int32(length), jnp.int32(ro),
+                        jnp.asarray(write), m)
+            elif self.cache.paged:
                 pm = jnp.asarray(self.cache.page_map())
+                self.cache.note_decode(length, len(idxs))
                 logits, self.cache.pool, self.cache.slot_tree = \
                     self._decode_paged(
                         self.params, self.cache.pool, self.cache.slot_tree,

@@ -1,0 +1,92 @@
+"""benchmarks/compare.py: cross-PR bench diffing must stay robust to the
+artifacts real runs produce — zero baselines, null values, added/removed
+rows — because CI gates on its regression count."""
+import json
+
+import pytest
+
+from benchmarks.compare import compare, direction, load_rows
+
+
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps({"suite": "t", "rows": rows}))
+    return str(p)
+
+
+def _row(name, value, note=""):
+    return {"name": name, "value": value, "note": note}
+
+
+def test_zero_baseline_is_annotated_not_inf(tmp_path):
+    """A 0-valued baseline must not become an inf/NaN ratio feeding the
+    regression flags — it is annotated and never counts as a regression."""
+    old = _write(tmp_path, "BENCH_a.json",
+                 [_row("serve.x.tok_per_s", 0.0)])
+    new = _write(tmp_path, "BENCH_b.json",
+                 [_row("serve.x.tok_per_s", 42.0)])
+    lines, regressions = compare(old, new)
+    assert regressions == 0
+    body = "\n".join(lines)
+    assert "zero baseline" in body
+    assert "inf" not in body and "nan" not in body.lower()
+
+
+def test_zero_to_zero_is_not_a_regression(tmp_path):
+    old = _write(tmp_path, "BENCH_a.json", [_row("x.latency_ms", 0.0)])
+    new = _write(tmp_path, "BENCH_b.json", [_row("x.latency_ms", 0.0)])
+    lines, regressions = compare(old, new)
+    assert regressions == 0
+
+
+def test_null_value_rows_are_skipped(tmp_path):
+    """Benches emit null for 'metric not applicable' (e.g. hit_rate with
+    sharing off); a null on either side reports n/a instead of diffing."""
+    old = _write(tmp_path, "BENCH_a.json",
+                 [_row("s.hit_rate", None), _row("s.tok_per_s", 10.0)])
+    new = _write(tmp_path, "BENCH_b.json",
+                 [_row("s.hit_rate", 0.5), _row("s.tok_per_s", None)])
+    lines, regressions = compare(old, new)
+    assert regressions == 0
+    body = "\n".join(lines)
+    assert body.count("n/a: null value") == 2
+
+
+def test_load_rows_tolerates_non_numeric(tmp_path):
+    p = _write(tmp_path, "BENCH_a.json",
+               [_row("a", "not-a-number"), _row("b", "3.5")])
+    rows = load_rows(p)
+    assert rows["a"][0] is None
+    assert rows["b"][0] == pytest.approx(3.5)
+
+
+def test_real_regression_still_flagged(tmp_path):
+    old = _write(tmp_path, "BENCH_a.json", [_row("s.tok_per_s", 100.0)])
+    new = _write(tmp_path, "BENCH_b.json", [_row("s.tok_per_s", 50.0)])
+    lines, regressions = compare(old, new, threshold=0.05)
+    assert regressions == 1
+    assert any("REGRESS" in ln for ln in lines)
+
+
+def test_improvement_not_counted_as_regression(tmp_path):
+    old = _write(tmp_path, "BENCH_a.json", [_row("s.latency_ms", 100.0)])
+    new = _write(tmp_path, "BENCH_b.json", [_row("s.latency_ms", 50.0)])
+    lines, regressions = compare(old, new, threshold=0.05)
+    assert regressions == 0
+    assert any("improve" in ln for ln in lines)
+
+
+def test_added_and_removed_rows_reported(tmp_path):
+    old = _write(tmp_path, "BENCH_a.json", [_row("gone", 1.0)])
+    new = _write(tmp_path, "BENCH_b.json", [_row("fresh", None)])
+    lines, regressions = compare(old, new)
+    body = "\n".join(lines)
+    assert "+ fresh: null" in body
+    assert "- gone: 1" in body
+    assert regressions == 0
+
+
+def test_direction_inference():
+    assert direction("serve.x.tok_per_s") == +1
+    assert direction("decode.latency_ms") == -1
+    assert direction("mystery.metric") is None

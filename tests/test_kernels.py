@@ -216,3 +216,108 @@ def test_codec_registry_tensor_twins(name):
     # lossy but bounded
     rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
     assert rel < 0.08, (name, rel)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention: in-kernel block-table lookup vs the gather-then-
+# decode_attention twin (the tentpole's bit-identity contract)
+def _paged_setup(B, H, K, hd, page, pp, seed=0):
+    rng = np.random.default_rng(seed)
+    P = B * pp + 1                               # frames incl. scratch
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((P, page, K, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((P, page, K, hd)), jnp.float32)
+    # a permuted map with unowned tail entries routed to scratch — the
+    # layout the PagedKVCacheManager actually produces
+    pm = rng.permutation(P - 1)[:B * pp].reshape(B, pp).astype(np.int32)
+    pm[0, -1] = P - 1                            # one scratch-routed entry
+    return q, kp, vp, jnp.asarray(pm)
+
+
+@pytest.mark.parametrize("page,pp", [(4, 6), (8, 4), (16, 2)])
+@pytest.mark.parametrize("window", [0, 9])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+@pytest.mark.parametrize("H,K", [(4, 4), (4, 2), (6, 2)])
+def test_paged_decode_parity_sweep(page, pp, window, softcap, H, K):
+    """Kernel == XLA ref twin across page size x window x softcap x GQA,
+    at several cache fills including page boundaries."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    q, kp, vp, pm = _paged_setup(2, H, K, 32, page, pp)
+    for idx in (0, page - 1, page, pp * page - 1):
+        got = paged_decode_attention(q, kp, vp, pm, jnp.int32(idx),
+                                     window=window, softcap=softcap,
+                                     interpret=True)
+        want = ref.paged_decode_attention_ref(q, kp, vp, pm, jnp.int32(idx),
+                                              window=window, softcap=softcap)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("name", registered_codecs())
+def test_paged_decode_fused_codec_parity(name):
+    """Compressed side-pool pages dequant inside the K/V load exactly as
+    decode_tensor would inflate them — for every registered codec."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    codec = get_codec(name)
+    B, H, K, hd, page, pp = 2, 4, 2, 32, 8, 3
+    q, kp, vp, pm = _paged_setup(B, H, K, hd, page, pp, seed=1)
+    P = kp.shape[0]
+    pmn = np.asarray(pm).copy()
+    C = 3
+    kq = [None] * C
+    vq = [None] * C
+    ks = np.zeros((C, 1), np.float32)
+    vs = np.zeros((C, 1), np.float32)
+    for ci, fr in enumerate({int(pmn[0, 0]), int(pmn[1, 1]),
+                             int(pmn[0, 1])}):
+        qk, sk = encode_tensor(codec, kp[fr])
+        qv, sv = encode_tensor(codec, vp[fr])
+        kq[ci], ks[ci, 0] = np.asarray(qk), float(sk)
+        vq[ci], vs[ci, 0] = np.asarray(qv), float(sv)
+        pmn[pmn == fr] = P + ci                  # translate to side ids
+    kq, vq = jnp.asarray(np.stack(kq)), jnp.asarray(np.stack(vq))
+    ks, vs = jnp.asarray(ks), jnp.asarray(vs)
+    pmc = jnp.asarray(pmn)
+    idx = jnp.int32(pp * page - 1)
+    got = paged_decode_attention(q, kp, vp, pmc, idx, kq_pool=kq,
+                                 vq_pool=vq, k_scale=ks, v_scale=vs,
+                                 interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, pmc, idx, kq_pool=kq,
+                                          vq_pool=vq, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+    # the fused path genuinely used the side pool: the raw frames it
+    # replaced disagree with the compressed decode
+    raw = ref.paged_decode_attention_ref(q, kp, vp, pm, idx)
+    assert not np.allclose(np.asarray(got), np.asarray(raw))
+
+
+def test_paged_decode_inactive_slot_finite():
+    """cache_index=-1 masks every row: the output must be finite garbage
+    (discarded by the engine mask), never NaN — the decode-path NaN bug."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    q, kp, vp, pm = _paged_setup(2, 4, 2, 32, 8, 3)
+    got = paged_decode_attention(q, kp, vp, pm, jnp.int32(-1),
+                                 interpret=True)
+    assert np.isfinite(np.asarray(got)).all()
+    want = ref.paged_decode_attention_ref(q, kp, vp, pm, jnp.int32(-1))
+    assert np.isfinite(np.asarray(want)).all()
+
+
+def test_paged_attention_impl_registry():
+    """ops.paged_attention dispatches by registry flag; unknown impls are
+    rejected; both impls agree on the same inputs."""
+    q, kp, vp, pm = _paged_setup(1, 2, 2, 16, 4, 2)
+    a = ops.paged_attention(q, kp, vp, pm, jnp.int32(5), impl="pallas")
+    b = ops.paged_attention(q, kp, vp, pm, jnp.int32(5), impl="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-6, atol=2e-6)
+    with pytest.raises(ValueError):
+        ops.set_paged_impl("cuda")
+    assert ops._PAGED_IMPL["default"] == "pallas"
+    ops.set_paged_impl("xla")
+    try:
+        c = ops.paged_attention(q, kp, vp, pm, jnp.int32(5))
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(c))
+    finally:
+        ops.set_paged_impl("pallas")
