@@ -12,6 +12,8 @@ a header with wall-clock and row count) alongside the legacy
   checkpoint  checkpoint save/restore overhead (measured + analytic)
   router      cluster fabric: wire-vs-loopback tax, real-router traffic
               replay per placement policy, analytic DC/HC/MC sweep
+  wire        scale-out wire sweep: single vs striped TCP vs shm MB/s,
+              socket-buffer before/after, codec leg, analytic stripe term
 
 Diff two runs' artifacts with ``python -m benchmarks.compare old/ new/``.
 
@@ -65,6 +67,11 @@ def _router_rows(quick: bool) -> List[Row]:
     return router_bench(quick=quick)
 
 
+def _wire_rows(quick: bool) -> List[Row]:
+    from benchmarks.serve_bench import wire_bench
+    return wire_bench(quick=quick)
+
+
 SUITES: Dict[str, Callable[[bool], List[Row]]] = {
     "micro": lambda quick: _micro_rows(),
     "paper": lambda quick: _paper_rows(),
@@ -72,6 +79,7 @@ SUITES: Dict[str, Callable[[bool], List[Row]]] = {
     "serve": _serve_rows,
     "checkpoint": _checkpoint_rows,
     "router": _router_rows,
+    "wire": _wire_rows,
 }
 
 

@@ -388,6 +388,76 @@ def router_bench(quick: bool = True) -> List[Row]:
     return rows
 
 
+def wire_bench(quick: bool = True) -> List[Row]:
+    """PR 10 suite behind BENCH_wire.json: the scale-out wire sweep.
+
+    ``probe/...`` rows measure raw handoff throughput (MB/s, latency and
+    exact wire bytes) of one ≥64 MB multi-page handoff per configuration:
+    single-stream TCP (the PR 7 baseline — and the before/after of the
+    socket-buffer satellite via the ``bufsize`` row), striped TCP at
+    2/4/8 streams, the zero-copy shm arena, and the codec leg (int8
+    pages cross the wire compressed).  The acceptance bars live here:
+    striped(4) ≥ 2x single-stream, shm > striped.  ``sim/...`` rows add
+    the analytic stripe-count term over the DC/HC/MC tier configs
+    (sim/simulator.simulate_serving ``wire_streams``)."""
+    from repro.serve.transport import probe_wire
+    from repro.sim.simulator import simulate_serving
+    from repro.sim.topology import DC_DLA, HC_DLA, MC_DLA_B
+    from repro.sim.workloads import TrafficSpec, generate_traffic
+
+    rows: List[Row] = []
+    payload = 64.0
+    repeats = 2 if quick else 3
+
+    def add(tag: str, note: str, **kw) -> None:
+        r = probe_wire(payload_mb=payload, pages=64, repeats=repeats, **kw)
+        rows.append((f"probe/{tag}/mb_per_s", r["mb_per_s"], note))
+        rows.append((f"probe/{tag}/handoff_ms", r["handoff_ms"], note))
+        rows.append((f"probe/{tag}/wire_bytes", r["wire_bytes"], note))
+
+    add("tcp_s1", "single-stream TCP, 64MB, default bufs",
+        transport="tcp", streams=1)
+    add("tcp_s1_buf4m", "single-stream TCP, SO_SNDBUF/RCVBUF=4MB",
+        transport="tcp", streams=1, bufsize=4 << 20)
+    for s in ((4,) if quick else (2, 4, 8)):
+        add(f"tcp_s{s}", f"striped TCP, {s} streams, 64MB",
+            transport="tcp", streams=s)
+    add("tcp_s4_int8", "striped TCP, 4 streams, int8 pages",
+        transport="tcp", streams=4, codec="int8")
+    add("shm", "zero-copy shared-memory arena, 64MB",
+        transport="shm", streams=1)
+    if not quick:
+        add("memory_s1", "in-process pipe baseline",
+            transport="memory", streams=1)
+
+    import dataclasses as _dc
+
+    trace = generate_traffic(TrafficSpec(
+        sessions=10_000 if quick else 100_000, horizon_s=3600.0, seed=1))
+    # stripe sweep with the wire as the binding cap: feed the *measured*
+    # single-stream bandwidth into the analytic model so the sim rows
+    # mirror the probe sweep (TTFT includes the handoff leg; tok/s is
+    # decode-bound and should NOT move — a sanity check in itself)
+    meas = next(v for n, v, _ in rows if n == "probe/tcp_s1/mb_per_s")
+    wired = _dc.replace(DC_DLA, wire_stream_bw=meas * 1e6)
+    for s in (1, 2, 4, 8):
+        rep = simulate_serving(trace, wired, engines=8, wire_streams=s)
+        rows.append((f"sim/DC-DLA/s{s}/ttft_mean_ms",
+                     rep.ttft_mean_s * 1e3,
+                     f"analytic, measured {meas:.0f} MB/s per stream"))
+        rows.append((f"sim/DC-DLA/s{s}/ttft_p99_ms",
+                     rep.ttft_p99_s * 1e3, "analytic"))
+    # at the datacenter NIC default (2.5 GB/s/stream) the backing tier
+    # is what differentiates systems once striping removes the wire cap
+    for sys_cfg in (DC_DLA, HC_DLA, MC_DLA_B):
+        rep = simulate_serving(trace, sys_cfg, engines=8, wire_streams=4)
+        rows.append((f"sim/{sys_cfg.name}/s4_nic/ttft_mean_ms",
+                     rep.ttft_mean_s * 1e3,
+                     "analytic, 2.5 GB/s streams: tier-capped"))
+    return rows
+
+
 if __name__ == "__main__":
-    for name, value, note in serve_bench() + router_bench(quick=True):
+    for name, value, note in (serve_bench() + router_bench(quick=True)
+                              + wire_bench(quick=True)):
         print(f"{name},{value},{note}")

@@ -6,6 +6,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 #
 #   PYTHONPATH=src python -m repro.launch.hillclimb --arch llama4-maverick-400b \
 #       --shape train_4k --variants baseline,local,fp8,bits8 --out reports/hc.json
+#
+# Serving-wire sweep (probe_wire MB/s instead of a lowered cell):
+#   PYTHONPATH=src python -m repro.launch.hillclimb --wire \
+#       --variants wire-baseline,wire-streams-4,shm --out reports/hc.json
 
 import argparse            # noqa: E402
 import json                # noqa: E402
@@ -35,16 +39,68 @@ VARIANTS: Dict[str, Dict] = {
     "bits8+accum2": {"opt_bits": 8, "accum": 2},
 }
 
+# serving-wire variants: kwargs overrides for serve/transport.probe_wire.
+# Swept with ``--wire`` instead of a training cell — the wire config joins
+# the same hypothesis log ahead of the global autotuner.
+WIRE_VARIANTS: Dict[str, Dict] = {
+    "wire-baseline": {"transport": "tcp", "streams": 1},
+    "wire-bufsize-4m": {"transport": "tcp", "streams": 1,
+                        "bufsize": 4 << 20},
+    "wire-streams-2": {"transport": "tcp", "streams": 2},
+    "wire-streams-4": {"transport": "tcp", "streams": 4},
+    "wire-streams-8": {"transport": "tcp", "streams": 8},
+    "wire-streams-4+int8": {"transport": "tcp", "streams": 4,
+                            "codec": "int8"},
+    "shm": {"transport": "shm", "streams": 1},
+}
+
+
+def _run_wire(args) -> list:
+    from repro.serve.transport import probe_wire
+    rows = []
+    for name in args.variants.split(","):
+        kw = WIRE_VARIANTS[name]
+        try:
+            r = probe_wire(payload_mb=args.payload_mb, **kw)
+            rows.append({"variant": name, **r})
+            print(f"[{name:>18s}] {r['mb_per_s']:8.1f} MB/s "
+                  f"handoff={r['handoff_ms']:.1f}ms "
+                  f"wire={int(r['wire_bytes'])}B")
+        except Exception as e:  # noqa: BLE001
+            rows.append({"variant": name, "error": str(e)})
+            print(f"[{name:>18s}] FAILED: {e}")
+    return rows
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
     ap.add_argument("--variants", default="baseline,local")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--wire", action="store_true",
+                    help="sweep WIRE_VARIANTS via probe_wire instead of "
+                         "lowering a training cell")
+    ap.add_argument("--payload-mb", type=float, default=64.0,
+                    help="handoff payload for --wire probes")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
+
+    if args.wire:
+        rows = _run_wire(args)
+        if args.out:
+            existing = []
+            if os.path.exists(args.out):
+                with open(args.out) as f:
+                    existing = json.load(f)
+            existing.append({"arch": "wire", "shape": f"{args.payload_mb}mb",
+                             "rows": rows})
+            with open(args.out, "w") as f:
+                json.dump(existing, f, indent=1, default=str)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required without --wire")
 
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     rows = []

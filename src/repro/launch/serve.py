@@ -39,6 +39,14 @@ decode --connect``), ``--drain-after N`` gracefully drains
 dropped sessions), and ``--trace N`` replays N sessions of the synthetic
 diurnal/burst/shared-prefix traffic mix (sim/workloads.py) instead of
 the uniform synthetic requests.
+
+Scale-out wire: ``--wire-streams N`` stripes each handoff page-wise over
+N parallel TCP connections (both the ``--listen`` prefill half and the
+``--connect`` decode worker must agree), ``--wire-bufsize`` sizes the
+socket buffers, ``--transport shm`` takes the zero-copy same-host path
+(payloads through a shared-memory arena, headers over the socket), and
+``--peer HOST:PORT`` / ``--fed-listen PORT`` federate two router
+processes so overflow admissions forward to the peer cluster.
 """
 from __future__ import annotations
 
@@ -125,9 +133,23 @@ def main() -> None:
                     help="placement policy "
                          "(least_loaded/prefix_affinity/round_robin)")
     ap.add_argument("--transport", default=None,
-                    choices=("memory", "tcp"),
+                    choices=("memory", "tcp", "shm"),
                     help="make router engine 0 a wire pair over this "
-                         "byte channel (pages cross as serialized frames)")
+                         "byte channel (pages cross as serialized frames; "
+                         "shm: zero-copy same-host arena, only headers "
+                         "cross the socket)")
+    ap.add_argument("--wire-streams", type=int, default=1,
+                    help="stripe each wire handoff page-wise across N "
+                         "parallel sub-channels (1: single stream)")
+    ap.add_argument("--wire-bufsize", type=int, default=None,
+                    help="SO_SNDBUF/SO_RCVBUF for wire TCP sockets "
+                         "(default: kernel autotuning)")
+    ap.add_argument("--peer", default=None, metavar="HOST:PORT",
+                    help="router mode: federate with the router at this "
+                         "address (forward admissions we cannot place)")
+    ap.add_argument("--fed-listen", type=int, default=None,
+                    help="router mode: accept one federation peer on this "
+                         "port (0: ephemeral, printed)")
     ap.add_argument("--listen", type=int, default=None,
                     help="two-process mode: engine 0 (or --role prefill) "
                          "serves prefill over TCP on this port (0: "
@@ -163,6 +185,14 @@ def main() -> None:
     if args.listen is not None and args.batch is None:
         ap.error("--listen needs explicit --batch/--max-len (the remote "
                  "decode geometry cannot be negotiated over the wire)")
+    if args.wire_streams < 1:
+        ap.error("--wire-streams must be >= 1")
+    if args.wire_streams > 1 and args.transport == "shm":
+        ap.error("--transport shm is header-only on one control socket; "
+                 "striping it is meaningless (drop --wire-streams)")
+    if args.trace and (args.peer or args.fed_listen is not None):
+        ap.error("--trace replays against one cluster; it does not "
+                 "compose with federation (--peer/--fed-listen)")
     logging.basicConfig(level=logging.INFO)
 
     cfg = get_arch(args.arch)
@@ -313,11 +343,21 @@ def main() -> None:
 def _run_decode_worker(model, params, args) -> None:
     """``--role decode --connect HOST:PORT``: the remote decode half."""
     from repro.core.runtime import fmt_bytes
-    from repro.serve.transport import run_decode_worker, tcp_connect
+    from repro.serve.transport import (ShmChannel, run_decode_worker,
+                                       tcp_connect, tcp_connect_striped)
 
     host, _, port = args.connect.rpartition(":")
-    channel = tcp_connect(host or "127.0.0.1", int(port))
-    print(f"decode worker: connected to {args.connect}", flush=True)
+    host = host or "127.0.0.1"
+    if args.wire_streams > 1:
+        channel = tcp_connect_striped(host, int(port), args.wire_streams,
+                                      bufsize=args.wire_bufsize)
+    else:
+        channel = tcp_connect(host, int(port), bufsize=args.wire_bufsize)
+        if args.transport == "shm":
+            channel = ShmChannel(channel)
+    print(f"decode worker: connected to {args.connect} "
+          f"({args.wire_streams} stream(s)"
+          f"{', shm' if args.transport == 'shm' else ''})", flush=True)
     eng = run_decode_worker(model, params, channel, batch=args.batch,
                             max_len=args.max_len, page_size=args.page_size,
                             pages=args.pages, scheduler=args.scheduler,
@@ -334,9 +374,11 @@ def _run_decode_worker(model, params, args) -> None:
 def _run_router(model, params, cfg, quota, args) -> None:
     """``--router``: the cluster front-end over N engine pairs."""
     from repro.serve.quota import QuotaManager
-    from repro.serve.router import Router, replay_trace
-    from repro.serve.transport import (build_wire_pair, build_wire_prefill,
-                                       tcp_accept, tcp_listen)
+    from repro.serve.router import FederatedRouter, Router, replay_trace
+    from repro.serve.transport import (ShmChannel, build_wire_pair,
+                                       build_wire_prefill, tcp_accept,
+                                       tcp_accept_striped, tcp_connect,
+                                       tcp_listen)
 
     shared = quota if isinstance(quota, QuotaManager) else \
         (QuotaManager(dict(quota)) if quota else None)
@@ -347,9 +389,19 @@ def _run_router(model, params, cfg, quota, args) -> None:
     pairs = []
     for i in range(args.engines):
         if i == 0 and args.listen is not None:
-            listener, port = tcp_listen(port=args.listen)
-            print(f"router: engine 0 listening on {port}", flush=True)
-            channel = tcp_accept(listener)
+            listener, port = tcp_listen(port=args.listen,
+                                        backlog=args.wire_streams)
+            # port stays the last token: the two-process smokes (CI and
+            # tests/test_router.py) scrape it off this line
+            print(f"router: engine 0 [{args.wire_streams} stream(s)] "
+                  f"listening on {port}", flush=True)
+            if args.wire_streams > 1:
+                channel = tcp_accept_striped(listener, args.wire_streams,
+                                             bufsize=args.wire_bufsize)
+            else:
+                channel = tcp_accept(listener, bufsize=args.wire_bufsize)
+                if args.transport == "shm":
+                    channel = ShmChannel(channel)
             print("router: decode worker attached", flush=True)
             pairs.append(build_wire_prefill(
                 model, params, channel, max_len=args.max_len,
@@ -359,6 +411,7 @@ def _run_router(model, params, cfg, quota, args) -> None:
         elif i == 0 and args.transport is not None:
             pairs.append(build_wire_pair(model, params,
                                          transport=args.transport,
+                                         streams=args.wire_streams,
                                          seed=0, **pair_kw))
         else:
             pairs.append(build_disagg(model, params,
@@ -366,6 +419,19 @@ def _run_router(model, params, cfg, quota, args) -> None:
                                       max_depth=args.transfer_depth,
                                       seed=2 * i, **pair_kw))
     router = Router(pairs, placement=args.placement)
+    fed = None
+    if args.peer is not None or args.fed_listen is not None:
+        fed = FederatedRouter(router)
+        if args.fed_listen is not None:
+            fed_listener, fed_port = tcp_listen(port=args.fed_listen)
+            print(f"federation: listening on {fed_port}", flush=True)
+            fed.add_peer("peer", tcp_accept(fed_listener,
+                                            bufsize=args.wire_bufsize))
+        else:
+            host, _, port = args.peer.rpartition(":")
+            fed.add_peer("peer", tcp_connect(host or "127.0.0.1", int(port),
+                                             bufsize=args.wire_bufsize))
+        print(f"federation: peered ({fed.describe()})", flush=True)
     print(router.describe())
 
     t0 = time.perf_counter()
@@ -374,25 +440,26 @@ def _run_router(model, params, cfg, quota, args) -> None:
     def on_token(sess, tok):
         first_tok_s.setdefault(sess.uid, time.perf_counter() - t0)
 
+    driver = fed if fed is not None else router
     if args.trace:
         from repro.sim.workloads import TrafficSpec, generate_traffic
         trace = generate_traffic(TrafficSpec(sessions=args.trace,
                                              horizon_s=3600.0))
         done = replay_trace(router, trace, cfg.vocab_size,
                             arrivals_per_step=2.0,
-                            on_step=_drain_hook(args))
+                            on_step=_drain_hook(args, router))
     else:
         rng = np.random.default_rng(0)
         sessions = []
         for i in range(args.requests):
-            sessions.append(router.submit(Request(
+            sessions.append(driver.submit(Request(
                 uid=i,
                 prompt=rng.integers(0, cfg.vocab_size,
                                     size=(args.prompt_len,)
                                     ).astype(np.int32),
                 max_new_tokens=args.new_tokens + i * args.stagger,
                 tenant=f"t{i % max(1, args.tenants)}"), on_token=on_token))
-        done = router.run(on_step=_drain_hook(args))
+        done = driver.run(on_step=_drain_hook(args, router))
     dt = time.perf_counter() - t0
 
     total_new = sum(len(r.out_tokens) for r in done)
@@ -412,6 +479,9 @@ def _run_router(model, params, cfg, quota, args) -> None:
     if any(s.request.deadline is not None
            for s in router.sessions.values()):
         print("slo:", router.slo_report())
+    if fed is not None:
+        print(fed.describe())
+        fed.close()
     for eng in router.engines:
         print(" ", eng.describe())
         if hasattr(eng.pair, "close"):      # wire prefill: BYE the worker
@@ -421,10 +491,10 @@ def _run_router(model, params, cfg, quota, args) -> None:
     assert dropped == 0, f"{dropped} sessions dropped"
 
 
-def _drain_hook(args):
+def _drain_hook(args, router):
     state = {"done": False}
 
-    def hook(router) -> None:
+    def hook(_driver) -> None:
         if (args.drain_after is not None and not state["done"]
                 and router.now >= args.drain_after):
             state["done"] = True

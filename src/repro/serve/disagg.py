@@ -39,8 +39,11 @@ it on the side that retires (or sweeps the cancellation of) the session.
 This is the in-process ("loopback") realization — both roles in one
 interpreter, which is what ``--role both`` serves and what the
 equivalence suite drives.  The handoff unit (page-shaped arrays + a
-pickleable header) is the wire format a cross-host transport would
-serialize; the transport itself is out of scope here.
+pickleable header) is exactly what ``serve/transport.py`` serializes for
+cross-host pairs — one TCP stream, N striped streams, or a same-host
+shared-memory arena all carry this same unit, so everything above this
+paragraph holds unchanged over the wire (the bit-identity suites in
+tests/test_transport.py and tests/test_wire_scaleout.py pin it).
 """
 from __future__ import annotations
 

@@ -666,8 +666,7 @@ class Engine:
                             sess.uid, e)
                 self._release_quota(sess)
                 if not sess.done:
-                    del sess.tokens[:]
-                    sess.length = 0
+                    sess.rewind()
                     self.scheduler.submit(sess)
                 continue
             self.scheduler.on_handoff(sess)

@@ -80,6 +80,10 @@ class QuotaManager:
         self._pages: Dict[str, int] = {}
         self._sessions: Dict[str, int] = {}
         self._charged: Dict[int, Tuple[str, int]] = {}  # uid -> (tenant, pages)
+        # federation overlay: peer name -> usage() snapshot of that peer's
+        # ledger.  ``can_admit`` counts remote holdings too, so a tenant's
+        # quota binds cluster-wide even though each cluster charges locally.
+        self._remote: Dict[str, Dict[str, Dict[str, int]]] = {}
 
     # ------------------------------------------------------------------
     def quota_for(self, tenant: str) -> TenantQuota:
@@ -101,10 +105,12 @@ class QuotaManager:
     def can_admit(self, tenant: str, pages: int) -> bool:
         q = self.quota_for(tenant)
         if q.max_sessions is not None and \
-                self._sessions.get(tenant, 0) + 1 > q.max_sessions:
+                self._sessions.get(tenant, 0) + \
+                self._remote_held(tenant, "sessions") + 1 > q.max_sessions:
             return False
         if q.max_pages is not None and \
-                self._pages.get(tenant, 0) + pages > q.max_pages:
+                self._pages.get(tenant, 0) + \
+                self._remote_held(tenant, "pages") + pages > q.max_pages:
             return False
         return True
 
@@ -142,6 +148,28 @@ class QuotaManager:
 
     def charged_uids(self) -> Tuple[int, ...]:
         return tuple(self._charged)
+
+    # ------------------------------------------------------------------
+    # federation: fold peer clusters' usage snapshots into admission
+    def set_remote_usage(self, peer: str,
+                         usage: Optional[Dict[str, Dict[str, int]]]) -> None:
+        """Install (or with None, drop) one peer cluster's usage snapshot.
+
+        Snapshots arrive over the wire as QUOTA frames; admission then
+        treats remote holdings as if they were local, which keeps one
+        tenant's quota consistent across federated clusters (eventually
+        consistent — bounded by the broadcast cadence)."""
+        if usage is None:
+            self._remote.pop(peer, None)
+        else:
+            self._remote[peer] = {t: dict(u) for t, u in usage.items()}
+
+    def _remote_held(self, tenant: str, key: str) -> int:
+        return sum(snap.get(tenant, {}).get(key, 0)
+                   for snap in self._remote.values())
+
+    def remote_peers(self) -> Tuple[str, ...]:
+        return tuple(self._remote)
 
     # ------------------------------------------------------------------
     def usage(self) -> Dict[str, Dict[str, int]]:

@@ -108,6 +108,18 @@ class Session:
             self.emitted = len(self.tokens)
             self.on_token(self, token)
 
+    def rewind(self) -> None:
+        """Reset to freshly-queued for a requeue/replay.
+
+        Clears the token stream in place (preserving the
+        ``Request.out_tokens`` alias) and drops the cache residency; the
+        ``emitted`` high-water mark deliberately survives so a replayed
+        session never streams the same position to the client twice."""
+        del self.tokens[:]
+        self.length = 0
+        self.slot = None
+        self.state = SessionState.QUEUED
+
     def finish(self, reason: str) -> None:
         self.state = (SessionState.CANCELLED if reason == FINISH_CANCELLED
                       else SessionState.FINISHED)

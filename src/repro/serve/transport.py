@@ -51,6 +51,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import pickle
+import queue
 import select
 import socket
 import struct
@@ -75,15 +76,22 @@ from repro.serve.session import FINISH_CANCELLED, Session, SessionState
 log = logging.getLogger(__name__)
 
 #: bump on any change to the frame layout or the HANDOFF payload schema
-SCHEMA_VERSION = 1
+#: (v2: striped page frames, K_PAGE/K_ABORT/K_HELLO, federation kinds)
+SCHEMA_VERSION = 2
 
 _MAGIC = b"KW"
 _HEADER = struct.Struct(">2sHBI")        # magic, schema, kind, payload len
 _CRC = struct.Struct(">I")
+_PAGE_SUB = struct.Struct(">II")         # meta len, out-of-band buffer count
 
-K_HANDOFF, K_ACK, K_CANCEL, K_RESULT, K_BYE = range(1, 6)
+(K_HANDOFF, K_ACK, K_CANCEL, K_RESULT, K_BYE,
+ K_PAGE, K_ABORT, K_HELLO,
+ K_FWD, K_FWD_RESULT, K_FWD_REJECT, K_LOAD, K_QUOTA, K_DRAIN) = range(1, 15)
 _KIND_NAMES = {K_HANDOFF: "HANDOFF", K_ACK: "ACK", K_CANCEL: "CANCEL",
-               K_RESULT: "RESULT", K_BYE: "BYE"}
+               K_RESULT: "RESULT", K_BYE: "BYE", K_PAGE: "PAGE",
+               K_ABORT: "ABORT", K_HELLO: "HELLO", K_FWD: "FWD",
+               K_FWD_RESULT: "FWD_RESULT", K_FWD_REJECT: "FWD_REJECT",
+               K_LOAD: "LOAD", K_QUOTA: "QUOTA", K_DRAIN: "DRAIN"}
 
 
 class TransportError(RuntimeError):
@@ -112,26 +120,44 @@ def _read_exact(channel: "Channel", n: int, *, started: bool,
     (``backoff * 2**attempt``, no sleep after the terminal attempt) and
     exhausts into :class:`TransportError` — a frame, once begun, must
     complete."""
-    buf = bytearray()
+    recv_into = getattr(channel, "recv_into", None)
+    buf = bytearray(n) if recv_into is not None else bytearray()
+    view = memoryview(buf) if recv_into is not None else None
+    pos = 0
     attempt = 0
-    while len(buf) < n:
-        chunk = channel.recv(n - len(buf))
-        if chunk:
-            buf += chunk
-            attempt = 0
-            continue
-        if not buf and not started:
+    while pos < n:
+        if recv_into is not None:
+            got = recv_into(view[pos:])         # straight into the buffer
+            if got:
+                pos += got
+                attempt = 0
+                continue
+        else:
+            chunk = channel.recv(n - pos)
+            if chunk:
+                buf += chunk
+                pos += len(chunk)
+                attempt = 0
+                continue
+        if pos == 0 and not started:
             return None
         if channel.closed and attempt >= retries:
             raise TransportError(
-                f"channel closed mid-frame: got {len(buf)}/{n} bytes")
+                f"channel closed mid-frame: got {pos}/{n} bytes")
         if attempt >= retries:
             raise TransportError(
-                f"partial read: {len(buf)}/{n} bytes after "
+                f"partial read: {pos}/{n} bytes after "
                 f"{retries + 1} attempts")
-        sleep(backoff * (2 ** attempt))
+        # a channel that can block on readability (TCP: select) waits at
+        # the kernel instead of sleeping — mid-frame latency is then the
+        # data's arrival time, not the backoff schedule
+        waiter = getattr(channel, "wait_readable", None)
+        if waiter is not None:
+            waiter(backoff * (2 ** attempt))
+        else:
+            sleep(backoff * (2 ** attempt))
         attempt += 1
-    return bytes(buf)
+    return buf          # bytearray: skips a full copy on multi-MB frames
 
 
 def recv_frame(channel: "Channel", *, retries: int = 10,
@@ -141,32 +167,56 @@ def recv_frame(channel: "Channel", *, retries: int = 10,
 
     Validation order is deliberate: magic, then schema, then CRC — a
     mismatched schema or corrupted frame raises :class:`WireFormatError`
-    with a clear message instead of handing garbage to ``pickle``."""
-    head = _read_exact(channel, _HEADER.size, started=False,
-                       retries=retries, backoff=backoff, sleep=sleep)
-    if head is None:
-        return None
-    magic, schema, kind, n = _HEADER.unpack(head)
-    if magic != _MAGIC:
-        raise WireFormatError(
-            f"bad frame magic {magic!r} (want {_MAGIC!r}): not a KV wire "
-            "frame, refusing to unpickle")
-    if schema != SCHEMA_VERSION:
-        raise WireFormatError(
-            f"wire schema v{schema} from peer, this build speaks "
-            f"v{SCHEMA_VERSION} — upgrade the older side (refusing to "
-            "unpickle a mismatched layout)")
-    payload = _read_exact(channel, n, started=True, retries=retries,
-                          backoff=backoff, sleep=sleep)
-    (crc,) = _CRC.unpack(_read_exact(channel, _CRC.size, started=True,
-                                     retries=retries, backoff=backoff,
-                                     sleep=sleep))
-    want = zlib.crc32(payload, zlib.crc32(head)) & 0xFFFFFFFF
-    if crc != want:
-        raise WireFormatError(
-            f"frame CRC mismatch (got {crc:#010x}, computed {want:#010x}): "
-            "corrupted frame, refusing to unpickle")
-    return kind, payload
+    with a clear message instead of handing garbage to ``pickle``.
+
+    A failure mid-frame (exhausted retries with a frame begun, or a
+    validation error) leaves the byte stream desynchronized: the next
+    read would parse payload bytes as a header.  The channel is therefore
+    *poisoned* — every later ``recv_frame`` on it fails fast with the
+    original reason instead of returning garbage frames."""
+    reason = getattr(channel, "poisoned", None)
+    if reason is not None:
+        raise TransportError(
+            f"channel poisoned by an earlier framing failure ({reason}); "
+            "the byte stream is desynchronized — reconnect required")
+    try:
+        head = _read_exact(channel, _HEADER.size, started=False,
+                           retries=retries, backoff=backoff, sleep=sleep)
+        if head is None:
+            return None
+        magic, schema, kind, n = _HEADER.unpack(head)
+        if magic != _MAGIC:
+            raise WireFormatError(
+                f"bad frame magic {magic!r} (want {_MAGIC!r}): not a KV wire "
+                "frame, refusing to unpickle")
+        if schema != SCHEMA_VERSION:
+            raise WireFormatError(
+                f"wire schema v{schema} from peer, this build speaks "
+                f"v{SCHEMA_VERSION} — upgrade the older side (refusing to "
+                "unpickle a mismatched layout)")
+        payload = _read_exact(channel, n, started=True, retries=retries,
+                              backoff=backoff, sleep=sleep)
+        (crc,) = _CRC.unpack(_read_exact(channel, _CRC.size, started=True,
+                                         retries=retries, backoff=backoff,
+                                         sleep=sleep))
+        # bulk K_PAGE frames checksum with Adler-32 (zlib's own stream
+        # check — ~2x CRC32 throughput, same burst detection at MB
+        # scale); control/header frames keep CRC32
+        if kind == K_PAGE:
+            want = zlib.adler32(payload, zlib.adler32(head)) & 0xFFFFFFFF
+        else:
+            want = zlib.crc32(payload, zlib.crc32(head)) & 0xFFFFFFFF
+        if crc != want:
+            raise WireFormatError(
+                f"frame CRC mismatch (got {crc:#010x}, computed {want:#010x}): "
+                "corrupted frame, refusing to unpickle")
+        return kind, payload
+    except (WireFormatError, TransportError) as e:
+        try:
+            channel.poisoned = str(e)
+        except AttributeError:
+            pass
+        raise
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +226,12 @@ class Channel:
 
     ``send`` writes the whole buffer or raises :class:`TransportError`;
     ``recv(n)`` returns *up to* n bytes — possibly fewer, possibly ``b""``
-    when nothing is buffered (framing handles reassembly + retry)."""
+    when nothing is buffered (framing handles reassembly + retry).
+
+    ``poisoned`` is set by :func:`recv_frame` when a framing failure
+    leaves the byte stream desynchronized; later reads fail fast."""
+
+    poisoned: Optional[str] = None
 
     def send(self, data: bytes) -> None:
         raise NotImplementedError
@@ -254,11 +309,20 @@ def memory_pair(max_chunk: Optional[int] = None
 
 
 class TcpChannel(Channel):
-    """A connected TCP socket as a Channel (non-blocking reads)."""
+    """A connected TCP socket as a Channel (non-blocking reads).
 
-    def __init__(self, sock: socket.socket):
+    ``TCP_NODELAY`` is always set (control frames must not sit behind
+    Nagle); ``bufsize`` sizes ``SO_SNDBUF``/``SO_RCVBUF`` so a multi-MB
+    handoff is not throttled by default kernel buffers (the
+    ``--wire-bufsize`` flag; measured in the ``BENCH_wire`` sweep)."""
+
+    def __init__(self, sock: socket.socket, *,
+                 bufsize: Optional[int] = None):
         sock.setblocking(True)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        if bufsize:
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, int(bufsize))
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, int(bufsize))
         self.sock = sock
         self._closed = False
         self.bytes_sent = 0
@@ -288,6 +352,34 @@ class TcpChannel(Channel):
             self._closed = True      # orderly peer shutdown
         return data
 
+    def recv_into(self, view: memoryview) -> int:
+        """Read directly into ``view`` (zero intermediate copy); 0 when
+        nothing is buffered."""
+        if self._closed:
+            return 0
+        try:
+            ready, _, _ = select.select([self.sock], [], [], 0)
+            if not ready:
+                return 0
+            got = self.sock.recv_into(view)
+        except OSError as e:
+            self._closed = True
+            raise TransportError(f"socket recv failed: {e}") from e
+        if got == 0:
+            self._closed = True      # readable + 0 bytes: peer shutdown
+        return got
+
+    def wait_readable(self, timeout: float) -> bool:
+        """Block until data is readable (or timeout); lets frame reads
+        park at the kernel instead of backoff-sleeping."""
+        if self._closed:
+            return False
+        try:
+            ready, _, _ = select.select([self.sock], [], [], timeout)
+        except OSError:
+            return False
+        return bool(ready)
+
     def close(self) -> None:
         self._closed = True
         try:
@@ -300,17 +392,18 @@ class TcpChannel(Channel):
         return self._closed
 
 
-def tcp_listen(host: str = "127.0.0.1", port: int = 0
-               ) -> Tuple[socket.socket, int]:
+def tcp_listen(host: str = "127.0.0.1", port: int = 0, *,
+               backlog: int = 1) -> Tuple[socket.socket, int]:
     """Bind a listener (port 0: ephemeral); returns (socket, bound port)."""
     srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
     srv.bind((host, port))
-    srv.listen(1)
+    srv.listen(max(1, backlog))
     return srv, srv.getsockname()[1]
 
 
-def tcp_accept(listener: socket.socket, timeout: float = 60.0) -> TcpChannel:
+def tcp_accept(listener: socket.socket, timeout: float = 60.0, *,
+               bufsize: Optional[int] = None) -> TcpChannel:
     listener.settimeout(timeout)
     try:
         conn, _ = listener.accept()
@@ -318,17 +411,19 @@ def tcp_accept(listener: socket.socket, timeout: float = 60.0) -> TcpChannel:
         raise TransportError(f"no peer connected within {timeout}s") from e
     finally:
         listener.close()
-    return TcpChannel(conn)
+    return TcpChannel(conn, bufsize=bufsize)
 
 
 def tcp_connect(host: str, port: int, *, retries: int = 20,
-                backoff: float = 0.1, sleep=time.sleep) -> TcpChannel:
+                backoff: float = 0.1, sleep=time.sleep,
+                bufsize: Optional[int] = None) -> TcpChannel:
     """Connect with retry — the worker side may start before the listener."""
     err: Optional[Exception] = None
     for attempt in range(retries + 1):
         try:
             return TcpChannel(socket.create_connection((host, port),
-                                                       timeout=30.0))
+                                                       timeout=30.0),
+                              bufsize=bufsize)
         except OSError as e:
             err = e
             if attempt < retries:
@@ -336,14 +431,81 @@ def tcp_connect(host: str, port: int, *, retries: int = 20,
     raise TransportError(f"connect to {host}:{port} failed: {err}") from err
 
 
-def tcp_pair() -> Tuple[TcpChannel, TcpChannel]:
+def tcp_pair(*, bufsize: Optional[int] = None
+             ) -> Tuple[TcpChannel, TcpChannel]:
     """A connected loopback TCP pair in one process (real sockets)."""
     srv, port = tcp_listen()
     cli = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     cli.connect(("127.0.0.1", port))
     conn, _ = srv.accept()
     srv.close()
-    return TcpChannel(conn), TcpChannel(cli)
+    return TcpChannel(conn, bufsize=bufsize), TcpChannel(cli, bufsize=bufsize)
+
+
+def tcp_accept_many(listener: socket.socket, n: int,
+                    timeout: float = 60.0, *,
+                    bufsize: Optional[int] = None) -> List[TcpChannel]:
+    """Accept ``n`` stripe connections; each announces its stripe index
+    with a HELLO frame, so accept order need not match connect order."""
+    listener.settimeout(timeout)
+    chans: List[Optional[TcpChannel]] = [None] * n
+    deadline = time.monotonic() + timeout
+    try:
+        for _ in range(n):
+            conn, _ = listener.accept()
+            ch = TcpChannel(conn, bufsize=bufsize)
+            got = None
+            while got is None:
+                if time.monotonic() > deadline:
+                    raise TransportError(
+                        f"stripe HELLO did not arrive within {timeout}s")
+                got = recv_frame(ch, retries=4, backoff=0.01)
+                if got is None:
+                    time.sleep(0.01)
+            kind, payload = got
+            if kind != K_HELLO:
+                raise TransportError(
+                    f"expected HELLO on a new stripe connection, got "
+                    f"{_KIND_NAMES.get(kind, kind)}")
+            hello = pickle.loads(payload)
+            if int(hello.get("streams", 0)) != n:
+                raise TransportError(
+                    f"stripe-count mismatch: peer connected with "
+                    f"{hello.get('streams')} streams, this side expects {n}")
+            idx = int(hello["stripe"])
+            if not 0 <= idx < n or chans[idx] is not None:
+                raise TransportError(f"bad or duplicate stripe index {idx}")
+            chans[idx] = ch
+    except socket.timeout as e:
+        raise TransportError(
+            f"{sum(c is not None for c in chans)}/{n} stripes connected "
+            f"within {timeout}s") from e
+    finally:
+        listener.close()
+    return [c for c in chans if c is not None]
+
+
+def tcp_accept_striped(listener: socket.socket, streams: int,
+                       timeout: float = 60.0, *,
+                       bufsize: Optional[int] = None) -> "StripedChannel":
+    return StripedChannel(tcp_accept_many(listener, streams, timeout,
+                                          bufsize=bufsize))
+
+
+def tcp_connect_striped(host: str, port: int, streams: int, *,
+                        retries: int = 20, backoff: float = 0.1,
+                        sleep=time.sleep,
+                        bufsize: Optional[int] = None) -> "StripedChannel":
+    """Open ``streams`` connections to one listener, announcing each
+    stripe index with a HELLO frame."""
+    chans: List[TcpChannel] = []
+    for i in range(streams):
+        ch = tcp_connect(host, port, retries=retries, backoff=backoff,
+                         sleep=sleep, bufsize=bufsize)
+        ch.send(pack_frame(K_HELLO, pickle.dumps(
+            {"stripe": i, "streams": streams}, pickle.HIGHEST_PROTOCOL)))
+        chans.append(ch)
+    return StripedChannel(chans)
 
 
 # ---------------------------------------------------------------------------
@@ -431,6 +593,710 @@ def _decode_tree(tree) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# message-level channels: striped multi-stream + zero-copy shared memory.
+#
+# These speak whole messages instead of bytes (``send_msg`` /
+# ``send_handoff`` / ``poll_msg``); WireSender/WireReceiver detect that
+# surface via the ``_send_msg``/``_send_handoff``/``_poll_msg`` helpers
+# below and skip their own framing.
+def _send_msg(channel, kind: int, msg: Any) -> int:
+    """Send one message; returns the exact bytes that hit the wire."""
+    if hasattr(channel, "send_msg"):
+        return channel.send_msg(kind, msg)
+    frame = pack_frame(kind, pickle.dumps(msg, pickle.HIGHEST_PROTOCOL))
+    channel.send(frame)
+    return len(frame)
+
+
+def _send_handoff_msg(channel, msg: Dict[str, Any],
+                      wired_pages: List[Any]) -> int:
+    """Send one HANDOFF (header ``msg`` without pages + the wired page
+    trees); single-stream channels carry the pages inline in the header
+    frame exactly as the v1 wire did."""
+    if hasattr(channel, "send_handoff"):
+        return channel.send_handoff(msg, wired_pages)
+    whole = dict(msg)
+    whole["pages"] = wired_pages
+    return _send_msg(channel, K_HANDOFF, whole)
+
+
+def _poll_msg(channel, *, retries: int = 10, backoff: float = 0.005,
+              sleep=time.sleep) -> Optional[Tuple[int, Any]]:
+    """Receive one whole message; None when nothing is deliverable."""
+    if hasattr(channel, "poll_msg"):
+        return channel.poll_msg()
+    got = recv_frame(channel, retries=retries, backoff=backoff, sleep=sleep)
+    if got is None:
+        return None
+    kind, payload = got
+    return kind, pickle.loads(payload)
+
+
+def _send_page_frame(channel: Channel, msg: Dict[str, Any]) -> int:
+    """Send one K_PAGE frame with pickle-5 out-of-band buffers.
+
+    Payload layout: ``meta_len u32 | nbufs u32 | nbufs × len u64 | meta
+    (pickle) | buffers``.  The page's tensor bytes go to the channel as
+    raw buffer views — no intermediate pickle copy, no frame join — and
+    the checksum folds incrementally over each segment (Adler-32: zlib's
+    stream check, ~2x CRC32 throughput on the bulk bytes that dominate a
+    handoff), so a stripe worker spends its time on checksum + syscalls
+    instead of memcpy."""
+    bufs: List[memoryview] = []
+    meta = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL,
+                        buffer_callback=lambda b: bufs.append(b.raw()))
+    sizes = [b.nbytes for b in bufs]
+    sub = _PAGE_SUB.pack(len(meta), len(bufs)) + \
+        struct.pack(f">{len(bufs)}Q", *sizes)
+    total = len(sub) + len(meta) + sum(sizes)
+    head = _HEADER.pack(_MAGIC, SCHEMA_VERSION, K_PAGE, total)
+    crc = zlib.adler32(meta, zlib.adler32(sub, zlib.adler32(head)))
+    for mv in bufs:
+        crc = zlib.adler32(mv, crc)
+    channel.send(head + sub + meta)
+    for mv in bufs:
+        channel.send(mv)
+    channel.send(_CRC.pack(crc & 0xFFFFFFFF))
+    return _HEADER.size + total + _CRC.size
+
+
+def _unpack_page_payload(payload: bytes) -> Dict[str, Any]:
+    meta_len, nbufs = _PAGE_SUB.unpack_from(payload, 0)
+    off = _PAGE_SUB.size
+    sizes = struct.unpack_from(f">{nbufs}Q", payload, off)
+    off += 8 * nbufs
+    view = memoryview(payload)
+    meta = view[off:off + meta_len]
+    off += meta_len
+    bufs = []
+    for s in sizes:
+        bufs.append(view[off:off + s])
+        off += s
+    return pickle.loads(meta, buffers=bufs)
+
+
+class _SendBatch:
+    """Completion barrier for one multi-frame send across stripes."""
+
+    def __init__(self, n: int):
+        self._cv = threading.Condition()
+        self._left = n
+        self.bytes = 0
+        self.errors: List[BaseException] = []
+
+    def done(self, nbytes: int, err: Optional[BaseException] = None) -> None:
+        with self._cv:
+            if err is None:
+                self.bytes += nbytes
+            else:
+                self.errors.append(err)
+            self._left -= 1
+            if self._left <= 0:
+                self._cv.notify_all()
+
+    def wait(self, timeout: float = 300.0) -> None:
+        with self._cv:
+            if not self._cv.wait_for(lambda: self._left <= 0, timeout):
+                self.errors.append(TransportError(
+                    f"stripe send stalled for {timeout}s"))
+
+
+class _StripeTx(threading.Thread):
+    """Per-stripe send worker: pickles, frames, CRCs, writes its stripe."""
+
+    def __init__(self, index: int, channel: Channel):
+        super().__init__(name=f"kv-wire-tx{index}", daemon=True)
+        self.channel = channel
+        self.jobs: "queue.Queue" = queue.Queue()
+        self.start()
+
+    def run(self) -> None:
+        while True:
+            job = self.jobs.get()
+            if job is None:
+                return
+            kind, msg, batch = job
+            try:
+                if kind == K_PAGE:
+                    batch.done(_send_page_frame(self.channel, msg))
+                else:
+                    frame = pack_frame(
+                        kind, pickle.dumps(msg, pickle.HIGHEST_PROTOCOL))
+                    self.channel.send(frame)
+                    batch.done(len(frame))
+            except BaseException as e:            # surfaced via the batch
+                batch.done(0, err=e)
+
+    def stop(self) -> None:
+        self.jobs.put(None)
+
+
+class _StripeRx(threading.Thread):
+    """Per-stripe receive worker: reads, validates and unpickles frames
+    into the shared inbox, so CRC + decode parallelize across stripes."""
+
+    def __init__(self, index: int, channel: Channel, inbox, cond, *,
+                 retries: int, backoff: float, poll_sleep: float):
+        super().__init__(name=f"kv-wire-rx{index}", daemon=True)
+        self.index = index
+        self.channel = channel
+        self.inbox = inbox
+        self.cond = cond
+        self.retries, self.backoff = retries, backoff
+        self.poll_sleep = poll_sleep
+        self.failed: Optional[BaseException] = None
+        self._halt = False
+        self.start()
+
+    def run(self) -> None:
+        while not self._halt:
+            try:
+                got = recv_frame(self.channel, retries=self.retries,
+                                 backoff=self.backoff)
+                if got is None:
+                    if self.channel.closed:
+                        return
+                    waiter = getattr(self.channel, "wait_readable", None)
+                    if waiter is not None:
+                        waiter(self.poll_sleep)
+                    else:
+                        time.sleep(self.poll_sleep)
+                    continue
+                kind, payload = got
+                msg = (_unpack_page_payload(payload) if kind == K_PAGE
+                       else pickle.loads(payload))
+            except BaseException as e:
+                self.failed = e
+                with self.cond:
+                    self.cond.notify_all()
+                return
+            with self.cond:
+                self.inbox.append((self.index, kind, msg))
+                self.cond.notify_all()
+
+    def halt(self) -> None:
+        self._halt = True
+
+
+class StripedChannel:
+    """Bandwidth-scalable frame fan-out over N byte sub-channels.
+
+    Each HANDOFF shards page-wise: the header rides stripe 0 — the same
+    FIFO every control frame (ACK/CANCEL/RESULT/BYE) uses, so ordered
+    delivery of control traffic is preserved — and page ``seq`` goes to
+    stripe ``seq % N`` as a K_PAGE frame tagged ``(msg_id, seq)``.  The
+    receive side reassembles by sequence number and delivers messages
+    strictly in stripe-0 arrival order, which makes the striped wire
+    observationally identical to the single-stream one (the bit-identity
+    suite pins this).  Per-stripe send/recv worker threads carry the
+    pickle/CRC work, and K_PAGE frames use pickle-5 out-of-band buffers
+    so page bytes reach the socket without an intermediate copy.
+
+    A stripe dying mid-handoff surfaces :class:`TransportError` from
+    ``send_handoff`` (the engine requeues the session) and a best-effort
+    ABORT on stripe 0 tells the peer to drop the partial reassembly; if
+    stripe 0 itself is dead the channel poisons and fails fast."""
+
+    def __init__(self, channels: Sequence[Channel], *, retries: int = 10,
+                 backoff: float = 0.005, poll_sleep: float = 0.002):
+        if not channels:
+            raise ValueError("need at least one stripe channel")
+        self.stripes = list(channels)
+        self.poisoned: Optional[str] = None
+        self._closed = False
+        self._send_id = 0
+        self._cond = threading.Condition()
+        self._inbox: Deque[Tuple[int, int, Any]] = deque()
+        self._ordered: Deque[Tuple[int, Any]] = deque()
+        self._partial: Dict[int, Dict[int, Any]] = {}   # msg_id -> seq->page
+        self._aborted: set = set()
+        self._tx = [_StripeTx(i, ch) for i, ch in enumerate(self.stripes)]
+        self._rx = [_StripeRx(i, ch, self._inbox, self._cond,
+                              retries=retries, backoff=backoff,
+                              poll_sleep=poll_sleep)
+                    for i, ch in enumerate(self.stripes)]
+
+    # ------------------------------------------------------------------
+    @property
+    def streams(self) -> int:
+        return len(self.stripes)
+
+    @property
+    def bytes_sent(self) -> int:
+        return sum(getattr(ch, "bytes_sent", 0) for ch in self.stripes)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed or any(ch.closed for ch in self.stripes)
+
+    def _fail_fast(self) -> None:
+        if self.poisoned is not None:
+            raise TransportError(
+                f"striped channel poisoned: {self.poisoned}")
+        for rx in self._rx:
+            if rx.failed is not None:
+                self.poisoned = (f"stripe {rx.index} receive failed: "
+                                 f"{rx.failed}")
+                raise TransportError(self.poisoned) from rx.failed
+
+    # ------------------------------------------------------------------
+    def send_msg(self, kind: int, msg: Any) -> int:
+        self._fail_fast()
+        batch = _SendBatch(1)
+        self._tx[0].jobs.put((kind, msg, batch))
+        batch.wait()
+        if batch.errors:
+            err = TransportError(f"stripe 0 send failed: {batch.errors[0]}")
+            err.wire_bytes = batch.bytes
+            raise err from batch.errors[0]
+        return batch.bytes
+
+    def send_handoff(self, msg: Dict[str, Any],
+                     wired_pages: List[Any]) -> int:
+        self._fail_fast()
+        self._send_id += 1
+        mid = self._send_id
+        header = dict(msg)
+        header["pages"] = []
+        header["striped"] = {"msg_id": mid, "n_pages": len(wired_pages)}
+        batch = _SendBatch(1 + len(wired_pages))
+        self._tx[0].jobs.put((K_HANDOFF, header, batch))
+        for seq, page in enumerate(wired_pages):
+            self._tx[seq % len(self._tx)].jobs.put(
+                (K_PAGE, {"msg_id": mid, "seq": seq, "page": page}, batch))
+        batch.wait()
+        if batch.errors:
+            sent = batch.bytes
+            ab = _SendBatch(1)
+            self._tx[0].jobs.put((K_ABORT, {"msg_id": mid}, ab))
+            ab.wait(timeout=10.0)
+            if ab.errors:
+                self.poisoned = (f"stripe 0 dead while aborting a partial "
+                                 f"handoff: {ab.errors[0]}")
+            else:
+                sent += ab.bytes
+            err = TransportError(
+                f"striped handoff failed mid-send: {batch.errors[0]}")
+            err.wire_bytes = sent
+            raise err from batch.errors[0]
+        return batch.bytes
+
+    # ------------------------------------------------------------------
+    def poll_msg(self) -> Optional[Tuple[int, Any]]:
+        self._fail_fast()
+        with self._cond:
+            items = list(self._inbox)
+            self._inbox.clear()
+        for _idx, kind, msg in items:
+            if kind == K_PAGE:
+                mid = msg["msg_id"]
+                if mid in self._aborted:
+                    continue
+                self._partial.setdefault(mid, {})[msg["seq"]] = msg["page"]
+            else:
+                self._ordered.append((kind, msg))
+        while self._ordered:
+            kind, msg = self._ordered[0]
+            if kind == K_ABORT:
+                self._ordered.popleft()
+                self._drop(msg["msg_id"])
+                continue
+            meta = msg.get("striped") if kind == K_HANDOFF else None
+            if meta is not None:
+                mid, n = meta["msg_id"], meta["n_pages"]
+                got = self._partial.get(mid, {})
+                if len(got) < n:
+                    if self._pending_abort(mid):
+                        self._ordered.popleft()
+                        self._drop(mid)
+                        continue
+                    return None       # wait for the rest of the pages
+                self._ordered.popleft()
+                self._partial.pop(mid, None)
+                msg = dict(msg)
+                msg["pages"] = [got[i] for i in range(n)]
+                del msg["striped"]
+                return kind, msg
+            self._ordered.popleft()
+            return kind, msg
+        return None
+
+    def _pending_abort(self, mid: int) -> bool:
+        found = next((item for item in self._ordered
+                      if item[0] == K_ABORT and item[1]["msg_id"] == mid),
+                     None)
+        if found is None:
+            return False
+        self._ordered.remove(found)
+        return True
+
+    def _drop(self, mid: int) -> None:
+        self._partial.pop(mid, None)
+        self._aborted.add(mid)
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        self._closed = True
+        for tx in self._tx:
+            tx.stop()
+        for rx in self._rx:
+            rx.halt()
+        for ch in self.stripes:
+            ch.close()
+        for t in (*self._tx, *self._rx):
+            t.join(timeout=5.0)
+
+    def describe(self) -> str:
+        return f"striped[{len(self.stripes)} stripes]"
+
+
+def striped_pair(streams: int, *, base: str = "memory",
+                 max_chunk: Optional[int] = None,
+                 bufsize: Optional[int] = None
+                 ) -> Tuple[StripedChannel, StripedChannel]:
+    """A connected striped pair over ``streams`` sub-channel pairs."""
+    pairs = []
+    for _ in range(streams):
+        if base == "memory":
+            pairs.append(memory_pair(max_chunk))
+        elif base == "tcp":
+            pairs.append(tcp_pair(bufsize=bufsize))
+        else:
+            pairs.append(build_transport(base))
+    return (StripedChannel([p[0] for p in pairs]),
+            StripedChannel([p[1] for p in pairs]))
+
+
+# ---------------------------------------------------------------------------
+# zero-copy same-host path: payload leaves land in a shared-memory arena
+DEFAULT_ARENA_BYTES = 64 << 20
+
+
+class ShmArena:
+    """A shared-memory block with a first-fit free-list allocator.
+
+    The *sender* owns the arena: it creates the segment, allocates and
+    writes payload blocks, and frees a handoff's blocks when the ACK for
+    that handoff arrives (adoption or discard both ACK, so cancel-in-
+    transit cannot leak arena space).  The receiver attaches by name and
+    only ever reads."""
+
+    def __init__(self, nbytes: Optional[int] = None, *,
+                 name: Optional[str] = None):
+        from multiprocessing import shared_memory
+        if name is None:
+            self.shm = shared_memory.SharedMemory(create=True,
+                                                  size=int(nbytes))
+            self.owner = True
+        else:
+            # the creator owns cleanup; suppress the attach-side
+            # resource_tracker registration so unlink happens exactly once
+            from multiprocessing import resource_tracker
+            orig_register = resource_tracker.register
+            resource_tracker.register = lambda *a, **k: None
+            try:
+                self.shm = shared_memory.SharedMemory(name=name)
+            finally:
+                resource_tracker.register = orig_register
+            self.owner = False
+        self.size = self.shm.size
+        self._lock = threading.Lock()
+        self._free: List[Tuple[int, int]] = [(0, self.size)]
+
+    @property
+    def name(self) -> str:
+        return self.shm.name
+
+    @staticmethod
+    def _align(n: int) -> int:
+        return (int(n) + 63) & ~63
+
+    def alloc(self, nbytes: int) -> Optional[int]:
+        n = self._align(nbytes)
+        with self._lock:
+            for i, (off, sz) in enumerate(self._free):
+                if sz >= n:
+                    if sz == n:
+                        self._free.pop(i)
+                    else:
+                        self._free[i] = (off + n, sz - n)
+                    return off
+        return None
+
+    def free(self, offset: int, nbytes: int) -> None:
+        n = self._align(nbytes)
+        with self._lock:
+            self._free.append((offset, n))
+            self._free.sort()
+            merged: List[List[int]] = []
+            for off, sz in self._free:
+                if merged and merged[-1][0] + merged[-1][1] == off:
+                    merged[-1][1] += sz
+                else:
+                    merged.append([off, sz])
+            self._free = [(off, sz) for off, sz in merged]
+
+    def write(self, offset: int, arr: np.ndarray) -> None:
+        flat = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+        dst = np.frombuffer(self.shm.buf, np.uint8, count=flat.nbytes,
+                            offset=offset)
+        np.copyto(dst, flat)
+
+    def read(self, offset: int, nbytes: int, dtype: str,
+             shape: Tuple[int, ...]) -> np.ndarray:
+        src = np.frombuffer(self.shm.buf, np.uint8, count=int(nbytes),
+                            offset=offset)
+        return src.copy().view(np.dtype(dtype)).reshape(shape)
+
+    def free_bytes(self) -> int:
+        with self._lock:
+            return sum(sz for _, sz in self._free)
+
+    def close(self) -> None:
+        try:
+            self.shm.close()
+            if self.owner:
+                self.shm.unlink()
+        except Exception:
+            pass
+
+
+@dataclasses.dataclass
+class _ShmLeaf:
+    """One tensor leaf parked in the arena: only this descriptor (plus
+    the tiny codec scale) crosses the control socket."""
+
+    offset: int
+    nbytes: int
+    shape: Tuple[int, ...]
+    data_dtype: str
+    scale: Optional[np.ndarray]
+    dtype: str
+    codec: Optional[str]
+
+
+class ShmChannel:
+    """Zero-copy same-host transport endpoint (message-level).
+
+    HANDOFF page leaves are copied into a shared-memory arena; only the
+    header + arena offsets cross the control channel, so ``kv_wire``
+    meters header bytes while ``kv_publish``/``kv_adopt`` still reconcile
+    the tensor bytes.  The receiver attaches the arena by name from the
+    first header (works across processes on one host) and copies leaves
+    out at delivery; the sender frees a handoff's blocks when its ACK
+    comes back.  If the arena is full, leaves ship inline in the header
+    (counted in ``arena_spills``) — correctness never depends on arena
+    headroom."""
+
+    def __init__(self, control: Channel, *,
+                 arena_bytes: int = DEFAULT_ARENA_BYTES,
+                 retries: int = 10, backoff: float = 0.005,
+                 sleep=time.sleep):
+        self.control = control
+        self.arena_bytes = int(arena_bytes)
+        self._arena: Optional[ShmArena] = None        # lazily on first send
+        self._peer_arena: Optional[ShmArena] = None   # attached on recv
+        self._allocs: Dict[int, List[Tuple[int, int]]] = {}  # uid -> blocks
+        self._retries, self._backoff, self._sleep = retries, backoff, sleep
+        self.arena_spills = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def poisoned(self) -> Optional[str]:
+        return getattr(self.control, "poisoned", None)
+
+    @property
+    def bytes_sent(self) -> int:
+        return getattr(self.control, "bytes_sent", 0)
+
+    @property
+    def closed(self) -> bool:
+        return self.control.closed
+
+    @property
+    def arena(self) -> Optional[ShmArena]:
+        return self._arena
+
+    # ------------------------------------------------------------------
+    def send_msg(self, kind: int, msg: Any) -> int:
+        frame = pack_frame(kind, pickle.dumps(msg, pickle.HIGHEST_PROTOCOL))
+        self.control.send(frame)
+        return len(frame)
+
+    def send_handoff(self, msg: Dict[str, Any],
+                     wired_pages: List[Any]) -> int:
+        if self._arena is None:
+            need = sum(leaf.data.nbytes
+                       for tree in wired_pages
+                       for leaf in jax.tree.leaves(tree,
+                                                   is_leaf=_is_wire_leaf))
+            self._arena = ShmArena(max(self.arena_bytes, 2 * int(need)))
+        arena = self._arena
+        blocks: List[Tuple[int, int]] = []
+
+        def stash(leaf: _WireLeaf):
+            data = np.ascontiguousarray(leaf.data)
+            off = arena.alloc(data.nbytes)
+            if off is None:
+                self.arena_spills += 1
+                return leaf              # arena full: ship inline
+            arena.write(off, data)
+            blocks.append((off, data.nbytes))
+            return _ShmLeaf(off, data.nbytes, tuple(data.shape),
+                            str(data.dtype), leaf.scale, leaf.dtype,
+                            leaf.codec)
+
+        shipped = [jax.tree.map(stash, tree, is_leaf=_is_wire_leaf)
+                   for tree in wired_pages]
+        out = dict(msg)
+        out["pages"] = shipped
+        out["arena"] = {"name": arena.name, "size": arena.size}
+        try:
+            nbytes = self.send_msg(K_HANDOFF, out)
+        except TransportError:
+            for off, sz in blocks:
+                arena.free(off, sz)
+            raise
+        if blocks:
+            self._allocs.setdefault(int(msg["uid"]), []).extend(blocks)
+        return nbytes
+
+    # ------------------------------------------------------------------
+    def poll_msg(self) -> Optional[Tuple[int, Any]]:
+        got = recv_frame(self.control, retries=self._retries,
+                         backoff=self._backoff, sleep=self._sleep)
+        if got is None:
+            return None
+        kind, payload = got
+        msg = pickle.loads(payload)
+        if kind == K_ACK:
+            self._free_uid(msg.get("uid"))
+        elif kind == K_HANDOFF and "arena" in msg:
+            if self._peer_arena is None:
+                self._peer_arena = ShmArena(name=msg["arena"]["name"])
+            msg = dict(msg)
+            msg.pop("arena")
+            msg["pages"] = [self._inflate(t) for t in msg["pages"]]
+        return kind, msg
+
+    def _inflate(self, tree):
+        def load(leaf):
+            if isinstance(leaf, _WireLeaf):      # inline (arena-full) leaf
+                return leaf
+            data = self._peer_arena.read(leaf.offset, leaf.nbytes,
+                                         leaf.data_dtype, leaf.shape)
+            return _WireLeaf(data, leaf.scale, leaf.dtype, leaf.codec)
+
+        return jax.tree.map(
+            load, tree, is_leaf=lambda x: isinstance(x, (_ShmLeaf,
+                                                         _WireLeaf)))
+
+    def _free_uid(self, uid) -> None:
+        for off, sz in self._allocs.pop(uid, []):
+            self._arena.free(off, sz)
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        self.control.close()
+        for arena in (self._peer_arena, self._arena):
+            if arena is not None:
+                arena.close()
+        self._peer_arena = self._arena = None
+
+    def describe(self) -> str:
+        size = self._arena.size if self._arena else 0
+        return f"shm[arena={size >> 20}MB spills={self.arena_spills}]"
+
+
+def shm_pair(*, arena_bytes: int = DEFAULT_ARENA_BYTES,
+             max_chunk: Optional[int] = None
+             ) -> Tuple[ShmChannel, ShmChannel]:
+    """A connected same-host pair: in-memory control pipe + shm arena."""
+    a, b = memory_pair(max_chunk)
+    return (ShmChannel(a, arena_bytes=arena_bytes),
+            ShmChannel(b, arena_bytes=arena_bytes))
+
+
+register_transport("shm", shm_pair)
+
+
+def probe_wire(*, transport: str = "memory", streams: int = 1,
+               payload_mb: float = 64.0, pages: int = 64,
+               codec: Optional[str] = None, repeats: int = 3,
+               bufsize: Optional[int] = None,
+               max_chunk: Optional[int] = None) -> Dict[str, float]:
+    """Measure raw handoff throughput of one wire configuration.
+
+    Ships a synthetic multi-page HANDOFF (``payload_mb`` of float32 KV
+    split over ``pages`` page trees, optionally codec-encoded) through a
+    freshly built channel pair and times send-to-full-reassembly; a drain
+    thread plays the decode side so blocking transports (TCP) make
+    progress.  Returns the best of ``repeats`` as ``mb_per_s`` /
+    ``handoff_ms`` plus the exact ``wire_bytes`` one handoff costs — the
+    numbers behind the BENCH_wire sweep and the ROADMAP wire table."""
+    if streams > 1:
+        tx, rx = striped_pair(streams, base=transport, bufsize=bufsize,
+                              max_chunk=max_chunk)
+    elif transport == "shm":
+        tx, rx = shm_pair(max_chunk=max_chunk)
+    elif transport == "tcp":
+        tx, rx = tcp_pair(bufsize=bufsize)
+    else:
+        tx, rx = memory_pair(max_chunk)
+
+    per_page = int(payload_mb * (1 << 20)) // (pages * 8)  # f32 k+v leaves
+    rng = np.random.default_rng(0)
+    raw_pages = [{"k": rng.standard_normal(per_page).astype(np.float32),
+                  "v": rng.standard_normal(per_page).astype(np.float32)}
+                 for _ in range(pages)]
+    wired = [_encode_tree(p, codec)[0] for p in raw_pages]
+
+    done = threading.Event()
+    state: Dict[str, Any] = {}
+
+    def drain(expect_uid: int) -> None:
+        while True:
+            got = _poll_msg(rx, retries=50, backoff=0.001)
+            if got is None:
+                time.sleep(0.0005)
+                continue
+            kind, msg = got
+            if kind == K_HANDOFF and msg["uid"] == expect_uid:
+                state["t_end"] = time.perf_counter()
+                state["n_pages"] = len(msg["pages"])
+                _send_msg(rx, K_ACK, {"uid": expect_uid})
+                done.set()
+                return
+
+    best = float("inf")
+    sent_bytes = 0
+    try:
+        for rep in range(repeats):
+            done.clear()
+            t = threading.Thread(target=drain, args=(rep,), daemon=True)
+            t.start()
+            msg = {"schema": SCHEMA_VERSION, "uid": rep, "pages": [],
+                   "slot_one": None}
+            t0 = time.perf_counter()
+            sent_bytes = _send_handoff_msg(tx, msg, wired)
+            if not done.wait(timeout=300.0):
+                raise TransportError("wire probe stalled")
+            best = min(best, state["t_end"] - t0)
+            assert state["n_pages"] == pages
+            while _poll_msg(tx) is None:     # the ACK (frees shm blocks)
+                time.sleep(0.0005)
+            t.join(timeout=10.0)
+    finally:
+        tx.close()
+        rx.close()
+    return {"transport": transport, "streams": float(streams),
+            "payload_mb": payload_mb,
+            "mb_per_s": payload_mb / best,
+            "handoff_ms": best * 1e3,
+            "wire_bytes": float(sent_bytes)}
+
+
+# ---------------------------------------------------------------------------
 class WireHandoff:
     """Decode-side view of one in-flight session, reconstructed off the
     wire.  Duck-types the :class:`~repro.serve.disagg.KVHandoff` surface
@@ -455,9 +1321,8 @@ class WireHandoff:
 
 def _control(channel: Channel, runtime: MemoryRuntime, kind: int,
              msg: Dict[str, Any]) -> None:
-    frame = pack_frame(kind, pickle.dumps(msg, pickle.HIGHEST_PROTOCOL))
-    channel.send(frame)
-    runtime.meter_transfer("kv_wire", len(frame), len(frame))
+    nbytes = _send_msg(channel, kind, msg)
+    runtime.meter_transfer("kv_wire", nbytes, nbytes)
 
 
 class WireSender:
@@ -521,10 +1386,13 @@ class WireSender:
                 slot_one: Any = None) -> None:
         """Serialize + send one handoff as a HANDOFF frame.
 
-        Metering happens only after a successful send — a
-        :class:`TransportError` leaves the report, the credit window and
-        the counters untouched (the engine requeues the session and
-        releases its quota charge; see ``Engine._publish_handoffs``)."""
+        Full metering happens only after a successful send — a
+        :class:`TransportError` leaves the credit window and the counters
+        untouched (the engine requeues the session and releases its quota
+        charge; see ``Engine._publish_handoffs``).  Bytes a striped
+        channel *did* put on the wire before a stripe died are still
+        metered as ``kv_wire`` (``err.wire_bytes``) so the summed-stripe
+        reconciliation stays byte-exact even across faults."""
         sess = handoff.session
         req = sess.request
         codec = self.codec_for(sess.tenant) if self.codec_for else None
@@ -549,14 +1417,18 @@ class WireSender:
             "tokens": list(sess.tokens),
             "length": int(handoff.length),
             "requeues": int(handoff.requeues),
-            "pages": wired_pages,
+            "pages": [],         # placeholder; the channel ships the pages
             "slot_one": wired_slot,
         }
-        frame = pack_frame(K_HANDOFF,
-                           pickle.dumps(msg, pickle.HIGHEST_PROTOCOL))
-        self.channel.send(frame)
+        try:
+            nbytes = _send_handoff_msg(self.channel, msg, wired_pages)
+        except TransportError as e:
+            partial = int(getattr(e, "wire_bytes", 0))
+            if partial:
+                self.runtime.meter_transfer("kv_wire", partial, partial)
+            raise
         self.runtime.meter_transfer("kv_publish", raw, wire, calls=calls)
-        self.runtime.meter_transfer("kv_wire", len(frame), len(frame))
+        self.runtime.meter_transfer("kv_wire", nbytes, nbytes)
         self._inflight[sess.uid] = sess
         self.published += 1
         self.shipped_pages += len(pages)
@@ -565,12 +1437,11 @@ class WireSender:
     def pump(self) -> None:
         """Drain control frames (ACK / RESULT / BYE) off the channel."""
         while True:
-            got = recv_frame(self.channel, retries=self._retries,
-                             backoff=self._backoff, sleep=self._sleep)
+            got = _poll_msg(self.channel, retries=self._retries,
+                            backoff=self._backoff, sleep=self._sleep)
             if got is None:
                 return
-            kind, payload = got
-            msg = pickle.loads(payload)
+            kind, msg = got
             if kind == K_ACK:
                 sess = self._inflight.pop(msg["uid"], None)
                 if sess is not None:
@@ -686,12 +1557,11 @@ class WireReceiver:
 
     def pump(self) -> None:
         while True:
-            got = recv_frame(self.channel, retries=self._retries,
-                             backoff=self._backoff, sleep=self._sleep)
+            got = _poll_msg(self.channel, retries=self._retries,
+                            backoff=self._backoff, sleep=self._sleep)
             if got is None:
                 return
-            kind, payload = got
-            msg = pickle.loads(payload)
+            kind, msg = got
             if kind == K_HANDOFF:
                 if msg["schema"] != SCHEMA_VERSION:
                     raise WireFormatError(
@@ -893,6 +1763,10 @@ class WirePrefill:
 
     def close(self) -> None:
         self.transfer.send_bye()
+        # drop the channel too: striped worker threads join, and an shm
+        # arena unlinks here instead of leaking to interpreter shutdown
+        # (BYE is already queued — peers drain buffered bytes past close)
+        self.transfer.channel.close()
 
     def traffic_report(self) -> Dict[str, Any]:
         return {"transfer": self.transfer.traffic_report(),
@@ -995,6 +1869,7 @@ def build_wire_pair(model, params, *,
                     quota: Union[QuotaManager, TenantQuota,
                                  Dict[str, TenantQuota], None] = None,
                     wire_codec: Union[bool, str, None] = None,
+                    streams: int = 1,
                     temperature: float = 0.0, seed: int = 0,
                     **cache_kwargs) -> WirePair:
     """Wire a prefill/decode pair over a real byte channel.
@@ -1004,10 +1879,23 @@ def build_wire_pair(model, params, *,
     ``TransferQueue`` replaced by a serialized channel.  ``wire_codec``:
     None — raw pages; ``True`` — each tenant's quota codec
     (``QuotaManager.codec_for``, lossy codecs trade wire bytes for
-    fidelity); a codec name — that codec for every tenant."""
+    fidelity); a codec name — that codec for every tenant.  ``streams``
+    > 1 stripes the handoff across that many sub-channels of the base
+    ``transport`` (incompatible with ``"shm"``, which is already
+    header-only on its single control socket)."""
     from repro.serve.engine import Engine   # circular-at-import avoidance
 
-    tx, rx = channels if channels is not None else build_transport(transport)
+    if streams < 1:
+        raise ValueError(f"streams must be >= 1: {streams}")
+    if channels is not None:
+        tx, rx = channels
+    elif streams > 1:
+        if transport == "shm":
+            raise ValueError("shm is single-control-socket; striping it "
+                             "is meaningless — use streams=1")
+        tx, rx = striped_pair(streams, base=transport)
+    else:
+        tx, rx = build_transport(transport)
 
     if quota is None or isinstance(quota, QuotaManager):
         shared_quota = quota
@@ -1103,6 +1991,9 @@ def run_decode_worker(model, params, channel: Channel, *,
             break
         if idle:
             sleep(idle_sleep)        # poll the channel for the next frame
-    receiver.send_bye()
+    try:
+        receiver.send_bye()          # courtesy only: the peer that said
+    except TransportError:           # BYE may have hung up already
+        pass
     channel.close()
     return eng

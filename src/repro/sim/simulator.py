@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro import hw
 from repro.core.dag import LayerDAG
@@ -361,7 +361,8 @@ def simulate_serving(trace, sys: SystemConfig, *,
                      placement: str = "least_loaded",
                      model: ModelProfile = ModelProfile(),
                      decode_slots: int = 16,
-                     prefix_len: int = 8) -> ServingReport:
+                     prefix_len: int = 8,
+                     wire_streams: Optional[int] = None) -> ServingReport:
     """Session-level analytic replay of a synthetic trace.
 
     Each engine is a disaggregated pair abstracted to three resources,
@@ -383,8 +384,12 @@ def simulate_serving(trace, sys: SystemConfig, *,
 
     dev = sys.device
     tier = sys.backing_tier
-    # every engine's handoff leg streams concurrently in the worst case
-    handoff_bw = min(tier.effective_bw(engines, sys.n_sockets), hw.DCN_BW)
+    # every engine's handoff leg streams concurrently in the worst case;
+    # the leg itself is wire_streams parallel connections, so the stripe
+    # count is a third cap alongside the tier and the DCN link
+    streams = sys.wire_streams if wire_streams is None else wire_streams
+    handoff_bw = min(tier.effective_bw(engines, sys.n_sockets), hw.DCN_BW,
+                     max(1, streams) * sys.wire_stream_bw)
 
     policy = build_placement(placement, **(
         {"prefix_len": prefix_len} if placement == "prefix_affinity" else {}))

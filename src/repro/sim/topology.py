@@ -49,6 +49,14 @@ class SystemConfig:
     hop_latency_s: float = 0.5e-6          # per-hop ring latency
     msg_size: float = 4096.0               # ring message granularity (Fig 9)
 
+    # serving wire: a KV handoff leg is carried by ``wire_streams``
+    # parallel connections of ``wire_stream_bw`` each (single-socket TCP
+    # tops out well below the link; striping aggregates narrow streams —
+    # the TensorDIMM argument applied to the serving fabric), capped by
+    # the backing tier and the DCN link in the simulator
+    wire_streams: int = 1
+    wire_stream_bw: float = 2.5e9
+
     @property
     def backing_tier(self) -> TierSpec:
         """The virtualization backing store as a tier contract."""

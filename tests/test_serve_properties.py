@@ -172,3 +172,40 @@ def test_wire_queue_traces_match_loopback_invariants(ops, max_depth):
     q, adopted = run_transfer_queue_trace(
         ops, max_depth=max_depth, make_queue=_make_wire_queue)
     assert q.depth() == 0
+
+
+# ---------------------------------------------------------------------------
+# striped wire reassembly (driver from tests/test_wire_scaleout.py):
+# random payload sizes x stripe counts x fragmented max_chunk reads x
+# interleaved control frames must reproduce the single-stream byte
+# stream — same message sequence, same pages — and the metering must
+# reconcile exactly (sum of per-send returns == summed stripe bytes).
+from repro.serve import transport as _tp                     # noqa: E402
+
+from test_wire_scaleout import (msg_seqs_equal,              # noqa: E402
+                                run_striped_reassembly_trace)
+
+wire_msgs = st.lists(
+    st.one_of(
+        st.tuples(st.just("ctrl"),
+                  st.sampled_from([_tp.K_ACK, _tp.K_CANCEL, _tp.K_RESULT]),
+                  st.integers(min_value=0, max_value=1000)),
+        st.tuples(st.just("handoff"),
+                  st.lists(st.binary(min_size=0, max_size=2048),
+                           max_size=5)),
+    ),
+    min_size=1, max_size=8)
+
+
+@given(msgs=wire_msgs,
+       streams=st.integers(min_value=1, max_value=5),
+       max_chunk=st.one_of(st.none(),
+                           st.integers(min_value=1, max_value=4096)))
+@settings(max_examples=25, deadline=None)
+def test_striped_reassembly_matches_single_stream(msgs, streams,
+                                                  max_chunk):
+    striped, single, s_meter, m_meter = run_striped_reassembly_trace(
+        msgs, streams, max_chunk)
+    assert msg_seqs_equal(striped, single)
+    assert s_meter[0] == s_meter[1]
+    assert m_meter[0] == m_meter[1]

@@ -1,0 +1,479 @@
+"""Scale-out wire (PR 10): striped multi-stream transport, the shm
+zero-copy same-host path, and router federation.
+
+Invariants pinned here (the ISSUE's list):
+* striped and shm wires stream bit-identical to the loopback — including
+  compressed pages and the cancel/requeue paths;
+* ``kv_wire`` metering reconciles byte-exactly when summed across
+  stripes, with and without a mid-handoff stripe death;
+* a stripe dying mid-handoff surfaces :class:`TransportError`, the
+  session requeues, and the PR 8 ``Session.emitted`` high-water guard
+  keeps the client stream free of repeats;
+* a poisoned channel (mid-frame retry exhaustion) fails fast on the next
+  call instead of parsing payload bytes as a header;
+* federation forwards overflow, keeps the shared quota ledger
+  consistent via remote-usage overlays, and drops zero sessions on
+  peer drain or peer death.
+
+The striped-reassembly trace driver at the top is shared with the
+hypothesis property suite (tests/test_serve_properties.py); the seeded
+trace here covers the machinery when hypothesis is not installed.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, MemoryPlan, RunConfig
+from repro.configs.base import MeshPlan, ShapeConfig
+from repro.models.model import build_model
+from repro.serve.disagg import build_disagg
+from repro.serve.engine import Request
+from repro.serve.quota import QuotaManager, TenantQuota
+from repro.serve.router import (FOREIGN_UID_BASE, FederatedRouter,
+                                build_router, federate)
+from repro.serve import transport as tp
+from repro.serve.transport import (ShmChannel, StripedChannel,
+                                   TransportError, build_wire_pair,
+                                   memory_pair, pack_frame, recv_frame,
+                                   shm_pair, striped_pair)
+
+from test_transport import FlakyChannel
+
+CFG = ARCHS["smollm-135m"].reduced()
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    run = RunConfig(model=CFG, shape=ShapeConfig("t", 64, 2, "decode"),
+                    mesh=MeshPlan((1,), ("data",)),
+                    memory=MemoryPlan(policy="none"))
+    m = build_model(run)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompts(n, base=4):
+    return [((np.arange(base + i, dtype=np.int32) * (i + 2) + 1)
+             % CFG.vocab_size) for i in range(n)]
+
+
+def _drive(pair, prompts, new_tokens=6):
+    ss = [pair.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
+          for i, p in enumerate(prompts)]
+    pair.run()
+    return [s.result() for s in ss]
+
+
+# ---------------------------------------------------------------------------
+# striped reassembly trace driver (shared with the hypothesis suite)
+def run_striped_reassembly_trace(msgs, streams, max_chunk,
+                                 deadline_s=30.0):
+    """Replay one control/handoff message trace over a striped pair AND
+    a single-stream pair carrying identical messages.
+
+    ``msgs``: a list of ``("ctrl", kind, val)`` control messages and
+    ``("handoff", [page_blob, ...])`` handoffs whose pages are arbitrary
+    byte blobs.  Returns ``(striped_seq, single_seq, striped_meter,
+    single_meter)`` where each ``seq`` is the delivered ``(kind, msg)``
+    list and each ``meter`` is ``(sum of per-send returns,
+    channel.bytes_sent)`` — the reconciliation the live wire relies on.
+    """
+    stx, srx = striped_pair(streams, base="memory", max_chunk=max_chunk)
+    mtx, mrx = memory_pair(max_chunk)
+    try:
+        s_total = m_total = 0
+        for m in msgs:
+            if m[0] == "handoff":
+                pages = [np.frombuffer(b, dtype=np.uint8).copy()
+                         for b in m[1]]
+                hdr = {"schema": tp.SCHEMA_VERSION, "uid": len(pages),
+                       "pages": [], "slot_one": None}
+                s_total += tp._send_handoff_msg(stx, dict(hdr), pages)
+                m_total += tp._send_handoff_msg(mtx, dict(hdr), pages)
+            else:
+                _, kind, val = m
+                s_total += tp._send_msg(stx, kind, {"uid": val})
+                m_total += tp._send_msg(mtx, kind, {"uid": val})
+
+        def drain(ch):
+            out, t0 = [], time.time()
+            while len(out) < len(msgs):
+                got = tp._poll_msg(ch, retries=4, backoff=0.0,
+                                   sleep=lambda s: None)
+                if got is None:
+                    assert time.time() - t0 < deadline_s, \
+                        "striped reassembly stalled"
+                    time.sleep(0.001)
+                    continue
+                out.append(got)
+            return out
+
+        striped_seq = drain(srx)
+        single_seq = drain(mrx)
+        return (striped_seq, single_seq,
+                (s_total, stx.bytes_sent), (m_total, mtx.bytes_sent))
+    finally:
+        stx.close()
+        srx.close()
+
+
+def msg_seqs_equal(a, b):
+    """Delivered sequences match: same kinds, same payloads, with page
+    arrays compared element-exact."""
+    if len(a) != len(b):
+        return False
+    for (ka, ma), (kb, mb) in zip(a, b):
+        if ka != kb or set(ma) != set(mb):
+            return False
+        for key in ma:
+            va, vb = ma[key], mb[key]
+            if key == "pages":
+                if len(va) != len(vb) or not all(
+                        np.array_equal(x, y) for x, y in zip(va, vb)):
+                    return False
+            elif va != vb:
+                return False
+    return True
+
+
+@pytest.mark.parametrize("streams,max_chunk",
+                         [(1, None), (2, None), (3, 7), (4, 127)])
+def test_striped_reassembly_seeded(streams, max_chunk):
+    """Seeded twin of the hypothesis property: random page sizes with
+    interleaved control frames reproduce the single-stream sequence and
+    metering exactly, through fragmented reads."""
+    rng = np.random.default_rng(streams * 1000 + (max_chunk or 0))
+    ctrl_kinds = (tp.K_ACK, tp.K_CANCEL, tp.K_RESULT)
+    msgs = []
+    for i in range(8):
+        if i % 3 == 2:
+            msgs.append(("ctrl", ctrl_kinds[i % len(ctrl_kinds)], i))
+        else:
+            blobs = [rng.bytes(int(n)) for n in rng.integers(0, 2048,
+                                                             size=i % 4)]
+            msgs.append(("handoff", blobs))
+    msgs.append(("ctrl", tp.K_RESULT, 99))
+    striped, single, s_meter, m_meter = run_striped_reassembly_trace(
+        msgs, streams, max_chunk)
+    assert msg_seqs_equal(striped, single)
+    assert s_meter[0] == s_meter[1], \
+        "summed send returns != summed stripe bytes_sent"
+    assert m_meter[0] == m_meter[1]
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: striped and shm wires == loopback
+@pytest.fixture(scope="module")
+def loopback_want(model_and_params):
+    m, params = model_and_params
+    prompts = _prompts(5)
+    loop = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host")
+    return prompts, _drive(loop, prompts)
+
+
+def test_striped_wire_identical_to_loopback(model_and_params,
+                                            loopback_want):
+    m, params = model_and_params
+    prompts, want = loopback_want
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", streams=4)
+    assert isinstance(wire.sender.channel, StripedChannel)
+    assert _drive(wire, prompts) == want
+    out = wire.traffic_report()["wire_out"]["transfer"]
+    inn = wire.traffic_report()["wire_in"]["transfer"]
+    assert out["published"] == inn["published"] == 5
+    assert out["depth"] == inn["depth"] == 0
+
+
+def test_striped_wire_identical_through_fragmented_stripes(
+        model_and_params, loopback_want):
+    """127-byte reads on every stripe: per-stripe reassembly plus
+    cross-stripe reordering never corrupts a page."""
+    m, params = model_and_params
+    prompts, want = loopback_want
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host",
+                           channels=striped_pair(3, max_chunk=127))
+    assert _drive(wire, prompts) == want
+
+
+def test_striped_kv_wire_reconciles_across_stripes(model_and_params):
+    """Acceptance: summed ``kv_wire`` equals every byte that crossed any
+    stripe, and the payload really fans out beyond stripe 0."""
+    m, params = model_and_params
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", streams=4)
+    _drive(wire, _prompts(4, base=18))
+    rep = wire.traffic_report()
+    out_wire = rep["wire_out"]["kv_wire"]
+    chan = wire.sender.channel
+    assert out_wire["wire_bytes"] == chan.bytes_sent == \
+        sum(s.bytes_sent for s in chan.stripes)
+    assert sum(1 for s in chan.stripes if s.bytes_sent > 0) >= 2, \
+        "pages never left stripe 0 — striping is not engaged"
+    pub = rep["wire_out"]["kv_publish"]
+    adopt = rep["wire_in"]["kv_adopt"]
+    assert pub["wire_bytes"] == adopt["wire_bytes"] > 0
+    assert pub["raw_bytes"] == adopt["raw_bytes"]
+
+
+def test_striped_codec_matches_single_stream_codec(model_and_params):
+    """Compressed pages across stripes: identical streams to the same
+    codec on a single-stream wire, at the same (reduced) publish bytes."""
+    m, params = model_and_params
+    prompts = _prompts(3, base=18)
+    single = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                             spill="host", wire_codec="int8")
+    want = _drive(single, prompts)
+    striped = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                              spill="host", wire_codec="int8", streams=3)
+    assert _drive(striped, prompts) == want
+    s_pub = single.traffic_report()["wire_out"]["kv_publish"]
+    t_pub = striped.traffic_report()["wire_out"]["kv_publish"]
+    assert t_pub["wire_bytes"] == s_pub["wire_bytes"] < s_pub["raw_bytes"]
+
+
+def test_cancel_in_transit_over_striped_wire(model_and_params):
+    m, params = model_and_params
+    quota = QuotaManager(default_quota=TenantQuota(max_pages=64))
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", quota=quota, streams=3)
+    ss = [wire.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+          for i, p in enumerate(_prompts(3))]
+    wire.prefill.step()
+    ss[1].cancel()
+    wire.run()
+    assert ss[1].finish_reason == "cancelled"
+    assert ss[0].done and ss[2].done
+    assert quota.charged_uids() == ()
+
+
+# ---------------------------------------------------------------------------
+# shm: zero-copy same-host path
+def test_shm_wire_identical_to_loopback(model_and_params, loopback_want):
+    m, params = model_and_params
+    prompts, want = loopback_want
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", transport="shm")
+    assert isinstance(wire.sender.channel, ShmChannel)
+    assert _drive(wire, prompts) == want
+
+
+def test_shm_wire_bytes_are_header_only(model_and_params):
+    """The whole point of the arena: ``kv_wire`` meters only the header
+    frames that crossed the socket, while publish/adopt still reconcile
+    the full tensor payload — and every arena block is freed by ACK."""
+    m, params = model_and_params
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", transport="shm")
+    _drive(wire, _prompts(4, base=18))
+    rep = wire.traffic_report()
+    out_wire = rep["wire_out"]["kv_wire"]
+    pub = rep["wire_out"]["kv_publish"]
+    adopt = rep["wire_in"]["kv_adopt"]
+    chan = wire.sender.channel
+    assert out_wire["wire_bytes"] == chan.bytes_sent
+    assert out_wire["wire_bytes"] < pub["wire_bytes"], \
+        "shm headers should be far smaller than the tensor payload"
+    assert pub["wire_bytes"] == adopt["wire_bytes"] > 0
+    assert pub["raw_bytes"] == adopt["raw_bytes"]
+    assert not chan._allocs, "arena blocks leaked past their ACKs"
+    arena = chan._arena
+    assert arena is not None and arena.free_bytes() == arena.size
+
+
+def test_cancel_in_transit_over_shm(model_and_params):
+    m, params = model_and_params
+    quota = QuotaManager(default_quota=TenantQuota(max_pages=64))
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", quota=quota, transport="shm")
+    ss = [wire.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+          for i, p in enumerate(_prompts(3))]
+    wire.prefill.step()
+    ss[1].cancel()
+    wire.run()
+    assert ss[1].finish_reason == "cancelled"
+    assert ss[0].done and ss[2].done
+    assert quota.charged_uids() == ()
+    assert not wire.sender.channel._allocs
+
+
+# ---------------------------------------------------------------------------
+# faults: stripe death mid-handoff, poisoning
+def test_stripe_death_mid_handoff_requeues_no_double_emit(
+        model_and_params):
+    """A stripe dying mid-handoff surfaces TransportError, the engine
+    requeues via ``Session.rewind``, and the ``emitted`` high-water mark
+    keeps the replay from notifying any position twice."""
+    m, params = model_and_params
+    prompts = _prompts(4, base=18)      # 2 pages each: stripe 1 carries
+    loop = build_disagg(m, params, batch=2, max_len=64, page_size=16,
+                        transfer="host", spill="host")
+    want = _drive(loop, prompts)
+
+    pairs = [memory_pair() for _ in range(3)]
+    tx_stripes = [p[0] for p in pairs]
+    flaky = FlakyChannel(tx_stripes[1], fail_on=1)
+    tx_stripes[1] = flaky
+    stx = StripedChannel(tx_stripes)
+    srx = StripedChannel([p[1] for p in pairs])
+    wire = build_wire_pair(m, params, batch=2, max_len=64, page_size=16,
+                           spill="host", channels=(stx, srx))
+    notified = {}
+    ss = []
+    for i, p in enumerate(prompts):
+        s = wire.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+        s.on_token = lambda sess, tok: notified.setdefault(
+            sess.uid, []).append(tok)
+        ss.append(s)
+    wire.run()
+    assert flaky.sends >= 2, "the injected stripe death never fired"
+    assert [s.result() for s in ss] == want
+    assert all(s.finish_reason == "length" for s in ss)
+    # the requeued session re-ran its prefill (regenerating position 1),
+    # but the emitted high-water mark notified the client exactly once
+    for s in ss:
+        assert notified[s.uid] == list(s.tokens[:1])
+    # metering still reconciles: the partial (failed) handoff's bytes
+    # were metered off err.wire_bytes
+    out_wire = wire.traffic_report()["wire_out"]["kv_wire"]
+    assert out_wire["wire_bytes"] == stx.bytes_sent
+
+
+def test_poisoned_channel_fails_fast():
+    """Satellite bugfix: after a mid-frame retry exhaustion the channel
+    is poisoned — the next call refuses to parse the (desynchronized)
+    byte stream, even if a healthy frame arrives later."""
+    a, b = memory_pair()
+    frame = pack_frame(tp.K_ACK, b"\x80\x04N.")
+    a.send(frame[: len(frame) - 3])         # starve mid-frame
+    with pytest.raises(TransportError, match="partial read"):
+        recv_frame(b, retries=2, backoff=0.0, sleep=lambda s: None)
+    a.send(frame[len(frame) - 3:])          # stream is whole again, but
+    with pytest.raises(TransportError, match="poisoned"):
+        recv_frame(b, retries=2, backoff=0.0, sleep=lambda s: None)
+
+
+def test_striped_rx_corruption_poisons_whole_channel():
+    """Garbage on ONE stripe fails the striped channel fast on every
+    later call instead of delivering a torn message stream."""
+    stx, srx = striped_pair(3)
+    try:
+        stx.stripes[1].send(b"XXgarbage-not-a-frame" * 4)
+        with pytest.raises(TransportError, match="stripe 1"):
+            deadline = time.time() + 10.0
+            while time.time() < deadline:   # rx worker notices async
+                srx.poll_msg()
+                time.sleep(0.002)
+            pytest.fail("stripe corruption never surfaced")
+        with pytest.raises(TransportError, match="poisoned"):
+            srx.poll_msg()
+    finally:
+        stx.close()
+        srx.close()
+
+
+# ---------------------------------------------------------------------------
+# federation
+def _run_feds(feds, max_steps=20_000):
+    for _ in range(max_steps):
+        if not any(f.has_work() for f in feds):
+            return
+        for f in feds:
+            f.step()
+    raise AssertionError("federation never drained")
+
+
+def _fed_pair(m, params, **kw):
+    r0 = build_router(m, params, engines=1, batch=2, max_len=64,
+                      page_size=16, transfer="host", spill="host", **kw)
+    r1 = build_router(m, params, engines=1, batch=2, max_len=64,
+                      page_size=16, transfer="host", spill="host", **kw)
+    return federate([r0, r1])
+
+
+def test_federation_forwards_overflow(model_and_params):
+    """Cluster 0's backlog spills to cluster 1 and every stream comes
+    home: forwarded == adopted, zero dropped sessions."""
+    m, params = model_and_params
+    fed0, fed1 = _fed_pair(m, params)
+    ss = [fed0.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+          for i, p in enumerate(_prompts(8))]
+    _run_feds([fed0, fed1])
+    assert all(s.done for s in ss)
+    assert all(len(s.tokens) == 4 and s.finish_reason == "length"
+               for s in ss)
+    assert fed0.forwarded > 0
+    assert fed1.adopted == fed0.forwarded
+    # foreign uids never collide with origin-minted ones
+    assert all(uid >= FOREIGN_UID_BASE for uid in fed1._foreign)
+    # the Request.out_tokens alias survived the round trip
+    assert all(s.request.out_tokens is s.tokens for s in ss)
+
+
+def test_federation_quota_overlay_counts_remote_holdings():
+    """One tenant's budget binds over local + remote holdings, and a
+    dropped peer releases its overlay."""
+    q = QuotaManager({"t": TenantQuota(max_sessions=4, max_pages=100)})
+    assert q.can_admit("t", pages=10)
+    q.set_remote_usage("peer-a", {"t": {"sessions": 3, "pages": 80}})
+    assert q.remote_peers() == ("peer-a",)
+    assert q.can_admit("t", pages=10)          # 0+3+1 sessions, 90 pages
+    assert not q.can_admit("t", pages=30)      # 110 pages > 100
+    q.set_remote_usage("peer-b", {"t": {"sessions": 1, "pages": 0}})
+    assert not q.can_admit("t", pages=1)       # 0+4+1 sessions > 4
+    q.set_remote_usage("peer-a", None)
+    assert q.can_admit("t", pages=30)
+
+
+def test_federation_drain_rejects_and_requeues(model_and_params):
+    """A forward racing a peer's drain is rejected (FWD_REJECT) and the
+    origin serves it locally — zero dropped sessions."""
+    m, params = model_and_params
+    fed0, fed1 = _fed_pair(m, params)
+    ss = [fed0.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+          for i, p in enumerate(_prompts(8))]
+    # fed1 advertises headroom; fed0 forwards into it while fed1 sits
+    # idle — then the drain begins with those forwards still in flight
+    fed1.step()
+    for _ in range(200):
+        fed0.step()
+        if fed0.forwarded > 0:
+            break
+    assert fed0.forwarded > 0
+    fed1.drain()
+    _run_feds([fed0, fed1])
+    assert fed1.rejected == fed0.forwarded
+    assert fed0.router.requeues >= fed0.forwarded
+    assert all(s.done and len(s.tokens) == 4 for s in ss)
+    assert fed1.adopted == 0
+
+
+def test_federation_dead_peer_requeues_outstanding(model_and_params):
+    """A peer that vanishes mid-flight: its forwarded sessions rewind
+    and finish locally; the remote-usage overlay is dropped."""
+    m, params = model_and_params
+    quota = QuotaManager(default_quota=TenantQuota(max_pages=1000))
+    r0 = build_router(m, params, engines=1, batch=2, max_len=64,
+                      page_size=16, transfer="host", spill="host",
+                      quota=quota)
+    r1 = build_router(m, params, engines=1, batch=2, max_len=64,
+                      page_size=16, transfer="host", spill="host")
+    fed0, fed1 = federate([r0, r1])
+    ss = [fed0.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+          for i, p in enumerate(_prompts(8))]
+    for _ in range(200):
+        fed0.step()
+        fed1.step()
+        if fed0.forwarded > 0:
+            break
+    assert fed0.forwarded > 0
+    fed0.peers["cluster1"].channel.close()     # peer vanishes
+    _run_feds([fed0])
+    assert fed0.peers["cluster1"].closed
+    assert all(s.done and len(s.tokens) == 4 for s in ss)
+    assert r0.requeues >= fed0.forwarded
+    assert quota.remote_peers() == ()
+    assert quota.charged_uids() == ()
